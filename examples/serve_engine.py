@@ -1,0 +1,52 @@
+"""Serving example: continuous batching with the event-driven scheduler.
+
+Submits a burst of mixed-length requests against a small dense model and
+shows the engine admitting new requests into slots the moment others
+finish (no drain barrier), with finished sequences' KV parked in the
+host far tier through the AMU.
+
+Run:  PYTHONPATH=src python examples/serve_engine.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.serve.engine import Engine
+
+
+def main():
+    cfg = get_smoke("mistral-nemo-12b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=4, max_len=96,
+                 prefill_buckets=(16, 32, 64), offload_finished=True)
+
+    rng = np.random.default_rng(7)
+    n_requests = 10
+    for i in range(n_requests):
+        plen = int(rng.integers(4, 24))
+        new = int(rng.integers(4, 12))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen), max_new_tokens=new)
+    out = eng.run()
+
+    total = sum(len(v) for v in out.values())
+    occ = total / max(1, eng.stats["steps"] * eng.max_batch)
+    print(f"[serve] {len(out)} requests -> {total} tokens in "
+          f"{eng.stats['steps']} decode steps "
+          f"(occupancy {occ:.2f}; 4 slots, mixed depths)")
+    print(f"[serve] prefills {eng.stats['prefills']} "
+          f"(bucketed: {sorted(set(k[0] for k in eng._prefills))})")
+    print(f"[serve] far-tier AMU ops: {dict(eng.kv_tier.tier.amu.stats)}")
+    for rid in sorted(out)[:3]:
+        print(f"  request {rid}: {out[rid]}")
+    assert len(out) == n_requests
+
+
+if __name__ == "__main__":
+    main()

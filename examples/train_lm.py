@@ -1,0 +1,61 @@
+"""End-to-end training example: ~100M-param LM, few hundred steps.
+
+Uses the full stack: AMU-prefetched data pipeline, pjit train step
+(remat + grad accumulation), AdamW, async atomic checkpoints, straggler
+detection — on a ~115M-parameter phi4-family model that fits CPU.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+
+The synthetic corpus is a learnable affine-recurrence task, so the loss
+drops from ~ln(V) toward ~0 as the model memorises the transition pool —
+a real end-to-end signal, not noise.
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import dataclasses
+
+from repro.configs import get_smoke
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M model: scale the phi4 smoke config up
+    base = get_smoke("phi4-mini-3.8b")
+    cfg100m = dataclasses.replace(
+        base, name="phi4-100m", num_layers=12, d_model=640, num_heads=8,
+        num_kv_heads=4, head_dim=80, d_ff=2560, vocab_size=32000)
+    print(f"[example] {cfg100m.name}: ~{cfg100m.param_count()/1e6:.0f}M params")
+
+    # register it temporarily so the CLI path stays the single entry point
+    import repro.configs as C
+    mod = type(sys)("_tmp_cfg")
+    mod.CONFIG = cfg100m
+    mod.SMOKE = cfg100m
+    C._ARCH_MODULES["phi4-100m"] = "_tmp_cfg"
+    sys.modules["repro.configs._tmp_cfg"] = mod
+
+    losses = train_mod.main([
+        "--arch", "phi4-100m", "--smoke",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--lr", "1e-3",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--log-every", "20",
+    ])
+    assert losses[-1] < losses[0], "loss should decrease"
+    print(f"[example] final loss {losses[-1]:.3f} "
+          f"(from {losses[0]:.3f}) — checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

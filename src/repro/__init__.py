@@ -1,0 +1,1 @@
+"""repro: AMU (async memory unit) training/serving framework in JAX."""

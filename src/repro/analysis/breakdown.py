@@ -1,0 +1,77 @@
+"""Per-instruction cost breakdown — the dry-run 'profiler'.
+
+With no hardware to trace, the optimized HLO *is* the profile: this walks
+the program with trip-count multipliers (like
+:mod:`repro.analysis.hlo_program`) but keeps per-instruction rows, so the
+perf loop can ask "which ops move the most bytes / flops / collective
+traffic?" and "which buffers are f32 that should be bf16?".
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.analysis import hlo_program as H
+
+__all__ = ["top_contributors", "Contribution"]
+
+
+@dataclass
+class Contribution:
+    bytes: float
+    flops: float
+    collective_bytes: float
+    trips: int
+    opcode: str
+    computation: str
+    line: str
+
+
+def top_contributors(hlo_text: str, *, n: int = 20,
+                     sort_by: str = "bytes") -> List[Contribution]:
+    prog = H.HloProgram(hlo_text)
+    rows: List[Contribution] = []
+
+    def walk(comp_name: str, mult: int):
+        comp = prog.computations.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instructions:
+            if ins.opcode == "while":
+                m = H._WHILE_ATTRS.search(ins.line)
+                if m:
+                    tm = H._TRIP_COUNT.search(ins.line)
+                    trips = (int(tm.group(1)) if tm else
+                             prog.trip_count(m.group(1) or m.group(4)))
+                    walk(m.group(3) or m.group(2), mult * trips)
+                continue
+            if ins.opcode == "call":
+                mm = H._CALLS.search(ins.line)
+                if mm:
+                    walk(mm.group(1), mult)
+                continue
+            c = prog._instr_cost(comp, ins, False)
+            if c.bytes or c.flops or c.collective_bytes:
+                rows.append(Contribution(
+                    bytes=c.bytes * mult, flops=c.flops * mult,
+                    collective_bytes=c.collective_bytes * mult,
+                    trips=mult, opcode=ins.opcode, computation=comp_name,
+                    line=ins.line.strip()[:160]))
+
+    walk(prog.entry, 1)
+    rows.sort(key=lambda r: getattr(r, sort_by), reverse=True)
+    return rows[:n]
+
+
+def print_breakdown(hlo_text: str, *, n: int = 15,
+                    sort_by: str = "bytes") -> None:
+    rows = top_contributors(hlo_text, n=n, sort_by=sort_by)
+    total = sum(getattr(r, sort_by) for r in
+                top_contributors(hlo_text, n=10 ** 6, sort_by=sort_by))
+    print(f"top {n} by {sort_by} (total {total:.3e}):")
+    for r in rows:
+        val = getattr(r, sort_by)
+        print(f"  {val:9.3e} ({100 * val / max(total, 1e-30):4.1f}%) "
+              f"x{r.trips:<5d} {r.opcode:22s} {r.line[:95]}")

@@ -1,0 +1,98 @@
+"""HLO text analysis: collective bytes + op census.
+
+``compiled.cost_analysis()`` has FLOPs and memory traffic but NOT
+collective traffic, so we parse the optimized HLO: every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op contributes its *result* buffer size (operand
+size for reduce-scatter, which shrinks its output).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+__all__ = ["collective_stats", "CollectiveStats", "parse_shape_bytes",
+           "duplicate_op_census"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.  bf16[256,1024]{1,0}   or  f32[]   or tuple components
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of every array shape appearing in ``shape_str``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def row(self) -> Dict[str, float]:
+        out = {f"{k}_bytes": float(v) for k, v in self.bytes_by_kind.items()}
+        out["collective_bytes"] = float(self.total_bytes)
+        out["collective_count"] = float(self.total_count)
+        return out
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result-buffer sizes of collective ops in optimized HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-shape = op-name(...) — match "<shape> <opname>(" pattern
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)",
+                     s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        if op.endswith("-start") and not op.startswith("all-reduce"):
+            pass  # count the -start (has the shape); -done repeats it
+        if op.endswith("-done"):
+            continue
+        nbytes = parse_shape_bytes(shape_str)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def duplicate_op_census(hlo_text: str, top: int = 10) -> List[Tuple[str, int]]:
+    """Most-repeated fusion/op names — a cheap remat/redundancy smell test."""
+    names = Counter()
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*%?([\w.\-]+?)(?:\.\d+)?\s*=", line)
+        if m:
+            names[m.group(1)] += 1
+    return names.most_common(top)

@@ -1,0 +1,387 @@
+"""Trip-count-aware HLO program analyzer.
+
+WHY THIS EXISTS: ``compiled.cost_analysis()`` counts a ``while`` body
+ONCE, but every layer stack here is a ``lax.scan`` -> the FLOPs/bytes/
+collectives of an L-layer model would be undercounted by ~L x.  This
+module parses the optimized HLO text into computations, recovers each
+while loop's trip count from its condition (``compare(iter,
+constant(L))``), and rolls up costs recursively:
+
+  cost(entry) = sum over instructions, with
+    while     -> trip_count * cost(body)
+    call      -> cost(callee)
+    fusion    -> FLOPs recurse into the fused computation; BYTES count
+                 only the fusion's operands+result (fusion internals do
+                 not touch HBM — exactly XLA's own fusion semantics)
+    collective -> result bytes (reduce-scatter/all-to-all: max of
+                 operand/result), times the enclosing trip counts
+
+FLOPs: ``dot`` exact (2 * prod(result) * prod(contracting dims));
+elementwise/reduce approximate (1 flop/element).  Validated against the
+6*N*D analytical model in tests (within ~2x, vs ~20x off for the naive
+cost_analysis on deep scans).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloProgram", "analyze_hlo", "ProgramCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+# result-materialising opcodes for the bytes model
+_NONMATERIAL = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota", "opt-barrier",
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "select", "compare", "and",
+    "or", "xor", "not", "clamp", "remainder", "atan2", "logistic", "cosine",
+    "sine", "erf",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Instruction:
+    name: str
+    result_type: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    # name -> result_type for operand lookup
+    symbols: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class ProgramCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = field(default_factory=dict)
+    dot_flops: float = 0.0
+
+    def __iadd__(self, other: "ProgramCost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collective_bytes += other.collective_bytes
+        self.dot_flops += other.dot_flops
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = self.collective_by_kind.get(k, 0) + v
+        return self
+
+    def scaled(self, f: float) -> "ProgramCost":
+        return ProgramCost(
+            flops=self.flops * f, bytes=self.bytes * f,
+            collective_bytes=self.collective_bytes * f,
+            collective_by_kind={k: v * f
+                                for k, v in self.collective_by_kind.items()},
+            dot_flops=self.dot_flops * f)
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-$]+)\s*\(")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_WHILE_ATTRS = re.compile(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)|"
+                          r"body=%?([\w.\-]+).*?condition=%?([\w.\-]+)")
+_TRIP_COUNT = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_FUSION_CALL = re.compile(r"calls=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+
+class HloProgram:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, ProgramCost] = {}
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and line.endswith("{"):
+                m = _COMP_HEADER.match(line.strip())
+                if m:
+                    cur = Computation(name=m.group(1))
+                    self.computations[cur.name] = cur
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = cur.name
+                    continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            name, rtype, opcode = m.group(1), m.group(2), m.group(3)
+            cur.instructions.append(Instruction(name, rtype, opcode, line))
+            cur.symbols[name] = rtype
+
+    # -- trip counts ----------------------------------------------------------
+    @lru_cache(maxsize=None)
+    def trip_count(self, cond_name: str) -> int:
+        """Heuristic: the loop bound is the max integer constant in the
+        condition computation (jax scan: compare(i, constant(L)))."""
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        best = 1
+        for ins in comp.instructions:
+            for c in _CONST_INT.findall(ins.line):
+                best = max(best, int(c))
+        return best
+
+    # -- cost rollup -----------------------------------------------------------
+    def cost(self, comp_name: Optional[str] = None, *,
+             _for_fusion: bool = False) -> ProgramCost:
+        comp_name = comp_name or self.entry
+        key = f"{comp_name}|{_for_fusion}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.computations.get(comp_name)
+        total = ProgramCost()
+        if comp is None:
+            return total
+        for ins in comp.instructions:
+            total += self._instr_cost(comp, ins, _for_fusion)
+        self._memo[key] = total
+        return total
+
+    def _operand_bytes(self, comp: Computation, ins: Instruction) -> int:
+        # operands named on the line, excluding the instruction itself
+        total = 0
+        seen_self = False
+        for name in _OPERAND.findall(ins.line):
+            if not seen_self and name == ins.name:
+                seen_self = True
+                continue
+            t = comp.symbols.get(name)
+            if t:
+                total += _shape_bytes(t)
+        return total
+
+    def _instr_cost(self, comp: Computation, ins: Instruction,
+                    in_fusion: bool) -> ProgramCost:
+        op = ins.opcode
+        c = ProgramCost()
+
+        if op == "while":
+            m = _WHILE_ATTRS.search(ins.line)
+            if m:
+                cond = m.group(1) or m.group(4)
+                body = m.group(3) or m.group(2)
+                # prefer XLA's own annotation, fall back to the condition
+                tm = _TRIP_COUNT.search(ins.line)
+                trips = int(tm.group(1)) if tm else self.trip_count(cond)
+                c += self.cost(body).scaled(trips)
+            return c
+
+        if op in ("call", "async-start"):
+            m = _CALLS.search(ins.line)
+            if m:
+                c += self.cost(m.group(1))
+            return c
+
+        if op == "conditional":
+            # count each branch once (upper-bounds a single execution of
+            # the hot branch; branches are usually symmetric here)
+            for callee in re.findall(r"branch_computations={([^}]*)}",
+                                     ins.line):
+                for b in re.findall(r"%?([\w.\-]+)", callee):
+                    c += self.cost(b)
+            return c
+
+        kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+        if kind is not None:
+            if op.endswith("-done"):
+                return c
+            rbytes = _shape_bytes(ins.result_type)
+            obytes = self._operand_bytes(comp, ins)
+            vol = max(rbytes, obytes)     # RS/A2A shrink result; AG grows
+            c.collective_bytes += vol
+            c.collective_by_kind[kind] = \
+                c.collective_by_kind.get(kind, 0) + vol
+            c.bytes += rbytes + obytes
+            return c
+
+        if op == "fusion":
+            m = _FUSION_CALL.search(ins.line)
+            root_op = None
+            if m:
+                inner = self.cost(m.group(1), _for_fusion=True)
+                c.flops += inner.flops
+                c.dot_flops += inner.dot_flops
+                root_op = self._fusion_kind(m.group(1))
+            c.bytes += self._materialized_bytes(comp, ins, root_op)
+            return c
+
+        if op == "dot":
+            flops = self._dot_flops(comp, ins)
+            c.flops += flops
+            c.dot_flops += flops
+            if not in_fusion:
+                c.bytes += _shape_bytes(ins.result_type) + \
+                    self._operand_bytes(comp, ins)
+            return c
+
+        if op == "convolution":
+            # rare here; approximate as dot on result x window
+            c.flops += 2 * _shape_elems(ins.result_type)
+            if not in_fusion:
+                c.bytes += _shape_bytes(ins.result_type) + \
+                    self._operand_bytes(comp, ins)
+            return c
+
+        if op in _ELEMENTWISE or op in ("reduce", "reduce-window"):
+            n = _shape_elems(ins.result_type)
+            if op in ("reduce", "reduce-window"):
+                n = max(n, self._operand_bytes(comp, ins) // 4)
+            c.flops += n
+        if not in_fusion and op not in _NONMATERIAL:
+            c.bytes += self._materialized_bytes(comp, ins, op)
+        return c
+
+    @lru_cache(maxsize=None)
+    def _fusion_kind(self, comp_name: str) -> Optional[str]:
+        """Classify a fused computation for the bytes model.
+
+        A fusion *containing* a dynamic-update-slice aliases its big
+        operand (XLA writes only the slice, whatever dtype juggling wraps
+        it); one containing only dynamic-slice/gather reads only slices
+        of its big operands.
+        """
+        comp = self.computations.get(comp_name)
+        if comp is None:
+            return None
+        ops = {i.opcode for i in comp.instructions}
+        if "dynamic-update-slice" in ops or "scatter" in ops:
+            return "dynamic-update-slice"
+        if "dynamic-slice" in ops or "gather" in ops:
+            return "dynamic-slice"
+        return None
+
+    @staticmethod
+    def _dims(type_str: str) -> Optional[str]:
+        m = _SHAPE_RE.search(type_str)
+        return m.group(2) if m else None
+
+    def _materialized_bytes(self, comp: Computation, ins: Instruction,
+                            effective_op: Optional[str]) -> int:
+        """HBM-traffic model with in-place-update aliasing.
+
+        dynamic-update-slice (or a fusion containing one) aliases its big
+        input buffer: XLA writes only the slice, so charging the full
+        buffer per scan iteration would be O(L^2)-wrong.  Rules:
+          * DUS-like: operands whose *dimensions* match the result are
+            aliased (charged 0); 2 x the remaining slice-sized operands;
+          * DS-like: big operands (>= 4 x result) are internally sliced —
+            charge one result-sized read instead of the full buffer.
+        """
+        rbytes = _shape_bytes(ins.result_type)
+        if effective_op in ("dynamic-slice", "gather"):
+            total = 2 * rbytes
+            seen_self = False
+            for name in _OPERAND.findall(ins.line):
+                if not seen_self and name == ins.name:
+                    seen_self = True
+                    continue
+                t = comp.symbols.get(name)
+                if not t:
+                    continue
+                ob = _shape_bytes(t)
+                total += min(ob, rbytes)       # sliced reads of big bufs
+            return total
+        if effective_op in ("dynamic-update-slice", "scatter"):
+            total = 0
+            rdims = self._dims(ins.result_type)
+            seen_self = False
+            for name in _OPERAND.findall(ins.line):
+                if not seen_self and name == ins.name:
+                    seen_self = True
+                    continue
+                t = comp.symbols.get(name)
+                if not t:
+                    continue
+                if rdims is not None and self._dims(t) == rdims:
+                    continue            # aliased in-place buffer
+                total += _shape_bytes(t)
+            return 2 * total
+        return rbytes + self._operand_bytes(comp, ins)
+
+    def _dot_flops(self, comp: Computation, ins: Instruction) -> float:
+        result_elems = _shape_elems(ins.result_type)
+        m = re.search(r"lhs_contracting_dims={([0-9,]*)}", ins.line)
+        ops = _OPERAND.findall(ins.line)
+        # first operand after self-reference is lhs
+        names = [n for n in ops if n != ins.name]
+        if m and names:
+            lhs_type = comp.symbols.get(names[0], "")
+            sm = _SHAPE_RE.search(lhs_type)
+            if sm and sm.group(2):
+                dims = [int(d) for d in sm.group(2).split(",")]
+                contract = 1
+                for di in m.group(1).split(","):
+                    if di != "" and int(di) < len(dims):
+                        contract *= dims[int(di)]
+                return 2.0 * result_elems * contract
+        return 2.0 * result_elems
+
+
+def analyze_hlo(text: str) -> ProgramCost:
+    return HloProgram(text).cost()

@@ -1,0 +1,140 @@
+"""EXPERIMENTS.md table generation from dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.analysis.report \
+      --single dryrun_single.jsonl --multi dryrun_multi.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+
+def load(path) -> Dict[Tuple[str, str, str], dict]:
+    rows = {}
+    p = Path(path)
+    if not p.exists():
+        return rows
+    for line in p.read_text().splitlines():
+        if line.strip():
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"], r["mesh"])] = r
+    return rows
+
+
+def _fmt_t(x: Optional[float]) -> str:
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def _gib(x: Optional[float]) -> str:
+    return "-" if x is None else f"{x / 2**30:.2f}"
+
+
+def dryrun_table(single: dict, multi: dict) -> str:
+    out = ["| arch | shape | single-pod (256) | multi-pod (512) | "
+           "bytes/dev (arg+tmp) | collective mix (single) |",
+           "|---|---|---|---|---|---|"]
+    archs = sorted({k[0] for k in single} | {k[0] for k in multi})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for a in archs:
+        for s in shapes:
+            rs = single.get((a, s, "single"))
+            rm = multi.get((a, s, "multi"))
+            if rs is None and rm is None:
+                continue
+            def stat(r):
+                if r is None:
+                    return "—"
+                if r.get("status") == "skipped":
+                    return "skip (O(L²))"
+                if r.get("status") != "ok":
+                    return "FAIL"
+                return "ok"
+            bpd = "-"
+            mix = "-"
+            if rs and rs.get("status") == "ok":
+                ma = rs.get("memory_analysis", {})
+                bpd = _gib(ma.get("argument_size", 0)
+                           + ma.get("temp_size", 0))
+                cb = rs.get("collective_breakdown", {})
+                tot = sum(cb.values()) or 1
+                short = {"all-reduce": "AR", "all-gather": "AG",
+                         "reduce-scatter": "RS", "all-to-all": "A2A",
+                         "collective-permute": "CP"}
+                mix = " ".join(f"{short.get(k, k)}:{100 * v / tot:.0f}%"
+                               for k, v in sorted(cb.items(),
+                                                  key=lambda kv: -kv[1])[:3])
+            out.append(f"| {a} | {s} | {stat(rs)} | {stat(rm)} | {bpd} | "
+                       f"{mix} |")
+    return "\n".join(out)
+
+
+def roofline_table(single: dict) -> str:
+    out = ["| arch | shape | t_compute | t_memory | t_collective | "
+           "bottleneck | useful FLOPs | roofline frac | one-line fix |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    fixes = {
+        ("compute", True): "already compute-bound — overlap the residual "
+                           "collectives",
+        ("memory", True): "cut f32 activation traffic (bf16 score path, "
+                          "fused norms)",
+        ("collective", True): "reshard: per-chunk partial-sum all-reduces "
+                              "-> one all-gather per layer",
+    }
+    for (a, s, m), r in sorted(single.items()):
+        if m != "single":
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {a} | {s} | - | - | - | skipped | - | - | "
+                       f"full attention at 500k |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {a} | {s} | - | - | - | FAILED | - | - | |")
+            continue
+        bn = r["bottleneck"]
+        fix = fixes.get((bn, True), "")
+        out.append(
+            f"| {a} | {s} | {_fmt_t(r['t_compute'])} | "
+            f"{_fmt_t(r['t_memory'])} | {_fmt_t(r['t_collective'])} | "
+            f"{bn} | {r['useful_flops_frac']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {fix} |")
+    return "\n".join(out)
+
+
+def summarize(single: dict, multi: dict) -> str:
+    n_ok_s = sum(1 for r in single.values() if r.get("status") == "ok")
+    n_sk_s = sum(1 for r in single.values() if r.get("status") == "skipped")
+    n_ok_m = sum(1 for r in multi.values() if r.get("status") == "ok")
+    n_sk_m = sum(1 for r in multi.values() if r.get("status") == "skipped")
+    n_fail = sum(1 for r in list(single.values()) + list(multi.values())
+                 if r.get("status") not in ("ok", "skipped"))
+    return (f"single-pod: {n_ok_s} ok / {n_sk_s} documented skips; "
+            f"multi-pod: {n_ok_m} ok / {n_sk_m} skips; failures: {n_fail}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", default="dryrun_single.jsonl")
+    ap.add_argument("--multi", default="dryrun_multi.jsonl")
+    ap.add_argument("--section", choices=["dryrun", "roofline", "all"],
+                    default="all")
+    args = ap.parse_args()
+    single, multi = load(args.single), load(args.multi)
+    print("## summary\n")
+    print(summarize(single, multi) + "\n")
+    if args.section in ("dryrun", "all"):
+        print("## §Dry-run\n")
+        print(dryrun_table(single, multi) + "\n")
+    if args.section in ("roofline", "all"):
+        print("## §Roofline (single-pod, 256 chips)\n")
+        print(roofline_table(single) + "\n")
+
+
+if __name__ == "__main__":
+    main()

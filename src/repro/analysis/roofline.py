@@ -1,0 +1,134 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs   / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips x HBM_bw)
+    collective term = coll_bytes  / (chips x link_bw)
+
+Sources: ``compiled.cost_analysis()`` (flops, bytes accessed);
+``analysis.hlo.collective_stats`` over the optimized HLO for collective
+bytes.  All terms are *seconds per step* at TPU v5e constants; the
+dominant term is the bottleneck and MODEL_FLOPS/HLO_FLOPs measures how
+much compiled compute is useful work (remat/redundancy waste shows up
+here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass, asdict
+from typing import Any, Dict, Optional
+
+from repro.analysis.hlo import collective_stats, CollectiveStats
+from repro.launch.mesh import HW
+
+__all__ = ["RooflineReport", "roofline_from_compiled", "model_flops"]
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # raw
+    hlo_flops: float                 # whole-program FLOPs (all devices)
+    hlo_bytes: float                 # bytes accessed (all devices)
+    collective_bytes: float          # per-device collective result bytes
+    collective_breakdown: Dict[str, float]
+    model_flops: float               # 6*N*D (or 6*N_active*D) useful FLOPs
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    # derived
+    bottleneck: str
+    useful_flops_frac: float         # model_flops / hlo_flops
+    roofline_frac: float             # t_bound / max(t_*) -> how balanced
+    step_time_lower_bound: float     # max of the three terms
+    bytes_per_device: Optional[float] = None
+    notes: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self))
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step: 6·N·D for training, 2·N·D for fwd-only.
+
+    N = active params (MoE counts routed experts only); D = tokens
+    processed (decode: batch tokens, one each).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence; attention reads the cache too but
+    # param-flops dominate the useful-work definition
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_from_compiled(
+    *,
+    arch: str,
+    shape_name: str,
+    shape,
+    cfg,
+    mesh_name: str,
+    n_devices: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    memory_stats: Optional[Any] = None,
+) -> RooflineReport:
+    # NOTE: compiled.cost_analysis() counts while-loop bodies ONCE — with
+    # scan-over-layers that undercounts ~L x.  The trip-count-aware HLO
+    # analyzer is the source of truth; cost_analysis kept for reference.
+    from repro.analysis.hlo_program import analyze_hlo
+    prog = analyze_hlo(hlo_text)
+
+    # the SPMD program is per-device (GSPMD partitions before codegen)
+    per_dev_flops = float(prog.flops)
+    per_dev_bytes = float(prog.bytes)
+    per_dev_coll = float(prog.collective_bytes)
+
+    class _Coll:
+        bytes_by_kind = prog.collective_by_kind
+    coll = _Coll()
+
+    t_compute = per_dev_flops / HW.PEAK_FLOPS_BF16
+    t_memory = per_dev_bytes / HW.HBM_BW
+    t_collective = per_dev_coll / HW.ICI_BW
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    mflops = model_flops(cfg, shape)
+    total_hlo_flops = per_dev_flops * n_devices
+    useful = mflops / total_hlo_flops if total_hlo_flops else 0.0
+    t_max = max(terms.values())
+    others = sorted(terms.values())[:-1]
+    bpd = None
+    if memory_stats is not None:
+        try:
+            bpd = float(memory_stats.argument_size_in_bytes
+                        + memory_stats.output_size_in_bytes
+                        + memory_stats.temp_size_in_bytes)
+        except Exception:
+            bpd = None
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_devices=n_devices,
+        hlo_flops=total_hlo_flops, hlo_bytes=per_dev_bytes * n_devices,
+        collective_bytes=per_dev_coll,
+        collective_breakdown={k: float(v) for k, v in coll.bytes_by_kind.items()},
+        model_flops=mflops,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_collective,
+        bottleneck=bottleneck,
+        useful_flops_frac=useful,
+        roofline_frac=(t_compute / t_max) if t_max else 0.0,
+        step_time_lower_bound=t_max,
+        bytes_per_device=bpd,
+    )

@@ -1,0 +1,3 @@
+"""repro.checkpoint"""
+from repro.checkpoint.checkpoint import (save, restore, latest_step, all_steps, wait_pending, prune)
+__all__ = ["save", "restore", "latest_step", "all_steps", "wait_pending", "prune"]

@@ -1,0 +1,62 @@
+"""Architecture registry: the 10 assigned archs + smoke reductions.
+
+``get_config(arch_id)`` returns the exact published configuration;
+``get_smoke(arch_id)`` returns a reduced same-family config for CPU tests.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (ModelConfig, ShapeConfig, MeshConfig,
+                                TrainConfig, SHAPES)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "rwkv6-7b": "rwkv6_7b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "zamba2-1.2b": "zamba2_1_2b",
+}
+
+ARCH_IDS: List[str] = list(_ARCH_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _module(arch_id).SMOKE
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; known: {[s.name for s in SHAPES]}")
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k only runs for sub-quadratic archs (SSM/hybrid/SWA)."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False
+    return True
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "MeshConfig", "TrainConfig", "SHAPES",
+    "ARCH_IDS", "get_config", "get_smoke", "get_shape", "cell_is_runnable",
+]

@@ -1,0 +1,42 @@
+"""AMU core — the paper's contribution (async memory unit) as a JAX runtime.
+
+Layers:
+  * :mod:`repro.core.amu`      — request queue, ids, getfin, config registers
+  * :mod:`repro.core.patterns` — access-pattern registers (stream/stride/gather)
+  * :mod:`repro.core.spm`      — SPM (VMEM) budget planner / cache-SPM split
+  * :mod:`repro.core.offload`  — far-memory tier + streaming prefetcher
+  * :mod:`repro.core.sim`      — Fig-1 discrete-event reproduction
+"""
+
+from repro.core.amu import (
+    AMU,
+    AccessConfig,
+    AMUError,
+    QoS,
+    QueueFullPolicy,
+    Request,
+    RequestState,
+    SimBackend,
+    DeviceTransferBackend,
+    FAILURE_CODE,
+)
+from repro.core.offload import FarMemoryTier, StreamingPrefetcher
+from repro.core.patterns import (
+    AccessPattern,
+    GatherPattern,
+    ScatterPattern,
+    StreamPattern,
+    StridePattern,
+    coalescing_ratio,
+    granules,
+)
+from repro.core.spm import SPMPlan, plan_attention_blocks, plan_matmul_blocks
+
+__all__ = [
+    "AMU", "AccessConfig", "AMUError", "QoS", "QueueFullPolicy", "Request",
+    "RequestState", "SimBackend", "DeviceTransferBackend", "FAILURE_CODE",
+    "FarMemoryTier", "StreamingPrefetcher",
+    "AccessPattern", "GatherPattern", "ScatterPattern", "StreamPattern",
+    "StridePattern", "coalescing_ratio", "granules",
+    "SPMPlan", "plan_attention_blocks", "plan_matmul_blocks",
+]

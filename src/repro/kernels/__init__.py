@@ -1,0 +1,18 @@
+"""Pallas TPU kernels (+ pure-jnp oracles and dispatch wrappers).
+
+Kernels (each: <name>.py with pl.pallas_call + BlockSpec, ref.py oracle,
+ops.py jit'd wrapper):
+  * amu_matmul       — manual double-buffered DMA matmul (aload/getfin/SPM)
+  * flash_attention  — streaming attention (causal/SWA/GQA)
+  * decode_attention — one-token attention vs long KV cache (paged stream)
+  * rwkv6            — chunked WKV6, state-resident linear recurrence
+  * mamba2           — chunked SSD (scalar per-head decay)
+  * moe_gather       — scalar-prefetch indexed gather (AMU gather pattern)
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import (matmul, flash_attention, decode_attention,
+                               wkv6, ssd, gather_rows)
+
+__all__ = ["ops", "ref", "matmul", "flash_attention", "decode_attention",
+           "wkv6", "ssd", "gather_rows"]

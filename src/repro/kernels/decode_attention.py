@@ -1,0 +1,111 @@
+"""Decode attention: one query token vs a long KV cache (paged layout).
+
+The decode path is the purest far-memory case in the paper's sense: the
+KV cache is huge (up to 500k tokens), cold, and read-once per step —
+exactly the access profile the AMU targets.  The cache stays in HBM and
+pages of ``bkv`` positions stream through VMEM (compiler-pipelined);
+online softmax state is carried in scratch across the sequential page
+grid dimension, so the kernel is O(1) in VMEM regardless of context
+length.
+
+Layout: q (B, H, D); k/v (B, Skv, Hkv, D); valid_len masks the tail.
+GQA is handled by computing all G = H/Hkv query heads of one KV head
+together: q is pre-reshaped to (B, Hkv, G, D) and a (G, bkv) score tile
+is produced per page — G is a free MXU dim, so grouped queries ride
+along for free (the variable-granularity argument: one aload of a KV
+page serves G consumers).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+NEG_INF = -1e30
+_LANE = 128
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                   scale: float, bkv: int, valid_len: int, G: int):
+    j = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    first_kv = j * bkv
+
+    @pl.when(first_kv < valid_len)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bkv, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, bkv)
+        kv_pos = first_kv + jax.lax.broadcasted_iota(jnp.int32, (G, bkv), 1)
+        s = jnp.where(kv_pos < valid_len, s, NEG_INF)
+        m_prev = m_s[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[:, :1] = l_s[:, :1] * corr + p.sum(-1, keepdims=True)
+        m_s[:, :1] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)                # (bkv, D)
+        acc[...] = acc[...] * corr + jax.lax.dot(p, v)
+
+    @pl.when(j == n_kv - 1)
+    def _():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[:, :1], 1e-30)) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("valid_len", "bkv", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,            # (B, H, D)
+    k: jnp.ndarray,            # (B, Skv, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    valid_len: Optional[int] = None,
+    bkv: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    valid_len = Skv if valid_len is None else valid_len
+    bkv = min(bkv, Skv)
+    assert Skv % bkv == 0
+
+    qg = q.reshape(B, Hkv, G, D)
+    kT = k.transpose(0, 2, 1, 3)     # (B, Hkv, Skv, D)
+    vT = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_decode_kernel, scale=1.0 / math.sqrt(D),
+                               bkv=bkv, valid_len=valid_len, G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, Skv // bkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, _LANE), jnp.float32),
+            pltpu.VMEM((G, _LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kT, vT)
+    return out.reshape(B, H, D)

@@ -1,0 +1,130 @@
+"""Streaming flash attention (causal / sliding-window / GQA) in Pallas.
+
+K/V stream through VMEM block-by-block — the AMU *stream* pattern, here
+with compiler-managed pipelining (BlockSpec index maps double-buffer the
+DMA automatically; contrast with the manual version in
+``amu_matmul.py``).  Online softmax state (m, l, acc) lives in VMEM
+scratch and is carried across the sequential KV grid dimension.
+
+Layout: q (B, H, Sq, D); k/v (B, Hkv, Skv, D); out like q.
+Block-sparsity: fully-masked KV blocks (outside the causal wedge or the
+SWA window) are skipped with ``pl.when`` — the skipped blocks never even
+issue their DMA on TPU (the index map still points at them, but Mosaic
+elides dead loads within revisited blocks; the FLOP savings are what
+matters for the roofline).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+_LANE = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                  scale: float, causal: bool, window: int, bq: int, bkv: int,
+                  kv_valid: int, q_offset: int):
+    iq, ikv = pl.program_id(2), pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ikv == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kv_pos = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    # block-level liveness: skip blocks fully outside the mask
+    first_q = q_offset + iq * bq
+    last_q = first_q + bq - 1
+    first_kv = ikv * bkv
+    live = first_kv < kv_valid
+    if causal:
+        live &= first_kv <= last_q
+    if window:
+        live &= (first_kv + bkv - 1) > first_q - window
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bkv, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+        mask = kv_pos < kv_valid
+        if causal:
+            mask &= q_pos >= kv_pos
+        if window:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[:, :1]                                 # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        l_s[:, :1] = l_s[:, :1] * corr + p.sum(-1, keepdims=True)
+        m_s[:, :1] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bkv, D)
+        acc[...] = acc[...] * corr + jax.lax.dot(p, v)
+
+    @pl.when(ikv == n_kv - 1)
+    def _():
+        l = jnp.maximum(l_s[:, :1], 1e-30)
+        o_ref[0, 0] = (acc[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "bq", "bkv", "q_offset", "kv_valid", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,            # (B, H, Sq, D)
+    k: jnp.ndarray,            # (B, Hkv, Skv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_valid: Optional[int] = None,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    kv_valid = Skv if kv_valid is None else kv_valid
+
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0, (Sq, bq, Skv, bkv)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, kv_valid=kv_valid, q_offset=q_offset)
+    grid = (B, H, Sq // bq, Skv // bkv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, _LANE), jnp.float32),
+            pltpu.VMEM((bq, _LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,94 @@
+"""Dispatch wrappers: one public op per kernel, backend-selected.
+
+``impl``:
+  * ``"pallas"``    — compiled Pallas kernel (TPU target),
+  * ``"interpret"`` — Pallas kernel body interpreted on CPU (correctness),
+  * ``"xla"``       — the pure-jnp path (oracle-equivalent, what the
+    dry-run lowers, since Mosaic cannot target the CPU backend),
+  * ``"auto"``      — pallas on TPU, xla elsewhere.
+
+Model code calls these wrappers; tests sweep ``interpret`` vs ``xla``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.amu_matmul import amu_matmul as _amu_matmul
+from repro.kernels.decode_attention import decode_attention as _decode_attn
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba2 import ssd as _ssd
+from repro.kernels.moe_gather import gather_rows as _gather_rows
+from repro.kernels.rwkv6 import wkv6 as _wkv6
+
+__all__ = ["matmul", "flash_attention", "decode_attention", "wkv6", "ssd",
+           "gather_rows", "on_tpu", "resolve_impl"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if on_tpu() else "xla"
+
+
+def matmul(x, w, *, impl: str = "auto", **block_kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.matmul_ref(x, w)
+    return _amu_matmul(x, w, interpret=(impl == "interpret"), **block_kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, impl: str = "auto",
+                    **kw):
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D) — model layout."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        from repro.models.attention import chunked_attention
+        return chunked_attention(q, k, v, causal=causal, window=window)
+    qT, kT, vT = (a.transpose(0, 2, 1, 3) for a in (q, k, v))
+    out = _flash(qT, kT, vT, causal=causal, window=window,
+                 interpret=(impl == "interpret"), **kw)
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, *, valid_len=None, impl: str = "auto", **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        vl = q.shape[0] if valid_len is None else valid_len
+        return _ref.decode_attention_ref(q, k, v, k.shape[1]
+                                         if valid_len is None else valid_len)
+    return _decode_attn(q, k, v, valid_len=valid_len,
+                        interpret=(impl == "interpret"), **kw)
+
+
+def wkv6(r, k, v, w, u, *, impl: str = "auto", chunk: int = 64):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        from repro.models.ssm import wkv6_chunked
+        return wkv6_chunked(r, k, v, w, u, chunk=chunk)
+    return _wkv6(r, k, v, w, u, chunk=chunk, interpret=(impl == "interpret"))
+
+
+def ssd(x, dt, A, B, C, D, *, impl: str = "auto", chunk: int = 128):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        from repro.models.ssm import ssd_chunked
+        return ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+    return _ssd(x, dt, A, B, C, D, chunk=chunk,
+                interpret=(impl == "interpret"))
+
+
+def gather_rows(src, idx, *, impl: str = "auto", **kw):
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return _ref.gather_rows_ref(src, idx)
+    return _gather_rows(src, idx, interpret=(impl == "interpret"), **kw)

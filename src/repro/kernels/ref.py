@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are swept against
+(`tests/test_kernels_*.py` asserts allclose over shape/dtype grids).
+They are deliberately naive — full materialisation, no chunking — so
+they stay obviously correct.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref", "attention_ref", "decode_attention_ref",
+           "wkv6_ref", "ssd_ref", "gather_rows_ref"]
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) \
+        .astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Naive softmax attention with GQA.  q: (B,Sq,H,D); k/v: (B,Skv,Hkv,D)."""
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid_len):
+    """One-token attention.  q: (B,H,D); k/v: (B,S,Hkv,D); valid_len scalar."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, D) / math.sqrt(D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
+    mask = jnp.arange(S)[None, None, None, :] < valid_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Sequential WKV6 (same math as models.ssm.wkv6_sequential)."""
+    from repro.models.ssm import wkv6_sequential
+    return wkv6_sequential(r, k, v, w, u)
+
+
+def ssd_ref(x, dt, A, B, C, D):
+    """Sequential Mamba2 SSD (same math as models.ssm.ssd_sequential)."""
+    from repro.models.ssm import ssd_sequential
+    y, _ = ssd_sequential(x, dt, A, B, C, D)
+    return y
+
+
+def gather_rows_ref(src: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Row gather: out[i] = src[idx[i]].  src: (N, d); idx: (M,) int32."""
+    return jnp.take(src, idx, axis=0)

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this file — jax
+locks the device count at first initialisation, and the production mesh
+needs 512 placeholder host devices.
+
+For every architecture and its shape suite this script:
+  1. builds the production mesh (single-pod 16x16 / multi-pod 2x16x16),
+  2. builds abstract inputs (ShapeDtypeStruct — nothing is allocated),
+  3. ``jit(step).lower(...).compile()`` with the sharding rules from
+     ``repro.dist``,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` / collective
+     bytes into a JSON report consumed by the roofline table.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+  python -m repro.launch.dryrun --all --resume --out dryrun.json
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_is_runnable, get_config,
+                           get_shape)
+from repro.configs.base import TrainConfig
+from repro.dist.steps import (decode_inputs, make_prefill_step,
+                              make_serve_step, make_train_step, train_inputs,
+                              abstract_params, abstract_opt_state)
+from repro.launch.mesh import make_production_mesh
+from repro.analysis.roofline import roofline_from_compiled
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               tcfg: TrainConfig = None, verbose: bool = True,
+               optimized: bool = False):
+    """Lower+compile one cell; returns the roofline report dict."""
+    from repro.dist import act_sharding as acts
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not cell_is_runnable(cfg, shape):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "full-attention arch at 500k context (O(L^2)); "
+                          "see DESIGN.md"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tcfg = tcfg or TrainConfig(
+        act_sharding="optimized" if optimized else "baseline")
+    act_policy = acts.OPTIMIZED if optimized else None
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            fn, _ = make_train_step(cfg, tcfg, mesh, shape, donate=False)
+            params = abstract_params(cfg)
+            opt = abstract_opt_state(cfg)
+            batch = train_inputs(cfg, shape)
+            lowered = fn.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            fn, _ = make_prefill_step(cfg, mesh, shape, act_policy=act_policy)
+            params = abstract_params(cfg)
+            batch = train_inputs(cfg, shape)
+            batch.pop("labels")
+            batch["labels"] = jax.ShapeDtypeStruct(batch["tokens"].shape,
+                                                   batch["tokens"].dtype)
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            fn, _ = make_serve_step(cfg, mesh, shape, donate=False,
+                                    act_policy=act_policy)
+            params = abstract_params(cfg)
+            cache, tokens = decode_inputs(cfg, shape)
+            lowered = fn.lower(params, cache, tokens)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    hlo = compiled.as_text()
+    report = roofline_from_compiled(
+        arch=arch, shape_name=shape_name, shape=shape, cfg=cfg,
+        mesh_name="multi" if multi_pod else "single",
+        n_devices=mesh.size, cost=cost, hlo_text=hlo, memory_stats=mem)
+    row = json.loads(report.to_json())
+    row.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1))
+    if mem is not None:
+        row["memory_analysis"] = {
+            "argument_size": mem.argument_size_in_bytes,
+            "output_size": mem.output_size_in_bytes,
+            "temp_size": mem.temp_size_in_bytes,
+        }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x "
+              f"{'multi' if multi_pod else 'single'}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s, "
+              f"bottleneck={row['bottleneck']}, "
+              f"t_comp={row['t_compute']*1e3:.1f}ms "
+              f"t_mem={row['t_memory']*1e3:.1f}ms "
+              f"t_coll={row['t_collective']*1e3:.1f}ms)")
+        if mem is not None:
+            print(f"         memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+                  f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+                  f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB (per device)")
+        sys.stdout.flush()
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true", help="every runnable cell")
+    ap.add_argument("--out", default=None, help="JSON output path (appended "
+                    "incrementally; resumable)")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells already present in --out")
+    ap.add_argument("--opt", action="store_true",
+                    help="use the optimized activation-sharding/precision "
+                         "policy (beyond-paper perf path)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else [s.name for s in SHAPES]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    done = {}
+    out_path = Path(args.out) if args.out else None
+    if out_path and out_path.exists():
+        for line in out_path.read_text().splitlines():
+            if line.strip():
+                r = json.loads(line)
+                done[(r["arch"], r["shape"], r["mesh"])] = r
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                key = (arch, shape_name, "multi" if multi else "single")
+                if args.resume and key in done and \
+                        done[key].get("status") in ("ok", "skipped"):
+                    continue
+                try:
+                    row = lower_cell(arch, shape_name, multi_pod=multi,
+                                     optimized=args.opt)
+                except Exception as e:
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": shape_name,
+                           "mesh": key[2], "status": "FAILED",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append(key)
+                if out_path:
+                    with out_path.open("a") as f:
+                        f.write(json.dumps(row) + "\n")
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        sys.exit(1)
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Pure-JAX model zoo: layers, attention, MoE, SSM blocks, composable models."""
+
+from repro.models.model import (
+    init_params, train_loss, prefill, decode_step, init_cache,
+    chunked_cross_entropy, count_params, forward, Cache,
+)
+
+__all__ = [
+    "init_params", "train_loss", "prefill", "decode_step", "init_cache",
+    "chunked_cross_entropy", "count_params", "forward", "Cache",
+]

@@ -1,0 +1,301 @@
+"""Attention blocks: GQA / SWA / cross attention + KV caches.
+
+Two execution paths exist for the core softmax-attention compute:
+
+  * :func:`repro.kernels.ops.flash_attention` — the Pallas AMU kernel
+    (TPU target, interpret-validated),
+  * the chunked online-softmax implementation here (`_chunked_attention`)
+    — pure jnp, O(S·C) peak memory, used for XLA lowering in the dry-run
+    and as the CPU execution path.  Both agree with ``kernels/ref.py``.
+
+The chunk loop is a ``lax.scan`` over KV blocks: exactly the AMU stream
+pattern (fetch KV chunk → accumulate online softmax → next), so what the
+Pallas kernel does with explicit DMA the XLA path does with scan.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init, rms_norm, rms_norm_init, rope, mrope
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = [
+    "attn_init", "attention_block", "decode_attention_block",
+    "init_kv_cache", "chunked_attention", "NEG_INF",
+]
+
+NEG_INF = -1e30
+
+
+# -- parameter init -------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "q": dense_init(kq, d, cfg.num_heads * hd, dtype=dtype),
+        "k": dense_init(kk, d, cfg.num_kv_heads * hd, dtype=dtype),
+        "v": dense_init(kv, d, cfg.num_kv_heads * hd, dtype=dtype),
+        "o": dense_init(ko, cfg.num_heads * hd, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(hd, dtype)
+        p["k_norm"] = rms_norm_init(hd, dtype)
+    return p
+
+
+# -- chunked online-softmax attention ----------------------------------------------
+
+def chunked_attention(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Skv, Hkv, D)
+    v: jnp.ndarray,            # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,           # SWA: attend to [i-window+1, i]
+    q_offset: int = 0,         # absolute position of q[0] (for caches)
+    chunk: int = 1024,
+    kv_valid_len: Optional[jnp.ndarray] = None,   # mask KV beyond this
+) -> jnp.ndarray:
+    """Numerically-stable blockwise attention, peak memory O(Sq·chunk).
+
+    Two execution modes, selected by :mod:`repro.dist.act_sharding`:
+
+    * baseline (paper-faithful run): GQA-grouped einsums with f32 operand
+      upcast; activation placement left to GSPMD;
+    * optimized (``--opt``): operands stay in their native dtype with f32
+      accumulation, and the layout is constrained explicitly — head-
+      sharded when H divides the model axis (K/V repeated to H locally),
+      else query-sequence-sharded — so no collective ever appears inside
+      the KV-chunk loop.
+    """
+    from repro.dist import act_sharding as acts
+
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    pol = acts.current()
+    plan = acts.attn_plan(H, Hkv, Sq)
+    dp = acts.dp_spec_prefix()
+
+    if plan is not None and plan[0] == "heads":
+        ax = plan[1]
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        spec = P(dp, None, ax, None)
+        q = acts.constrain(q, spec)
+        k = acts.constrain(k, spec)
+        v = acts.constrain(v, spec)
+        out = _chunked_core(q, k, v, grouped=False, causal=causal,
+                            window=window, q_offset=q_offset, chunk=chunk,
+                            kv_valid_len=kv_valid_len,
+                            native_dtype=pol.native_dtype)
+        return acts.constrain(out, spec)
+
+    if plan is not None and plan[0] == "seq":
+        ax = plan[1]
+        q = acts.constrain(q, P(dp, ax, None, None))
+        k = acts.constrain(k, P(dp, None, None, None))
+        v = acts.constrain(v, P(dp, None, None, None))
+        out = _chunked_core(q, k, v, grouped=True, causal=causal,
+                            window=window, q_offset=q_offset, chunk=chunk,
+                            kv_valid_len=kv_valid_len,
+                            native_dtype=pol.native_dtype)
+        return acts.constrain(out, P(dp, ax, None, None))
+
+    return _chunked_core(q, k, v, grouped=True, causal=causal,
+                         window=window, q_offset=q_offset, chunk=chunk,
+                         kv_valid_len=kv_valid_len,
+                         native_dtype=pol.native_dtype)
+
+
+def _chunked_core(q, k, v, *, grouped: bool, causal, window, q_offset,
+                  chunk, kv_valid_len, native_dtype: bool):
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    orig_dtype = q.dtype
+    opd = orig_dtype if native_dtype else jnp.float32   # einsum operand dtype
+
+    chunk = min(chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # reshape kv to (n_chunks, B, chunk, Hkv, D) for scan
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    if grouped:
+        qs = q.astype(opd).reshape(B, Sq, Hkv, g, D)
+        s_eq, pv_eq = "bqhgd,bkhd->bqhgk", "bqhgk,bkhd->bqhgd"
+        acc_shape, red_shape = (B, Sq, Hkv, g, D), (B, Sq, Hkv, g)
+    else:
+        qs = q.astype(opd)
+        s_eq, pv_eq = "bqhd,bkhd->bqhk", "bqhk,bkhd->bqhd"
+        acc_shape, red_shape = (B, Sq, H, D), (B, Sq, H)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        ci, kci, vci = xs
+        kv_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum(s_eq, qs, kci.astype(opd),
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        if kv_valid_len is not None:
+            mask = mask & (kv_pos[None, :] < kv_valid_len)
+        mask = mask & (kv_pos < Skv)[None, :]          # padding chunk tail
+        bmask = (mask[None, :, None, None, :] if grouped
+                 else mask[None, :, None, :])
+        s = jnp.where(bmask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum(pv_eq, p.astype(opd), vci.astype(opd),
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros(acc_shape, jnp.float32)
+    m0 = jnp.full(red_shape, NEG_INF, jnp.float32)
+    l0 = jnp.zeros(red_shape, jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, D).astype(orig_dtype)
+
+
+# -- full attention block (prefill / train) -------------------------------------------
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray, compute_dtype):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = dense(p["q"], x, compute_dtype).reshape(B, S, cfg.num_heads, hd)
+    k = dense(p["k"], x, compute_dtype).reshape(B, S, cfg.num_kv_heads, hd)
+    v = dense(p["v"], x, compute_dtype).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def _position_encode(cfg: ModelConfig, q, k, positions):
+    if cfg.attention == "none":
+        return q, k
+    if cfg.mrope_sections:
+        q = mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def attention_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                       # (B, S, d)
+    positions: jnp.ndarray,               # (B, S) or (3, B, S) for mrope
+    *,
+    causal: bool = True,
+    kv: Optional[jnp.ndarray] = None,     # cross-attention source (B, Skv, d)
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence attention; returns (out, (k, v)) so prefill can cache."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    if kv is None:
+        q, k, v = _project_qkv(p, cfg, x, compute_dtype)
+        q, k = _position_encode(cfg, q, k, positions)
+    else:  # cross attention: k/v from encoder output, no rope on cross path
+        q = dense(p["q"], x, compute_dtype).reshape(B, S, cfg.num_heads, hd)
+        Skv = kv.shape[1]
+        k = dense(p["k"], kv, compute_dtype).reshape(B, Skv, cfg.num_kv_heads, hd)
+        v = dense(p["v"], kv, compute_dtype).reshape(B, Skv, cfg.num_kv_heads, hd)
+    out = chunked_attention(
+        q, k, v,
+        causal=causal and kv is None,
+        window=cfg.window if cfg.attention == "swa" else 0,
+    )
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    return dense(p["o"], out, compute_dtype), (k, v)
+
+
+# -- decode path -----------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: Optional[int] = None,
+                  dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Stacked-over-layers KV cache.  SWA archs use a ring buffer of
+    ``window`` slots (decode cost independent of context length)."""
+    L = n_layers if n_layers is not None else cfg.num_layers
+    slots = min(max_len, cfg.window) if cfg.attention == "swa" else max_len
+    shape = (L, batch, slots, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),     # absolute position of next token
+        "slots": jnp.asarray(slots, jnp.int32),
+    }
+
+
+def decode_attention_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # (B, 1, d)
+    layer_cache: Tuple[jnp.ndarray, jnp.ndarray],   # k,v (B, slots, Hkv, D)
+    pos: jnp.ndarray,                    # (B,) int32: per-sequence position
+    *,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One-token attention against the cache; returns (out, new (k,v)).
+
+    ``pos`` is per sequence so continuous batching can mix requests at
+    different depths in one decode step."""
+    B = x.shape[0]
+    hd = cfg.head_dim
+    kc, vc = layer_cache
+    slots = kc.shape[1]
+    q, k_new, v_new = _project_qkv(p, cfg, x, compute_dtype)
+    pos = jnp.broadcast_to(pos, (B,))
+    posv = pos[:, None]                              # (B, 1)
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(posv, (3, B, 1))
+        q, k_new = _position_encode(cfg, q, k_new, pos3)
+    else:
+        q, k_new = _position_encode(cfg, q, k_new, posv)
+    slot = (pos % slots if cfg.attention == "swa"
+            else jnp.minimum(pos, slots - 1))        # (B,)
+    kc = kc.at[jnp.arange(B), slot].set(k_new[:, 0].astype(kc.dtype))
+    vc = vc.at[jnp.arange(B), slot].set(v_new[:, 0].astype(vc.dtype))
+    valid = jnp.minimum(pos + 1, slots)              # (B,)
+    # one-token attention: (B, H, slots) scores — linear in cache length
+    qf = (q.astype(jnp.float32) * (1.0 / math.sqrt(hd)))
+    qf = qf.reshape(B, cfg.num_kv_heads, cfg.q_per_kv, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kc.astype(jnp.float32))
+    kv_idx = jnp.arange(slots)
+    s = jnp.where((kv_idx[None, :] < valid[:, None])[:, None, None, :],
+                  s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, vc.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.num_heads * hd).astype(compute_dtype)
+    return dense(p["o"], out, compute_dtype), (kc, vc)

@@ -1,0 +1,175 @@
+"""Primitive layers (pure JAX, pytree params) shared by every architecture.
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns return the dict,
+    apply fns take (params, x, ...) and are shape-polymorphic,
+  * params are stored in ``param_dtype`` (fp32) and cast to
+    ``compute_dtype`` (bf16) at use — the MaxText mixed-precision scheme,
+  * every init takes an explicit PRNG key (no global state).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "dense",
+    "rms_norm_init", "rms_norm", "layer_norm_init", "layer_norm",
+    "embed_init", "embed", "unembed",
+    "rope", "mrope", "rope_freqs",
+    "swiglu_init", "swiglu",
+]
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _native_norms() -> bool:
+    """Norm elementwise math in native dtype (perf policy; stats stay f32)."""
+    from repro.dist import act_sharding as acts
+    return acts.current().native_dtype
+
+
+# -- linear -------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    w = p["w"].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# -- norms ---------------------------------------------------------------------
+
+def rms_norm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    if _native_norms() and dtype != jnp.float32:
+        # statistics in f32, (B,S,d)-sized elementwise math in the native
+        # dtype: halves the norm's HBM traffic and keeps its backward out
+        # of f32 (the single largest memory term in the baseline roofline)
+        return x * inv.astype(dtype) * p["scale"].astype(dtype)
+    y = xf * inv
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    if _native_norms() and dtype != jnp.float32:
+        return ((x - mu.astype(dtype)) * inv.astype(dtype)
+                * p["scale"].astype(dtype) + p["bias"].astype(dtype))
+    y = (xf - mu) * inv
+    return (y * p["scale"] + p["bias"]).astype(dtype)
+
+
+# -- embeddings ------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray, *, logit_scale: float = 1.0,
+            compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Project to vocab logits.  ``p`` is the embed table (tied) or lm_head."""
+    table = p["table"].astype(compute_dtype)
+    logits = x.astype(compute_dtype) @ table.T
+    if logit_scale != 1.0:
+        logits = logits * logit_scale
+    return logits
+
+
+# -- rotary position embeddings ----------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def _apply_rot(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x[..., ::2], x[..., 1::2]) — GPT-NeoX convention on halves."""
+    d = x.shape[-1] // 2
+    x1, x2 = x[..., :d], x[..., d:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0) -> jnp.ndarray:
+    """Standard RoPE.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S), int32.
+    """
+    freqs = rope_freqs(x.shape[-1], theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    return _apply_rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def mrope(x: jnp.ndarray, positions: jnp.ndarray, sections: Sequence[int],
+          theta: float = 10_000.0) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): head_dim/2 freqs split into (t, h, w)
+    sections, each driven by its own position component.
+
+    x: (B, S, H, D); positions: (3, B, S) int32 (t/h/w ids — equal for text).
+    """
+    d_half = x.shape[-1] // 2
+    if sum(sections) != d_half:
+        raise ValueError(f"mrope sections {sections} must sum to {d_half}")
+    freqs = rope_freqs(x.shape[-1], theta)                     # (D/2,)
+    # build per-frequency position selector: section i uses positions[i]
+    sec_ids = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                         total_repeat_length=d_half)           # (D/2,)
+    # gather per-section positions: (B, S, D/2)
+    pos = positions.astype(jnp.float32)[sec_ids]               # (D/2, B, S)
+    pos = jnp.moveaxis(pos, 0, -1)                             # (B, S, D/2)
+    angles = pos * freqs                                       # (B, S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (B, S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    return _apply_rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+# -- gated MLP -----------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype=dtype),
+        "up": dense_init(k2, d, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu(p: Params, x: jnp.ndarray, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    g = dense(p["gate"], x, compute_dtype)
+    u = dense(p["up"], x, compute_dtype)
+    return dense(p["down"], jax.nn.silu(g) * u, compute_dtype)

@@ -1,0 +1,766 @@
+"""Composable model builder: one init/apply pair per architecture family.
+
+Families (``cfg.family``):
+  * ``dense`` / ``moe`` (and VLM backbones) — decoder-only transformer;
+    MoE layers placed every ``cfg.moe_every`` layers, scanned in groups,
+  * ``ssm``    — RWKV6 stack (attention-free),
+  * ``hybrid`` — Mamba2 stack with a *shared* attention block every
+    ``cfg.shared_attn_every`` layers (Zamba2),
+  * ``encdec`` — encoder (bidirectional) + decoder (causal + cross-attn),
+    with a stub frontend providing precomputed frame/patch embeddings.
+
+All layer stacks are ``lax.scan`` over stacked params (compile time stays
+flat in depth); remat is applied to the scan body per ``remat`` policy.
+The LM loss streams over sequence chunks so full-vocab logits are never
+materialised (vocabs here reach 256k).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (attention_block, attn_init,
+                                    decode_attention_block, init_kv_cache)
+from repro.models.layers import (embed, embed_init, rms_norm, rms_norm_init,
+                                 swiglu, swiglu_init, unembed)
+from repro.models.moe import moe_block, moe_init
+
+Params = Dict[str, Any]
+
+__all__ = [
+    "init_params", "train_loss", "prefill", "decode_step", "init_cache",
+    "chunked_cross_entropy", "count_params",
+]
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ===========================================================================
+# Layer init/apply per family
+# ===========================================================================
+
+def _dense_layer_init(key, cfg: ModelConfig, *, moe: bool, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": rms_norm_init(cfg.d_model, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "mlp_norm": rms_norm_init(cfg.d_model, dtype),
+        "mlp": (moe_init(k2, cfg, dtype) if moe
+                else swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)),
+    }
+
+
+def _dense_layer_apply(p, cfg: ModelConfig, x, positions, *, moe: bool,
+                       causal=True, compute_dtype=jnp.bfloat16):
+    from repro.dist import act_sharding as acts
+    # Megatron-SP: residual stream sequence-sharded over model between
+    # layers (row-parallel outputs reduce-scatter instead of all-reduce).
+    # MoE layers need the full sequence per row for sort-based dispatch;
+    # gated off for families where it regressed in the §Perf sweep:
+    # MoE-every-layer (no dense stretch to amortise the reshard) and
+    # hybrid (mamba blocks would ping-pong with the shared attn block).
+    eligible = (cfg.family in ("dense", "moe")
+                and not (moe and cfg.moe_every == 1))
+    rspec = acts.residual_spec(x.shape[1], gather=moe) if eligible else None
+    if rspec is not None:
+        x = acts.constrain(x, rspec)
+    with acts.residual_layout(rspec is not None and not moe):
+        a, _ = attention_block(p["attn"], cfg,
+                               rms_norm(p["attn_norm"], x, cfg.norm_eps),
+                               positions, causal=causal,
+                               compute_dtype=compute_dtype)
+        x = x + a
+        h = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+        if moe:
+            m, aux = moe_block(p["mlp"], cfg, h, compute_dtype=compute_dtype)
+        else:
+            m, aux = (swiglu(p["mlp"], h, compute_dtype),
+                      jnp.zeros((), jnp.float32))
+        x = x + m
+    if rspec is not None:
+        x = acts.constrain(x, rspec)
+    return x, aux
+
+
+def _encdec_dec_layer_init(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": rms_norm_init(cfg.d_model, dtype),
+        "self_attn": attn_init(k1, cfg, dtype),
+        "cross_norm": rms_norm_init(cfg.d_model, dtype),
+        "cross_attn": attn_init(k2, cfg, dtype),
+        "mlp_norm": rms_norm_init(cfg.d_model, dtype),
+        "mlp": swiglu_init(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+# ===========================================================================
+# init_params
+# ===========================================================================
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Build the full parameter pytree (layer stacks stacked on axis 0)."""
+    dtype = _pdtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], cfg.padded_vocab, cfg.d_model, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        if cfg.num_experts and cfg.moe_every > 1:
+            n_groups = cfg.num_layers // cfg.moe_every
+            gk = jax.random.split(keys[2], n_groups)
+
+            def group_init(k):
+                kd, km = jax.random.split(k)
+                dks = jax.random.split(kd, cfg.moe_every - 1)
+                return {
+                    "dense": jax.vmap(lambda kk: _dense_layer_init(
+                        kk, cfg, moe=False, dtype=dtype))(dks),
+                    "moe": _dense_layer_init(km, cfg, moe=True, dtype=dtype),
+                }
+
+            params["groups"] = jax.vmap(group_init)(gk)
+        else:
+            lk = jax.random.split(keys[2], cfg.num_layers)
+            params["layers"] = jax.vmap(lambda k: _dense_layer_init(
+                k, cfg, moe=bool(cfg.num_experts), dtype=dtype))(lk)
+    elif fam == "ssm":
+        lk = jax.random.split(keys[2], cfg.num_layers)
+        params["layers"] = jax.vmap(lambda k: ssm_mod.rwkv6_init(k, cfg, dtype))(lk)
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every or cfg.num_layers
+        n_groups = cfg.num_layers // every
+        tail = cfg.num_layers - n_groups * every
+        gk = jax.random.split(keys[2], max(n_groups, 1))
+        params["mamba_groups"] = jax.vmap(
+            lambda k: jax.vmap(lambda kk: ssm_mod.mamba2_init(kk, cfg, dtype))(
+                jax.random.split(k, every)))(gk)
+        if tail:
+            tk = jax.random.split(keys[3], tail)
+            params["mamba_tail"] = jax.vmap(
+                lambda k: ssm_mod.mamba2_init(k, cfg, dtype))(tk)
+        params["shared_attn"] = _dense_layer_init(keys[4], cfg, moe=False,
+                                                  dtype=dtype)
+    elif fam == "encdec":
+        ek = jax.random.split(keys[2], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(lambda k: _dense_layer_init(
+            k, cfg, moe=False, dtype=dtype))(ek)
+        dk = jax.random.split(keys[3], cfg.num_layers)
+        params["decoder"] = jax.vmap(lambda k: _encdec_dec_layer_init(
+            k, cfg, dtype))(dk)
+        params["enc_norm"] = rms_norm_init(cfg.d_model, dtype)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return params
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ===========================================================================
+# forward passes (full sequence)
+# ===========================================================================
+
+def _maybe_remat(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "block":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+def _decoder_stack(params, cfg: ModelConfig, x, positions, *, remat="block",
+                   causal=True):
+    """Run the layer stack for dense/moe/ssm/hybrid; returns (x, aux)."""
+    cdt = _cdtype(cfg)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        is_moe = bool(cfg.num_experts)
+        if is_moe and cfg.moe_every > 1:
+            def group_body(carry, gp):
+                x = carry
+                def dense_body(x, lp):
+                    y, _ = _dense_layer_apply(lp, cfg, x, positions, moe=False,
+                                              causal=causal, compute_dtype=cdt)
+                    return y, None
+                x, _ = jax.lax.scan(_maybe_remat(dense_body, remat), x, gp["dense"])
+                x, aux = _maybe_remat(
+                    lambda x, p: _dense_layer_apply(p, cfg, x, positions, moe=True,
+                                                    causal=causal, compute_dtype=cdt),
+                    remat)(x, gp["moe"])
+                return x, aux
+            x, auxs = jax.lax.scan(group_body, x, params["groups"])
+            return x, auxs.sum()
+        def body(x, lp):
+            y, aux = _dense_layer_apply(lp, cfg, x, positions, moe=is_moe,
+                                        causal=causal, compute_dtype=cdt)
+            return y, aux
+        x, auxs = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
+        return x, auxs.sum()
+
+    if fam == "ssm":
+        def body(x, lp):
+            return ssm_mod.rwkv6_block(lp, cfg, x, compute_dtype=cdt), None
+        x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["layers"])
+        return x, jnp.zeros((), jnp.float32)
+
+    if fam == "hybrid":
+        shared = params["shared_attn"]
+        def group_body(x, gp):
+            def mamba_body(x, lp):
+                return ssm_mod.mamba2_block(lp, cfg, x, compute_dtype=cdt), None
+            x, _ = jax.lax.scan(_maybe_remat(mamba_body, remat), x, gp)
+            y, _ = _maybe_remat(
+                lambda x, p: _dense_layer_apply(p, cfg, x, positions, moe=False,
+                                                causal=causal, compute_dtype=cdt),
+                remat)(x, shared)
+            return y, None
+        x, _ = jax.lax.scan(group_body, x, params["mamba_groups"])
+        if "mamba_tail" in params:
+            def mamba_body(x, lp):
+                return ssm_mod.mamba2_block(lp, cfg, x, compute_dtype=cdt), None
+            x, _ = jax.lax.scan(_maybe_remat(mamba_body, remat), x,
+                                params["mamba_tail"])
+        return x, jnp.zeros((), jnp.float32)
+
+    raise ValueError(f"_decoder_stack: bad family {fam}")
+
+
+def _encode(params, cfg: ModelConfig, src_embeds, *, remat="block"):
+    """Bidirectional encoder over stub frontend embeddings (B, S, d)."""
+    cdt = _cdtype(cfg)
+    x = src_embeds.astype(cdt)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S), x.shape[:2])
+
+    def body(x, lp):
+        y, _ = _dense_layer_apply(lp, cfg, x, positions, moe=False,
+                                  causal=False, compute_dtype=cdt)
+        return y, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["encoder"])
+    return rms_norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _decode_stack_encdec(params, cfg: ModelConfig, x, positions, enc_out, *,
+                         remat="block"):
+    cdt = _cdtype(cfg)
+
+    def body(x, lp):
+        a, _ = attention_block(lp["self_attn"], cfg,
+                               rms_norm(lp["self_norm"], x, cfg.norm_eps),
+                               positions, causal=True, compute_dtype=cdt)
+        x = x + a
+        c, _ = attention_block(lp["cross_attn"], cfg,
+                               rms_norm(lp["cross_norm"], x, cfg.norm_eps),
+                               positions, kv=enc_out, compute_dtype=cdt)
+        x = x + c
+        h = rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        return x + swiglu(lp["mlp"], h, cdt), None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, remat), x, params["decoder"])
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+            remat: str = "block") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward to final hidden states.  Returns (x, aux)."""
+    cdt = _cdtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, cdt)
+    if cfg.mrope_sections:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (3, B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["src_embeds"], remat=remat)
+        x = _decode_stack_encdec(params, cfg, x, positions, enc_out, remat=remat)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x, aux = _decoder_stack(params, cfg, x, positions, remat=remat)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+# ===========================================================================
+# loss (chunked over sequence — never materialises (B, S, V) logits)
+# ===========================================================================
+
+def chunked_cross_entropy(x, table, labels, *, logit_scale=1.0,
+                          chunk: int = 512, z_coef: float = 0.0):
+    """Mean next-token xent.  x: (B,S,d) hidden; labels: (B,S) int32,
+    -1 = ignore.  Streams over S in chunks of ``chunk``."""
+    B, S, d = x.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (S + pad) // c
+    xc = x.reshape(B, n, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt, zacc = carry
+        xb, lb = xs
+        logits = (xb.astype(jnp.bfloat16) @ table.astype(jnp.bfloat16).T)
+        logits = (logits * logit_scale).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lb, 0)[..., None],
+                                   axis=-1)[..., 0]
+        valid = (lb >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - gold) * valid)
+        zacc = zacc + jnp.sum(jnp.square(lse) * valid)
+        cnt = cnt + valid.sum()
+        return (tot, cnt, zacc), None
+
+    (tot, cnt, zacc), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), (xc, lc))
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt + z_coef * zacc / cnt
+
+
+def train_loss(params, cfg: ModelConfig, batch, *, remat: str = "block",
+               z_coef: float = 0.0):
+    """Scalar loss + metrics dict."""
+    x, aux = forward(params, cfg, batch, remat=remat)
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["lm_head"]["table"]
+    xent = chunked_cross_entropy(x, table, batch["labels"],
+                                 logit_scale=cfg.logit_scale, z_coef=z_coef)
+    loss = xent + aux
+    return loss, {"loss": loss, "xent": xent, "aux": aux}
+
+
+# ===========================================================================
+# inference: prefill + decode_step
+# ===========================================================================
+
+class Cache(NamedTuple):
+    """Decode-time state for any family (unused fields are empty dicts)."""
+    kv: Dict[str, jnp.ndarray]         # attention KV (stacked over layers)
+    ssm: Any                           # RWKVState/MambaState stacked or ()
+    cross: Dict[str, jnp.ndarray]      # encdec: cross-attn KV + enc_out
+    pos: jnp.ndarray                   # next absolute position (scalar)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               src_len: Optional[int] = None) -> Cache:
+    kv, ssm_state, cross = {}, (), {}
+    fam = cfg.family
+    if fam in ("dense", "moe", "encdec"):
+        kv = init_kv_cache(cfg, batch, max_len)
+    if fam == "ssm":
+        s = ssm_mod.rwkv6_state_init(cfg, batch)
+        ssm_state = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), s)
+    if fam == "hybrid":
+        every = cfg.shared_attn_every or cfg.num_layers
+        n_groups = cfg.num_layers // every
+        s = ssm_mod.mamba2_state_init(cfg, batch)
+        ssm_state = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), s)
+        kv = init_kv_cache(cfg, batch, max_len, n_layers=n_groups)
+    if fam == "encdec":
+        Ssrc = max_len if src_len is None else src_len
+        cdt = _cdtype(cfg)
+        cross = {
+            "k": jnp.zeros((cfg.num_layers, batch, Ssrc, cfg.num_kv_heads,
+                            cfg.head_dim), cdt),
+            "v": jnp.zeros((cfg.num_layers, batch, Ssrc, cfg.num_kv_heads,
+                            cfg.head_dim), cdt),
+            "enc_out": jnp.zeros((batch, Ssrc, cfg.d_model), cdt),
+        }
+    return Cache(kv=kv, ssm=ssm_state, cross=cross,
+                 pos=jnp.zeros((batch,), jnp.int32))
+
+
+def decode_step(params, cfg: ModelConfig, cache: Cache,
+                tokens: jnp.ndarray,
+                src_embeds: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Cache]:
+    """One-token decode.  tokens: (B, 1) int32.  Returns (logits (B, V), cache)."""
+    cdt = _cdtype(cfg)
+    B = tokens.shape[0]
+    pos = cache.pos
+    x = embed(params["embed"], tokens, cdt)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        is_moe = bool(cfg.num_experts)
+        if is_moe and cfg.moe_every > 1:
+            x, kv = _decode_grouped_moe(params, cfg, x, cache, cdt)
+        else:
+            def body(carry, xs):
+                x = carry
+                lp, kl, vl = xs
+                a, (kn, vn) = decode_attention_block(
+                    lp["attn"], cfg, rms_norm(lp["attn_norm"], x, cfg.norm_eps),
+                    (kl, vl), pos, compute_dtype=cdt)
+                x = x + a
+                h = rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+                if is_moe:
+                    m, _ = moe_block(lp["mlp"], cfg, h, compute_dtype=cdt)
+                else:
+                    m = swiglu(lp["mlp"], h, cdt)
+                return x + m, (kn, vn)
+            x, (knew, vnew) = jax.lax.scan(
+                body, x, (params["layers"], cache.kv["k"], cache.kv["v"]))
+            kv = dict(cache.kv, k=knew, v=vnew)
+    elif fam == "ssm":
+        def body(carry, xs):
+            x = carry
+            lp, st = xs
+            y, st2 = ssm_mod.rwkv6_step(lp, cfg, x, ssm_mod.RWKVState(*st),
+                                        compute_dtype=cdt)
+            return y, tuple(st2)
+        x, new_state = jax.lax.scan(body, x, (params["layers"],
+                                              tuple(cache.ssm)))
+        kv = cache.kv
+        cache = cache._replace(ssm=ssm_mod.RWKVState(*new_state))
+    elif fam == "hybrid":
+        x, kv, new_state = _decode_hybrid(params, cfg, x, cache, cdt)
+        cache = cache._replace(ssm=new_state)
+    elif fam == "encdec":
+        x, kv = _decode_encdec(params, cfg, x, cache, cdt)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["lm_head"]["table"]
+    logits = unembed({"table": table}, x, logit_scale=cfg.logit_scale,
+                     compute_dtype=cdt)[:, 0]
+    new_cache = cache._replace(kv=kv, pos=pos + 1)
+    return logits.astype(jnp.float32), new_cache
+
+
+def _decode_grouped_moe(params, cfg, x, cache, cdt):
+    """Decode path for moe_every>1 (llama4): scan groups, inner dense scan."""
+    pos = cache.pos
+    n_groups = cfg.num_layers // cfg.moe_every
+    d_per = cfg.moe_every - 1
+    # cache layout: layer l -> group g = l // moe_every, slot = l % moe_every
+    k = cache.kv["k"].reshape((n_groups, cfg.moe_every) + cache.kv["k"].shape[1:])
+    v = cache.kv["v"].reshape((n_groups, cfg.moe_every) + cache.kv["v"].shape[1:])
+
+    def group_body(x, xs):
+        gp, kg, vg = xs
+        def dense_body(x, ys):
+            lp, kl, vl = ys
+            a, (kn, vn) = decode_attention_block(
+                lp["attn"], cfg, rms_norm(lp["attn_norm"], x, cfg.norm_eps),
+                (kl, vl), pos, compute_dtype=cdt)
+            x = x + a
+            m = swiglu(lp["mlp"], rms_norm(lp["mlp_norm"], x, cfg.norm_eps), cdt)
+            return x + m, (kn, vn)
+        x, (kd, vd) = jax.lax.scan(dense_body, x,
+                                   (gp["dense"], kg[:d_per], vg[:d_per]))
+        lp = gp["moe"]
+        a, (km, vm) = decode_attention_block(
+            lp["attn"], cfg, rms_norm(lp["attn_norm"], x, cfg.norm_eps),
+            (kg[d_per], vg[d_per]), pos, compute_dtype=cdt)
+        x = x + a
+        m, _ = moe_block(lp["mlp"], cfg,
+                         rms_norm(lp["mlp_norm"], x, cfg.norm_eps),
+                         compute_dtype=cdt)
+        x = x + m
+        kout = jnp.concatenate([kd, km[None]], axis=0)
+        vout = jnp.concatenate([vd, vm[None]], axis=0)
+        return x, (kout, vout)
+
+    x, (kn, vn) = jax.lax.scan(group_body, x, (params["groups"], k, v))
+    kv = dict(cache.kv,
+              k=kn.reshape(cache.kv["k"].shape),
+              v=vn.reshape(cache.kv["v"].shape))
+    return x, kv
+
+
+def _decode_hybrid(params, cfg, x, cache, cdt):
+    pos = cache.pos
+    every = cfg.shared_attn_every or cfg.num_layers
+    n_groups = cfg.num_layers // every
+    tail = cfg.num_layers - n_groups * every
+    sg = jax.tree_util.tree_map(lambda a: a[:n_groups * every].reshape(
+        (n_groups, every) + a.shape[1:]), cache.ssm)
+    shared = params["shared_attn"]
+
+    def group_body(carry, xs):
+        x = carry
+        gp, st_g, kl, vl = xs
+        def mamba_body(x, ys):
+            lp, st = ys
+            y, st2 = ssm_mod.mamba2_step(lp, cfg, x, ssm_mod.MambaState(*st),
+                                         compute_dtype=cdt)
+            return y, tuple(st2)
+        x, st_new = jax.lax.scan(mamba_body, x, (gp, tuple(st_g)))
+        a, (kn, vn) = decode_attention_block(
+            shared["attn"], cfg, rms_norm(shared["attn_norm"], x, cfg.norm_eps),
+            (kl, vl), pos, compute_dtype=cdt)
+        x = x + a
+        x = x + swiglu(shared["mlp"], rms_norm(shared["mlp_norm"], x,
+                                               cfg.norm_eps), cdt)
+        return x, (st_new, kn, vn)
+
+    x, (st_new, kn, vn) = jax.lax.scan(
+        group_body, x, (params["mamba_groups"], tuple(sg),
+                        cache.kv["k"], cache.kv["v"]))
+    st_new = ssm_mod.MambaState(*st_new)
+    st_flat = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups * every,) + a.shape[2:]), st_new)
+    if tail:
+        st_tail = jax.tree_util.tree_map(lambda a: a[n_groups * every:],
+                                         cache.ssm)
+        def mamba_body(x, ys):
+            lp, st = ys
+            y, st2 = ssm_mod.mamba2_step(lp, cfg, x, ssm_mod.MambaState(*st),
+                                         compute_dtype=cdt)
+            return y, tuple(st2)
+        x, st_tail_new = jax.lax.scan(mamba_body, x,
+                                      (params["mamba_tail"], tuple(st_tail)))
+        st_flat = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0),
+            st_flat, ssm_mod.MambaState(*st_tail_new))
+    kv = dict(cache.kv, k=kn, v=vn)
+    return x, kv, st_flat
+
+
+def _decode_encdec(params, cfg, x, cache, cdt):
+    pos = cache.pos
+    enc_out = cache.cross["enc_out"]
+
+    def body(carry, xs):
+        x = carry
+        lp, kl, vl, ck, cv = xs
+        a, (kn, vn) = decode_attention_block(
+            lp["self_attn"], cfg, rms_norm(lp["self_norm"], x, cfg.norm_eps),
+            (kl, vl), pos, compute_dtype=cdt)
+        x = x + a
+        # cross attention against precomputed cross KV (no rope, not causal)
+        from repro.models.attention import chunked_attention
+        from repro.models.layers import dense
+        B = x.shape[0]
+        hd = cfg.head_dim
+        xq = rms_norm(lp["cross_norm"], x, cfg.norm_eps)
+        q = dense(lp["cross_attn"]["q"], xq, cdt).reshape(B, 1, cfg.num_heads, hd)
+        c = chunked_attention(q, ck, cv, causal=False)
+        c = dense(lp["cross_attn"]["o"], c.reshape(B, 1, cfg.num_heads * hd), cdt)
+        x = x + c
+        x = x + swiglu(lp["mlp"], rms_norm(lp["mlp_norm"], x, cfg.norm_eps), cdt)
+        return x, (kn, vn)
+
+    x, (kn, vn) = jax.lax.scan(
+        body, x, (params["decoder"], cache.kv["k"], cache.kv["v"],
+                  cache.cross["k"], cache.cross["v"]))
+    kv = dict(cache.kv, k=kn, v=vn)
+    return x, kv
+
+
+def prefill(params, cfg: ModelConfig, batch, *, max_len: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Cache]:
+    """Encode the prompt, build the cache, return last-token logits.
+
+    For attention families this materialises the KV cache from the full
+    forward; for SSM/hybrid families it runs the chunked form with
+    ``return_state`` and keeps only the state (O(1) memory in S).
+    """
+    cdt = _cdtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_len = max_len or S
+    cache = init_cache(cfg, B, max_len)
+    fam = cfg.family
+    x = embed(params["embed"], tokens, cdt)
+    positions = (jnp.broadcast_to(jnp.arange(S), (3, B, S))
+                 if cfg.mrope_sections else
+                 jnp.broadcast_to(jnp.arange(S), (B, S)))
+
+    if fam in ("dense", "moe"):
+        kv = cache.kv
+        slots = int(kv["k"].shape[2])
+        if cfg.num_experts and cfg.moe_every > 1:
+            x, kn, vn = _prefill_grouped_moe(params, cfg, x, positions, slots, cdt)
+        else:
+            is_moe = bool(cfg.num_experts)
+            def body(x, lp):
+                h = rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+                a, (k, v) = attention_block(lp["attn"], cfg, h, positions,
+                                            compute_dtype=cdt)
+                x = x + a
+                h2 = rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+                m = (moe_block(lp["mlp"], cfg, h2, compute_dtype=cdt)[0]
+                     if is_moe else swiglu(lp["mlp"], h2, cdt))
+                return x + m, _cache_fit(k, v, slots)
+            x, (kn, vn) = jax.lax.scan(body, x, params["layers"])
+        cache = cache._replace(kv=dict(kv, k=kn.astype(kv["k"].dtype),
+                                       v=vn.astype(kv["v"].dtype)))
+    elif fam == "ssm":
+        x, states = _prefill_rwkv(params, cfg, x, cdt)
+        cache = cache._replace(ssm=states)
+    elif fam == "hybrid":
+        x, states, kv = _prefill_hybrid(params, cfg, x, positions, cache, cdt)
+        cache = cache._replace(ssm=states, kv=kv)
+    elif fam == "encdec":
+        enc_out = _encode(params, cfg, batch["src_embeds"], remat="none")
+        x, kv, cross = _prefill_encdec(params, cfg, x, positions, enc_out, cdt)
+        cache = cache._replace(kv=dict(cache.kv, **kv), cross=cross)
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["lm_head"]["table"]
+    logits = unembed({"table": table}, x, logit_scale=cfg.logit_scale,
+                     compute_dtype=cdt)[:, 0]
+    cache = cache._replace(pos=jnp.full((B,), S, jnp.int32))
+    return logits.astype(jnp.float32), cache
+
+
+def _cache_fit(k, v, slots):
+    """Keep the last ``slots`` positions, rolled so absolute position ``p``
+    lands in ring slot ``p % slots`` (decode overwrites the oldest entry)."""
+    S = k.shape[1]
+    if S <= slots:
+        return k, v
+    shift = S % slots
+    return (jnp.roll(k[:, -slots:], shift, axis=1),
+            jnp.roll(v[:, -slots:], shift, axis=1))
+
+
+def _prefill_grouped_moe(params, cfg, x, positions, slots, cdt):
+    def group_body(x, gp):
+        def dense_body(x, lp):
+            h = rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+            a, (k, v) = attention_block(lp["attn"], cfg, h, positions,
+                                        compute_dtype=cdt)
+            x = x + a
+            m = swiglu(lp["mlp"], rms_norm(lp["mlp_norm"], x, cfg.norm_eps), cdt)
+            return x + m, _cache_fit(k, v, slots)
+        x, (kd, vd) = jax.lax.scan(dense_body, x, gp["dense"])
+        lp = gp["moe"]
+        h = rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        a, (k, v) = attention_block(lp["attn"], cfg, h, positions,
+                                    compute_dtype=cdt)
+        x = x + a
+        m, _ = moe_block(lp["mlp"], cfg,
+                         rms_norm(lp["mlp_norm"], x, cfg.norm_eps),
+                         compute_dtype=cdt)
+        x = x + m
+        kf, vf = _cache_fit(k, v, slots)
+        return x, (jnp.concatenate([kd, kf[None]], 0),
+                   jnp.concatenate([vd, vf[None]], 0))
+    x, (kg, vg) = jax.lax.scan(group_body, x, params["groups"])
+    L = cfg.num_layers
+    kn = kg.reshape((L,) + kg.shape[2:])
+    vn = vg.reshape((L,) + vg.shape[2:])
+    return x, kn, vn
+
+
+def _prefill_rwkv(params, cfg, x, cdt):
+    def body(x, lp):
+        xn = x
+        from repro.models.layers import layer_norm
+        h = layer_norm(lp["ln1"], xn, cfg.norm_eps)
+        tm, S = ssm_mod.rwkv6_time_mix(lp, cfg, h, return_state=True,
+                                       compute_dtype=cdt)
+        x = x + tm
+        h2 = layer_norm(lp["ln2"], x, cfg.norm_eps)
+        x = x + ssm_mod.rwkv6_channel_mix(lp, cfg, h2, compute_dtype=cdt)
+        st = ssm_mod.RWKVState(S=S, tm_prev=h[:, -1].astype(jnp.float32),
+                               cm_prev=h2[:, -1].astype(jnp.float32))
+        return x, tuple(st)
+    x, states = jax.lax.scan(body, x, params["layers"])
+    return x, ssm_mod.RWKVState(*states)
+
+
+def _prefill_hybrid(params, cfg, x, positions, cache, cdt):
+    every = cfg.shared_attn_every or cfg.num_layers
+    n_groups = cfg.num_layers // every
+    tail = cfg.num_layers - n_groups * every
+    shared = params["shared_attn"]
+    slots = int(cache.kv["k"].shape[2])
+
+    def mamba_state_body(x, lp):
+        from repro.models.layers import rms_norm as rn
+        xn = rn(lp["norm"], x, cfg.norm_eps)
+        z, xbc, dt_raw = ssm_mod._mamba2_project(lp, cfg, xn, cdt)
+        xbc_conv, conv_ctx = ssm_mod._causal_conv(xbc, lp["conv_w"], lp["conv_b"])
+        xh, dt, Bs, Cs = ssm_mod._mamba2_ssm_inputs(lp, cfg, xbc_conv, dt_raw)
+        A = jnp.exp(lp["A_log"].astype(jnp.float32))
+        y, S = ssm_mod.ssd_chunked(xh, dt, A, Bs, Cs, lp["D"],
+                                   return_state=True)
+        y = y.reshape(x.shape[0], x.shape[1], cfg.d_inner)
+        y = rn(lp["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+        from repro.models.layers import dense
+        out = x + dense(lp["out_proj"], y.astype(cdt), cdt)
+        st = ssm_mod.MambaState(S=S, conv=xbc[:, -(cfg.ssm_conv - 1):]
+                                .astype(jnp.float32))
+        return out, tuple(st)
+
+    def group_body(x, xs):
+        gp = xs
+        x, st = jax.lax.scan(mamba_state_body, x, gp)
+        h = rms_norm(shared["attn_norm"], x, cfg.norm_eps)
+        a, (k, v) = attention_block(shared["attn"], cfg, h, positions,
+                                    compute_dtype=cdt)
+        x = x + a
+        x = x + swiglu(shared["mlp"], rms_norm(shared["mlp_norm"], x,
+                                               cfg.norm_eps), cdt)
+        kf, vf = _cache_fit(k, v, slots)
+        return x, (st, kf, vf)
+
+    x, (st_g, kn, vn) = jax.lax.scan(group_body, x, params["mamba_groups"])
+    st_flat = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups * every,) + a.shape[2:]),
+        ssm_mod.MambaState(*st_g))
+    if tail:
+        x, st_t = jax.lax.scan(mamba_state_body, x, params["mamba_tail"])
+        st_flat = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], 0), st_flat,
+            ssm_mod.MambaState(*st_t))
+    kv = dict(cache.kv, k=kn.astype(cache.kv["k"].dtype),
+              v=vn.astype(cache.kv["v"].dtype))
+    return x, st_flat, kv
+
+
+def _prefill_encdec(params, cfg, x, positions, enc_out, cdt):
+    def body(x, lp):
+        h = rms_norm(lp["self_norm"], x, cfg.norm_eps)
+        a, (k, v) = attention_block(lp["self_attn"], cfg, h, positions,
+                                    compute_dtype=cdt)
+        x = x + a
+        hc = rms_norm(lp["cross_norm"], x, cfg.norm_eps)
+        c, (ck, cv) = attention_block(lp["cross_attn"], cfg, hc, positions,
+                                      kv=enc_out, compute_dtype=cdt)
+        x = x + c
+        x = x + swiglu(lp["mlp"], rms_norm(lp["mlp_norm"], x, cfg.norm_eps), cdt)
+        return x, (k, v, ck, cv)
+    x, (kn, vn, ckn, cvn) = jax.lax.scan(body, x, params["decoder"])
+    kv = {"k": kn, "v": vn}
+    cross = {"k": ckn, "v": cvn, "enc_out": enc_out}
+    return x, kv, cross

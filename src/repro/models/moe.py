@@ -1,0 +1,139 @@
+"""Mixture-of-Experts block with sort-based, capacity-bounded dispatch.
+
+Design constraints (in order):
+  1. expert-parallel shardable under GSPMD: experts (and their dispatch
+     buffers) shard over the ``model`` axis, tokens over ``data``;
+  2. no (T, E, C) one-hot dispatch tensors (they explode at 1M tokens);
+  3. dispatch is *per sequence* (vmapped over batch) so the sort never
+     crosses the data-sharded batch axis — the only collective GSPMD must
+     insert is the final combine all-reduce over ``model``.
+
+This is the AMU gather pattern (repro.core.patterns.GatherPattern) at
+model scale: expert dispatch is an indexed gather whose granularity is
+the expert capacity slot, and the Pallas `moe_gather` kernel implements
+the same slot layout at tile level.
+
+Dropping semantics: per (sequence, expert) capacity
+``C = ceil(S·k/E · capacity_factor)``; pairs beyond C are dropped (their
+gate mass is simply not added — standard Switch behaviour).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = ["moe_init", "moe_block", "expert_capacity"]
+
+
+def expert_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    pairs = seq_len * cfg.experts_per_token
+    return max(1, math.ceil(pairs / cfg.num_experts * cfg.capacity_factor))
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(kr, d, E, dtype=dtype, scale=scale),
+        "gate": jax.random.normal(kg, (E, d, ff), dtype) * scale,
+        "up": jax.random.normal(ku, (E, d, ff), dtype) * scale,
+        "down": jax.random.normal(kd, (E, ff, d), dtype) / math.sqrt(ff),
+    }
+    if cfg.shared_expert:
+        from repro.models.layers import swiglu_init
+        p["shared"] = swiglu_init(ks, d, ff, dtype)
+    return p
+
+
+def _dispatch_indices(sorted_e: jnp.ndarray, E: int, C: int):
+    """Per-row slot assignment for pairs sorted by expert id.
+
+    sorted_e: (P,) int32 ascending expert ids.  Returns (slot, keep):
+    slot in [0, E*C) for kept pairs; dropped pairs get slot E*C.
+    """
+    P = sorted_e.shape[0]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")  # (E,)
+    rank = jnp.arange(P) - starts[sorted_e]
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)
+    return slot, keep
+
+
+def moe_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                  # (B, S, d)
+    *,
+    capacity: Optional[int] = None,
+    compute_dtype=jnp.bfloat16,
+    renorm_gates: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (B,S,d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = capacity or expert_capacity(cfg, S)
+    P = S * k
+
+    xc = x.astype(compute_dtype)
+    # -- routing (fp32 for stability) ---------------------------------------
+    logits = (x.astype(jnp.float32) @ p["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B, S, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)            # (B, S, k)
+    if renorm_gates:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # -- aux load-balancing loss (Switch): E * sum_e f_e * P_e ----------------
+    pair_onehot_frac = jnp.zeros((B, E), jnp.float32)
+    flat_ids = expert_ids.reshape(B, P)
+    pair_onehot_frac = jax.vmap(
+        lambda ids: jnp.zeros((E,), jnp.float32).at[ids].add(1.0))(flat_ids)
+    f_e = pair_onehot_frac / P                                  # (B, E)
+    p_e = probs.mean(axis=1)                                    # (B, E)
+    aux = cfg.router_aux_coef * E * jnp.mean(jnp.sum(f_e * p_e, axis=-1))
+
+    # -- sort-based dispatch, vmapped over batch rows -------------------------
+    pair_tok = jnp.repeat(jnp.arange(S), k)                     # (P,)
+    flat_gates = gate_vals.reshape(B, P)
+
+    def dispatch_row(xr, ids, gates):
+        # xr: (S, d); ids/gates: (P,)
+        order = jnp.argsort(ids)
+        se, st, sg = ids[order], pair_tok[order], gates[order]
+        slot, keep = _dispatch_indices(se, E, C)
+        gathered = xr[st] * keep[:, None].astype(xr.dtype)       # (P, d)
+        buf = jnp.zeros((E * C + 1, d), xr.dtype).at[slot].set(gathered)
+        return buf[:-1].reshape(E, C, d), (slot, keep, st, sg)
+
+    buf, (slot, keep, st, sg) = jax.vmap(dispatch_row)(
+        xc, flat_ids, flat_gates)                                # buf (B,E,C,d)
+
+    # -- expert FFN (einsum over stacked expert weights; E shards over model) --
+    g = jnp.einsum("becd,edf->becf", buf, p["gate"].astype(compute_dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["up"].astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    eo = jnp.einsum("becf,efd->becd", h, p["down"].astype(compute_dtype))
+
+    # -- combine: gather back by slot, weight by gate, scatter-add to tokens ---
+    def combine_row(eor, slot, keep, st, sg):
+        flat = eor.reshape(E * C, d)
+        y = flat[jnp.minimum(slot, E * C - 1)]                   # (P, d)
+        y = y * (sg * keep)[:, None].astype(y.dtype)
+        return jnp.zeros((S, d), y.dtype).at[st].add(y)
+
+    out = jax.vmap(combine_row)(eo, slot, keep, st, sg)          # (B, S, d)
+
+    if cfg.shared_expert:
+        from repro.models.layers import swiglu
+        out = out + swiglu(p["shared"], xc, compute_dtype)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,500 @@
+"""Linear-recurrence blocks: RWKV6 ("Finch") and Mamba2 (SSD).
+
+Both blocks stream a fixed-size recurrent state over the sequence — the
+AMU stream pattern at model level (state stays in SPM/VMEM, token chunks
+stream through).  Each has three forms:
+
+  * ``*_sequential`` — O(T) scan over single tokens: the oracle,
+  * ``*_chunked``    — chunked parallel form used for train/prefill
+    (intra-chunk pairwise decay einsum + inter-chunk state scan);
+    numerically safe because pairwise exponents ``W_t - W_s (s<=t)`` are
+    always <= 0,
+  * ``*_step``       — one-token decode carrying (state, shift/conv state).
+
+The Pallas kernels in ``repro/kernels/{rwkv6,mamba2}.py`` implement the
+chunked forms with explicit VMEM tiling; these jnp versions are their
+oracles and the XLA lowering path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (dense, dense_init, layer_norm,
+                                 layer_norm_init, rms_norm)
+
+Params = Dict[str, jnp.ndarray]
+
+__all__ = [
+    "rwkv6_init", "rwkv6_time_mix", "rwkv6_channel_mix", "rwkv6_block",
+    "rwkv6_step", "rwkv6_state_init",
+    "mamba2_init", "mamba2_block", "mamba2_step", "mamba2_state_init",
+    "wkv6_chunked", "wkv6_sequential", "ssd_chunked", "ssd_sequential",
+]
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+def rwkv6_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    H, K = cfg.num_heads, cfg.head_dim
+    lora = 64
+    keys = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "ln1": layer_norm_init(d, dtype),
+        "ln2": layer_norm_init(d, dtype),
+        # token-shift lerp coefficients
+        "mu": {n: jnp.full((d,), 0.5, dtype) for n in ("r", "k", "v", "g", "w")},
+        "Wr": dense_init(keys[0], d, H * K, dtype=dtype),
+        "Wk": dense_init(keys[1], d, H * K, dtype=dtype),
+        "Wv": dense_init(keys[2], d, H * K, dtype=dtype),
+        "Wg": dense_init(keys[3], d, H * K, dtype=dtype),
+        "Wo": dense_init(keys[4], H * K, d, dtype=dtype),
+        # data-dependent decay: w_t = -exp(w0 + tanh(x A) B)
+        "w0": jnp.full((H * K,), -2.0, dtype),
+        "wA": jax.random.normal(keys[5], (d, lora), dtype) * s * 0.1,
+        "wB": jax.random.normal(keys[6], (lora, H * K), dtype) * 0.01,
+        "u": jax.random.normal(keys[7], (H, K), dtype) * 0.1,   # bonus
+        "gn": {"scale": jnp.ones((H, K), dtype), "bias": jnp.zeros((H, K), dtype)},
+        # channel mix
+        "cm_mu": {n: jnp.full((d,), 0.5, dtype) for n in ("k", "r")},
+        "cWk": dense_init(keys[8], d, ff, dtype=dtype),
+        "cWv": dense_init(keys[9], ff, d, dtype=dtype),
+        "cWr": dense_init(keys[10], d, d, dtype=dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, x_prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x_{t-1} with x_prev (B, d) filling t=0 (zeros if None)."""
+    B, T, d = x.shape
+    first = (jnp.zeros((B, 1, d), x.dtype) if x_prev is None
+             else x_prev[:, None].astype(x.dtype))
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def wkv6_sequential(r, k, v, w, u):
+    """Oracle WKV6: per-head recurrence.
+
+    r,k,w: (B,T,H,K); v: (B,T,H,V); u: (H,K); w = log-decay (<=0).
+    Returns o: (B,T,H,V).  o_t = S_{t-1}^T r_t + (r_t . (u*k_t)) v_t;
+    S_t = diag(e^{w_t}) S_{t-1} + k_t v_t^T.
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # (B,H,K)/(B,H,V)
+        o = jnp.einsum("bhkv,bhk->bhv", S, rt)
+        o = o + jnp.einsum("bhk,bhk->bh", rt, uf * kt)[..., None] * vt
+        S = jnp.exp(wt)[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S, o
+
+    S0 = jnp.zeros((B, H, K, V), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    _, o = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype)
+
+
+#: factorized mode clamps in-chunk cumulative log-decay at -_WKV_CLAMP:
+#: contributions decayed below e^-20 are numerically zero anyway, and the
+#: clamp keeps exp(-W) <= e^20 (safe in f32 AND bf16).
+_WKV_CLAMP = 20.0
+
+
+def wkv6_chunked(r, k, v, w, u, *, chunk: int = 64,
+                 initial_state: Optional[jnp.ndarray] = None,
+                 return_state: bool = False,
+                 mode: str = "pairwise",
+                 operand_dtype=None):
+    """Chunked WKV6 (GLA-style): intra-chunk decay + state scan.
+
+    ``mode``:
+      * ``"pairwise"``  — materialises the exact (c, c, K) pairwise decay
+        tensor (paper-faithful baseline; always stable since exponents
+        are <= 0),
+      * ``"factorized"``— att = (r * e^{W_prev}) @ (k * e^{-W})^T with the
+        exponent clamped at ``_WKV_CLAMP``: two MXU matmuls, no (c,c,K)
+        tensor — ~K x less intra-chunk HBM traffic.  Error bounded by
+        dropping contributions decayed below e^-20.
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    c = min(chunk, T)
+    if T % c:
+        pad = c - T % c
+        r, k, v, w = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                      for a in (r, k, v, w))
+    else:
+        pad = 0
+    Tp = T + pad
+    n = Tp // c
+    opd = operand_dtype or jnp.float32      # matmul operand dtype
+    rf, kf, vf = (a.astype(opd).reshape(B, n, c, H, -1)
+                  .transpose(1, 0, 2, 3, 4) for a in (r, k, v))
+    # the decay path stays f32: cumsum+exp precision sets state fidelity
+    wf = w.astype(jnp.float32).reshape(B, n, c, H, -1).transpose(1, 0, 2, 3, 4)
+    uf = u.astype(jnp.float32)
+
+    def per_chunk(S, xs):
+        rc, kc, vc, wc = xs                       # (B,c,H,K|V); wc is f32
+        Wc = jnp.cumsum(wc, axis=1)               # inclusive cumulative log decay
+        # inter-chunk: o_t += (r_t * e^{W_{t-1}}) . S_in  (decay through t-1)
+        # S_{t-1} = e^{W_{t-1}} applied to S_in + intra terms; W_{t-1} = Wc - wc
+        decay_q = jnp.exp(Wc - wc).astype(opd)    # e^{W_{t-1}} <= 1
+        o_inter = jnp.einsum("bthk,bhkv->bthv", rc * decay_q, S,
+                             preferred_element_type=jnp.float32)
+        mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+        if mode == "factorized":
+            # att[t,s] = sum_k (r e^{Wprev})_t (k e^{-W})_s — two matmuls,
+            # exponent clamped so e^{-W} stays finite (even in bf16)
+            rp = rc * jnp.exp(jnp.maximum(Wc - wc, -_WKV_CLAMP)).astype(opd)
+            kp = kc * jnp.exp(-jnp.maximum(Wc, -_WKV_CLAMP)).astype(opd)
+            att = jnp.einsum("bthk,bshk->btsh", rp, kp,
+                             preferred_element_type=jnp.float32)
+            att = att * mask[None, :, :, None]
+        else:
+            # intra-chunk pairwise: s < t strictly; decay e^{W_{t-1} - W_s}
+            pair = (Wc - wc)[:, :, None] - Wc[:, None, :, :]   # (B,t,s,H,K)
+            pairdec = (jnp.exp(jnp.minimum(pair, 0.0))
+                       * mask[None, :, :, None, None]).astype(opd)
+            att = jnp.einsum("bthk,btshk,bshk->btsh", rc, pairdec, kc,
+                             preferred_element_type=jnp.float32)
+        o_intra = jnp.einsum("btsh,bshv->bthv", att.astype(opd), vc,
+                             preferred_element_type=jnp.float32)
+        # bonus diagonal s = t
+        o_diag = jnp.einsum("bthk,bthk->bth", rc, uf.astype(opd) * kc,
+                            preferred_element_type=jnp.float32)[..., None] \
+            * vc.astype(jnp.float32)
+        # state update: S_out = e^{W_last} S + sum_s e^{W_last - W_s} k_s v_s^T
+        Wl = Wc[:, -1][:, None]                   # (B,1,H,K)
+        kdec = kc * jnp.exp(Wl - Wc).astype(opd)
+        S = jnp.exp(Wl[:, 0])[..., None] * S + jnp.einsum(
+            "bshk,bshv->bhkv", kdec, vc, preferred_element_type=jnp.float32)
+        return S, o_inter + o_intra + o_diag
+
+    S0 = (jnp.zeros((B, H, K, V), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    S, o = jax.lax.scan(per_chunk, S0, (rf, kf, vf, wf))
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, V)[:, :T]
+    o = o.astype(r.dtype)
+    return (o, S) if return_state else o
+
+
+def _rwkv6_rkvgw(p: Params, cfg: ModelConfig, x, xx, compute_dtype):
+    B, T, d = x.shape
+    H, K = cfg.num_heads, cfg.head_dim
+    r = dense(p["Wr"], _lerp(x, xx, p["mu"]["r"]), compute_dtype).reshape(B, T, H, K)
+    k = dense(p["Wk"], _lerp(x, xx, p["mu"]["k"]), compute_dtype).reshape(B, T, H, K)
+    v = dense(p["Wv"], _lerp(x, xx, p["mu"]["v"]), compute_dtype).reshape(B, T, H, K)
+    g = dense(p["Wg"], _lerp(x, xx, p["mu"]["g"]), compute_dtype)
+    xw = _lerp(x, xx, p["mu"]["w"]).astype(jnp.float32)
+    wlog = -jnp.exp(p["w0"].astype(jnp.float32)
+                    + jnp.tanh(xw @ p["wA"].astype(jnp.float32))
+                    @ p["wB"].astype(jnp.float32))
+    w = wlog.reshape(B, T, H, K)
+    return r, k, v, g, w
+
+
+def _group_norm(gn: Params, o: jnp.ndarray, eps: float) -> jnp.ndarray:
+    # o: (B,T,H,K) — per-head layer norm
+    dtype = o.dtype
+    of = o.astype(jnp.float32)
+    mu = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    y = (of - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gn["scale"] + gn["bias"]).astype(dtype)
+
+
+def rwkv6_time_mix(p, cfg, x, *, x_prev=None, state=None, chunk=64,
+                   return_state=False, compute_dtype=jnp.bfloat16):
+    from repro.dist import act_sharding as acts
+    B, T, d = x.shape
+    H, K = cfg.num_heads, cfg.head_dim
+    xx = _token_shift(x, x_prev)
+    r, k, v, g, w = _rwkv6_rkvgw(p, cfg, x, xx, compute_dtype)
+    pol = acts.current()
+    mode = "factorized" if pol.ssm_factorized else "pairwise"
+    if pol.ssm_head_shard:
+        sizes = acts._mesh_axis_sizes() or {}
+        m = sizes.get(pol.model_axis, 1)
+        if m > 1 and H % m == 0:
+            dp = acts.dp_spec_prefix()
+            spec = jax.sharding.PartitionSpec(dp, None, pol.model_axis, None)
+            r, k, v, w = (acts.constrain(a, spec) for a in (r, k, v, w))
+    opd = compute_dtype if pol.native_dtype else None
+    if return_state:
+        o, S = wkv6_chunked(r, k, v, w, p["u"], chunk=chunk,
+                            initial_state=state, return_state=True, mode=mode,
+                            operand_dtype=opd)
+    else:
+        o = wkv6_chunked(r, k, v, w, p["u"], chunk=chunk, initial_state=state,
+                         mode=mode, operand_dtype=opd)
+        S = None
+    o = _group_norm(p["gn"], o, cfg.norm_eps).reshape(B, T, H * K)
+    out = dense(p["Wo"], o.astype(compute_dtype) * jax.nn.silu(g), compute_dtype)
+    return (out, S) if return_state else out
+
+
+def rwkv6_channel_mix(p, cfg, x, *, x_prev=None, compute_dtype=jnp.bfloat16):
+    from repro.dist import act_sharding as acts
+    xx = _token_shift(x, x_prev)
+    kx = _lerp(x, xx, p["cm_mu"]["k"])
+    rx = _lerp(x, xx, p["cm_mu"]["r"])
+    kk = jnp.square(jax.nn.relu(dense(p["cWk"], kx, compute_dtype)))
+    pol = acts.current()
+    if pol.ssm_head_shard and x.shape[1] > 1:
+        # keep the ff-wide intermediate column-sharded through backward
+        # (full-sequence path only: on a 1-token decode the constraint
+        # just adds a reshard)
+        kk = acts.constrain(kk, jax.sharding.PartitionSpec(
+            acts.dp_spec_prefix(), None, pol.model_axis))
+    return jax.nn.sigmoid(dense(p["cWr"], rx, compute_dtype)) * \
+        dense(p["cWv"], kk, compute_dtype)
+
+
+def rwkv6_block(p, cfg, x, *, compute_dtype=jnp.bfloat16):
+    """Full-sequence RWKV6 layer (train/prefill)."""
+    from repro.dist import act_sharding as acts
+    rspec = acts.residual_spec(x.shape[1])
+    if rspec is not None:
+        x = acts.constrain(x, rspec)
+    x = x + rwkv6_time_mix(p, cfg, layer_norm(p["ln1"], x, cfg.norm_eps),
+                           compute_dtype=compute_dtype)
+    x = x + rwkv6_channel_mix(p, cfg, layer_norm(p["ln2"], x, cfg.norm_eps),
+                              compute_dtype=compute_dtype)
+    if rspec is not None:
+        x = acts.constrain(x, rspec)
+    return x
+
+
+class RWKVState(NamedTuple):
+    S: jnp.ndarray          # (B, H, K, V) wkv state
+    tm_prev: jnp.ndarray    # (B, d) last input to time mix
+    cm_prev: jnp.ndarray    # (B, d) last input to channel mix
+
+
+def rwkv6_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RWKVState:
+    H, K = cfg.num_heads, cfg.head_dim
+    return RWKVState(
+        S=jnp.zeros((batch, H, K, K), jnp.float32),
+        tm_prev=jnp.zeros((batch, cfg.d_model), dtype),
+        cm_prev=jnp.zeros((batch, cfg.d_model), dtype),
+    )
+
+
+def rwkv6_step(p, cfg, x, state: RWKVState, *, compute_dtype=jnp.bfloat16):
+    """One-token decode.  x: (B, 1, d)."""
+    B = x.shape[0]
+    H, K = cfg.num_heads, cfg.head_dim
+    xn = layer_norm(p["ln1"], x, cfg.norm_eps)
+    xx = state.tm_prev[:, None].astype(xn.dtype)
+    r, k, v, g, w = _rwkv6_rkvgw(p, cfg, xn, xx, compute_dtype)
+    rt, kt, vt, wt = (a[:, 0].astype(jnp.float32) for a in (r, k, v, w))
+    S = state.S
+    o = jnp.einsum("bhkv,bhk->bhv", S, rt)
+    o = o + jnp.einsum("bhk,bhk->bh", rt, p["u"].astype(jnp.float32) * kt)[..., None] * vt
+    S = jnp.exp(wt)[..., None] * S + kt[..., None] * vt[..., None, :]
+    o = _group_norm(p["gn"], o[:, None], cfg.norm_eps).reshape(B, 1, H * K)
+    x = x + dense(p["Wo"], o.astype(compute_dtype) * jax.nn.silu(g), compute_dtype)
+    xn2 = layer_norm(p["ln2"], x, cfg.norm_eps)
+    x = x + rwkv6_channel_mix(p, cfg, xn2, x_prev=state.cm_prev,
+                              compute_dtype=compute_dtype)
+    new_state = RWKVState(S=S, tm_prev=xn[:, 0].astype(state.tm_prev.dtype),
+                          cm_prev=xn2[:, 0].astype(state.cm_prev.dtype))
+    return x, new_state
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    P = cfg.head_dim
+    H = di // P
+    conv_dim = di + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "norm": {"scale": jnp.ones((d,), dtype)},
+        "in_proj": dense_init(k1, d, 2 * di + 2 * N + H, dtype=dtype),
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "gate_norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": dense_init(k3, di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 conv_state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv.  x: (B,T,C); w: (W,C).  Returns (y, new_state)."""
+    W = w.shape[0]
+    if conv_state is None:
+        ctx = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    new_state = ctx[:, -(W - 1):] if W > 1 else None
+    return y, new_state
+
+
+def ssd_sequential(x, dt, A, B, C, D):
+    """Oracle SSD.  x:(B,T,H,P) dt:(B,T,H) A:(H,) B,C:(B,T,N).
+
+    S_t = e^{-A dt_t} S_{t-1} + dt_t B_t x_t^T; y_t = C_t^T S_t + D x_t.
+    """
+    Bb, T, H, P = x.shape
+    N = B.shape[-1]
+    xf, dtf, Bf, Cf = (a.astype(jnp.float32) for a in (x, dt, B, C))
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def step(S, xs):
+        xt, dtt, Bt, Ct = xs
+        a = jnp.exp(-Af * dtt)                        # (B,H)
+        S = a[..., None, None] * S + jnp.einsum(
+            "bn,bhp,bh->bhnp", Bt, xt, dtt)
+        y = jnp.einsum("bn,bhnp->bhp", Ct, S) + Df[:, None] * xt
+        return S, y
+
+    S0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xf, dtf, Bf, Cf))
+    S, y = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(y, 0, 1).astype(x.dtype), S
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int = 128,
+                initial_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """Chunked SSD: scalar per-head decay -> cheap pairwise (T_c x T_c) masks."""
+    Bb, T, H, P = x.shape
+    N = B.shape[-1]
+    c = min(chunk, T)
+    pad = (-T) % c
+    if pad:
+        x, dt, B, C = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+                       for a in (x, dt, B, C))
+    Tp = T + pad
+    n = Tp // c
+    xf = x.astype(jnp.float32).reshape(Bb, n, c, H, P).transpose(1, 0, 2, 3, 4)
+    dtf = dt.astype(jnp.float32).reshape(Bb, n, c, H).transpose(1, 0, 2, 3)
+    Bf = B.astype(jnp.float32).reshape(Bb, n, c, N).transpose(1, 0, 2, 3)
+    Cf = C.astype(jnp.float32).reshape(Bb, n, c, N).transpose(1, 0, 2, 3)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def per_chunk(S, xs):
+        xc, dtc, Bc, Cc = xs                      # (B,c,H,P)/(B,c,H)/(B,c,N)
+        dA = -Af * dtc                            # log decay (B,c,H)
+        L = jnp.cumsum(dA, axis=1)                # inclusive
+        o_inter = jnp.einsum("btn,bhnp->bthp", Cc, S) * jnp.exp(L)[..., None]
+        # pairwise s <= t: decay exp(L_t - L_s) * dt_s (B,t,s,H)
+        pair = L[:, :, None] - L[:, None, :, :]
+        mask = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+        G = jnp.exp(jnp.minimum(pair, 0.0)) * mask[None, :, :, None]
+        CB = jnp.einsum("btn,bsn->bts", Cc, Bc)
+        M = CB[..., None] * G * dtc[:, None]      # (B,t,s,H)
+        o_intra = jnp.einsum("btsh,bshp->bthp", M, xc)
+        # state update
+        Ll = L[:, -1]                             # (B,H)
+        kdec = jnp.exp(Ll[:, None] - L) * dtc     # (B,c,H)
+        S = jnp.exp(Ll)[..., None, None] * S + jnp.einsum(
+            "bsn,bshp,bsh->bhnp", Bc, xc, kdec)
+        return S, o_inter + o_intra + Df[:, None] * xc
+
+    S0 = (jnp.zeros((Bb, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    S, y = jax.lax.scan(per_chunk, S0, (xf, dtf, Bf, Cf))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(Bb, Tp, H, P)[:, :T].astype(x.dtype)
+    return (y, S) if return_state else y
+
+
+def _mamba2_project(p, cfg, xn, compute_dtype):
+    di, N = cfg.d_inner, cfg.ssm_state
+    H = di // cfg.head_dim
+    zxbcdt = dense(p["in_proj"], xn, compute_dtype)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _mamba2_ssm_inputs(p, cfg, xbc_conv, dt_raw):
+    di, N = cfg.d_inner, cfg.ssm_state
+    P = cfg.head_dim
+    H = di // P
+    xs, Bs, Cs = jnp.split(xbc_conv, [di, di + N], axis=-1)
+    Bsh, Tsh = xs.shape[0], xs.shape[1]
+    xh = xs.reshape(Bsh, Tsh, H, P)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return xh, dt, Bs, Cs
+
+
+def mamba2_block(p, cfg, x, *, chunk: int = 128, compute_dtype=jnp.bfloat16):
+    """Full-sequence Mamba2 layer with residual."""
+
+    B, T, d = x.shape
+    di = cfg.d_inner
+    xn = rms_norm(p["norm"], x, cfg.norm_eps)
+    z, xbc, dt_raw = _mamba2_project(p, cfg, xn, compute_dtype)
+    xbc_conv, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xh, dt, Bs, Cs = _mamba2_ssm_inputs(p, cfg, xbc_conv, dt_raw)
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    y = ssd_chunked(xh, dt, A, Bs, Cs, p["D"], chunk=chunk)
+    y = y.reshape(B, T, di)
+    y = rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return x + dense(p["out_proj"], y.astype(compute_dtype), compute_dtype)
+
+
+class MambaState(NamedTuple):
+    S: jnp.ndarray            # (B, H, N, P)
+    conv: jnp.ndarray         # (B, W-1, conv_dim)
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int) -> MambaState:
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.head_dim
+    H = di // P
+    return MambaState(
+        S=jnp.zeros((batch, H, N, P), jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), jnp.float32),
+    )
+
+
+def mamba2_step(p, cfg, x, state: MambaState, *, compute_dtype=jnp.bfloat16):
+    """One-token decode.  x: (B,1,d)."""
+
+    B = x.shape[0]
+    di, N, P = cfg.d_inner, cfg.ssm_state, cfg.head_dim
+    H = di // P
+    xn = rms_norm(p["norm"], x, cfg.norm_eps)
+    z, xbc, dt_raw = _mamba2_project(p, cfg, xn, compute_dtype)
+    xbc_conv, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                      conv_state=state.conv)
+    xh, dt, Bs, Cs = _mamba2_ssm_inputs(p, cfg, xbc_conv, dt_raw)
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    xt, dtt, Bt, Ct = xh[:, 0].astype(jnp.float32), dt[:, 0], \
+        Bs[:, 0].astype(jnp.float32), Cs[:, 0].astype(jnp.float32)
+    a = jnp.exp(-A * dtt)
+    S = a[..., None, None] * state.S + jnp.einsum("bn,bhp,bh->bhnp", Bt, xt, dtt)
+    y = jnp.einsum("bn,bhnp->bhp", Ct, S) + p["D"].astype(jnp.float32)[:, None] * xt
+    y = y.reshape(B, 1, di)
+    y = rms_norm(p["gate_norm"], y.astype(compute_dtype) * jax.nn.silu(z),
+                 cfg.norm_eps)
+    out = x + dense(p["out_proj"], y.astype(compute_dtype), compute_dtype)
+    return out, MambaState(S=S, conv=new_conv.astype(state.conv.dtype))

@@ -1,0 +1,85 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule.
+
+Pure-pytree implementation (no optax in this environment).  The moment
+tensors are stored fp32 and are ZeRO-1 shardable: ``dist/zero.py`` assigns
+them shardings over the ``data`` axis, and GSPMD turns the update into
+reduce-scatter + all-gather around this arithmetic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+__all__ = ["OptState", "adamw_init", "adamw_update", "lr_schedule",
+           "global_norm"]
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        m=jax.tree_util.tree_map(zeros, params),
+        v=jax.tree_util.tree_map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def lr_schedule(cfg: TrainConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.lr * (step + 1.0) / max(1, cfg.warmup_steps)
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+        cos = 0.5 * cfg.lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+    return fn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(
+    grads, opt_state: OptState, params, cfg: TrainConfig,
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    step = opt_state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.ones(())
+    lr = lr_schedule(cfg)(step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + 1e-8) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state.m)
+    flat_v = treedef.flatten_up_to(opt_state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(m=new_m, v=new_v, step=step), metrics

@@ -1,0 +1,190 @@
+"""Continuous-batching serving engine.
+
+The scheduler is the paper's *event-driven model* (§2.3.2) applied to
+requests instead of cache lines: decode steps are the event loop; new
+requests are admitted into free slots the moment one finishes (no
+drain-the-batch barrier); parked sequences come back from the host KV
+tier via AMU prefetch that overlaps the current decode step.
+
+Decode runs with a *fixed* batch of ``max_batch`` slots (one compiled
+program); per-slot positions (``Cache.pos`` is per-sequence) make the
+mixed-depth batch correct.  Empty slots decode garbage that is simply
+ignored — the standard fixed-shape trade on TPU.
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import (Cache, decode_step, init_cache, prefill)
+from repro.serve.kv_cache import (KVOffloadTier, SlotPool, extract_slot,
+                                  insert_slot)
+
+__all__ = ["Request", "Engine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (plen,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    src_embeds: Optional[np.ndarray] = None   # encdec frontend stub
+    # filled by the engine:
+    generated: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    submitted_t: float = 0.0
+    first_token_t: float = 0.0
+    done_t: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        if len(self.generated) >= self.max_new_tokens:
+            return True
+        return bool(self.generated and self.eos_id is not None
+                    and self.generated[-1] == self.eos_id)
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 4,
+        max_len: int = 256,
+        prefill_buckets: tuple = (32, 64, 128, 256),
+        greedy: bool = True,
+        offload_finished: bool = False,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.buckets = tuple(sorted(b for b in prefill_buckets
+                                    if b <= max_len)) or (max_len,)
+        self.greedy = greedy
+        self.clock = clock
+        self.pool = SlotPool(max_batch)
+        self.cache: Cache = init_cache(cfg, max_batch, max_len)
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}     # slot -> request
+        self.finished: Dict[int, Request] = {}
+        self.kv_tier = KVOffloadTier() if offload_finished else None
+        self._ids = itertools.count()
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(p, cfg, c, t))
+        self._prefills: Dict[int, Any] = {}
+        self.stats = {"steps": 0, "prefills": 0, "admitted": 0}
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None,
+               src_embeds: Optional[np.ndarray] = None) -> int:
+        rid = next(self._ids)
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      src_embeds=src_embeds, submitted_t=self.clock())
+        self.queue.append(req)
+        return rid
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        """Event loop until every submitted request completes."""
+        for _ in range(max_steps):
+            if not self.queue and not self.active:
+                break
+            self._admit()
+            if self.active:
+                self._step()
+        return {r.rid: r.generated for r in self.finished.values()}
+
+    # -- internals ------------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        # SSM/hybrid state is corrupted by pad tokens, so exact lengths
+        # there; attention families pad to the next bucket (cache entries
+        # beyond plen are never attended: pos starts at plen).
+        if self.cfg.family in ("ssm", "hybrid"):
+            return plen
+        for b in self.buckets:
+            if plen <= b:
+                return b
+        return self.max_len
+
+    def _prefill_one(self, req: Request):
+        plen = len(req.prompt)
+        bucket = self._bucket(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "encdec":
+            se = req.src_embeds
+            if se is None:
+                se = np.zeros((bucket, self.cfg.d_model), np.float32)
+            src = np.zeros((1, bucket, self.cfg.d_model), np.float32)
+            src[0, :se.shape[0]] = se[:bucket]
+            batch["src_embeds"] = jnp.asarray(src)
+        if self.cfg.mrope_sections:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(bucket, dtype=jnp.int32), (3, 1, bucket))
+        key = (bucket, self.cfg.family)
+        if key not in self._prefills:
+            cfg = self.cfg
+            self._prefills[key] = jax.jit(
+                lambda p, b: prefill(p, cfg, b, max_len=self.max_len))
+        logits, single = self._prefills[key](self.params, batch)
+        self.stats["prefills"] += 1
+        # true position is plen (ignore pad tail), and next token comes
+        # from the logits at plen-1 — recompute it from the last real
+        # token by letting decode handle it: set pos = plen.
+        single = single._replace(pos=jnp.full((1,), plen, jnp.int32))
+        return logits, single
+
+    def _admit(self) -> None:
+        while self.queue and self.pool.n_free:
+            req = self.queue.pop(0)
+            slot = self.pool.alloc()
+            logits, single = self._prefill_one(req)
+            self.cache = insert_slot(self.cache, single, slot, self.max_batch)
+            req.slot = slot
+            first = int(np.argmax(np.asarray(logits)[0]))
+            req.generated.append(first)
+            req.first_token_t = self.clock()
+            self.active[slot] = req
+            self.stats["admitted"] += 1
+            self._finish_if_done(req)
+
+    def _step(self) -> None:
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.generated[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        self.stats["steps"] += 1
+        logits = np.asarray(logits)
+        for slot, req in list(self.active.items()):
+            nxt = int(np.argmax(logits[slot]))
+            req.generated.append(nxt)
+            self._finish_if_done(req)
+
+    def _finish_if_done(self, req: Request) -> None:
+        if not req.done:
+            return
+        slot = req.slot
+        if slot is not None and slot in self.active:
+            del self.active[slot]
+        if slot is not None:
+            if self.kv_tier is not None:
+                self.kv_tier.park(req.rid, extract_slot(
+                    self.cache, slot, self.max_batch))
+            self.pool.release(slot)
+        req.done_t = self.clock()
+        self.finished[req.rid] = req

@@ -1,0 +1,116 @@
+"""Serving-side KV management: slot pool + host far-tier via the AMU.
+
+The device cache is the model's stacked ``Cache`` (L x B_slots x ...).
+This module adds what a serving deployment needs around it:
+
+  * :class:`SlotPool` — fixed decode slots, alloc/free,
+  * slot extract/insert — move one sequence's cache state between the
+    batched device cache and a standalone per-sequence tree,
+  * :class:`KVOffloadTier` — park preempted/finished sequences' KV in
+    host memory (``astore``) and bring them back with LATENCY-QoS
+    ``aload`` when rescheduled: the paper's far-memory tier applied to
+    KV paging.  Granularity is one sequence's whole KV (the AMU's
+    variable-granularity knob: one big request instead of thousands of
+    cache lines).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Hashable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amu import AMU, AccessConfig, QoS
+from repro.core.offload import FarMemoryTier
+from repro.models.model import Cache
+
+__all__ = ["SlotPool", "extract_slot", "insert_slot", "KVOffloadTier"]
+
+
+class SlotPool:
+    def __init__(self, n_slots: int):
+        self.free: List[int] = list(range(n_slots))
+        self.n_slots = n_slots
+
+    def alloc(self) -> Optional[int]:
+        return self.free.pop(0) if self.free else None
+
+    def release(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots and slot not in self.free
+        self.free.append(slot)
+        self.free.sort()
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+
+def _is_batched_axis1(leaf, n_slots: int) -> bool:
+    return leaf.ndim >= 2 and leaf.shape[1] == n_slots
+
+
+def _is_batched_axis0(leaf, n_slots: int) -> bool:
+    return leaf.ndim >= 1 and leaf.shape[0] == n_slots
+
+
+def extract_slot(cache: Cache, slot: int, n_slots: int):
+    """Pull one sequence's state out of the batched cache (keeps dims)."""
+    def ex(leaf):
+        if _is_batched_axis1(leaf, n_slots):
+            return leaf[:, slot:slot + 1]
+        if _is_batched_axis0(leaf, n_slots):
+            return leaf[slot:slot + 1]
+        return leaf
+    return jax.tree_util.tree_map(ex, cache)
+
+
+def insert_slot(cache: Cache, single, slot: int, n_slots: int) -> Cache:
+    """Write a single-sequence cache tree (batch dim 1) into ``slot``."""
+    def ins(dst, src):
+        if _is_batched_axis1(dst, n_slots):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=1)
+        if _is_batched_axis0(dst, n_slots):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=0)
+        return dst
+    return jax.tree_util.tree_map(ins, cache, single)
+
+
+class KVOffloadTier:
+    """Host-memory parking lot for per-sequence cache states."""
+
+    def __init__(self, amu: Optional[AMU] = None):
+        self.tier = FarMemoryTier(amu or AMU(max_outstanding=32),
+                                  fetch_qos=QoS.LATENCY)
+        self.parked: Dict[Hashable, Any] = {}
+
+    def park(self, key: Hashable, single_cache) -> None:
+        """astore a sequence's cache to the far tier (non-blocking)."""
+        host = jax.tree_util.tree_map(np.asarray, single_cache)
+        self.parked[key] = jax.tree_util.tree_structure(host)
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(host)):
+            self.tier.offload((key, i), leaf)
+
+    def prefetch(self, key: Hashable) -> None:
+        """Begin aload of every leaf (call when the scheduler plans to
+        resume ``key`` — latency hides behind the current decode step)."""
+        i = 0
+        while (key, i) in dict.fromkeys(self.tier.keys()):
+            self.tier.prefetch((key, i))
+            i += 1
+
+    def fetch(self, key: Hashable):
+        """Blocking: reassemble the parked cache tree."""
+        treedef = self.parked.pop(key)
+        leaves = []
+        i = 0
+        while True:
+            try:
+                leaves.append(self.tier.get((key, i)))
+            except KeyError:
+                break
+            i += 1
+        return jax.tree_util.tree_unflatten(treedef, leaves)

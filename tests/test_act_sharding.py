@@ -1,0 +1,81 @@
+"""Activation-sharding/precision policy tests.
+
+The optimized policy must (a) be a pure no-op numerically (within bf16
+noise), (b) pick the documented layouts, (c) never leak outside its
+context manager."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke
+from repro.dist import act_sharding as acts
+from repro.models import init_params, train_loss
+
+
+def test_policy_context_nesting_and_default():
+    assert acts.current() == acts.BASELINE
+    with acts.policy(acts.OPTIMIZED):
+        assert acts.current().native_dtype
+        with acts.policy(acts.BASELINE):
+            assert not acts.current().native_dtype
+        assert acts.current().seq_residual
+    assert acts.current() == acts.BASELINE
+
+
+def test_attn_plan_selection(monkeypatch):
+    monkeypatch.setattr(acts, "_mesh_axis_sizes",
+                        lambda: {"data": 16, "model": 16})
+    with acts.policy(acts.ActPolicy(attn_explicit=True)):
+        assert acts.attn_plan(96, 8, 4096) == ("heads", "model")
+        assert acts.attn_plan(24, 8, 4096) == ("seq", "model")   # 24 % 16 != 0
+        assert acts.attn_plan(24, 8, 100) is None                # seq unfit
+    with acts.policy(acts.ActPolicy(attn_explicit=True, seq_residual=True)):
+        # a seq-sharded residual stream (signalled by the layer) forces
+        # seq-sharded attention even for divisible head counts
+        with acts.residual_layout(True):
+            assert acts.attn_plan(96, 8, 4096) == ("seq", "model")
+        assert acts.attn_plan(96, 8, 4096) == ("heads", "model")
+    with acts.policy(acts.BASELINE):
+        assert acts.attn_plan(96, 8, 4096) is None
+
+
+def test_residual_spec(monkeypatch):
+    monkeypatch.setattr(acts, "_mesh_axis_sizes",
+                        lambda: {"data": 16, "model": 16})
+    with acts.policy(acts.OPTIMIZED):
+        spec = acts.residual_spec(4096)
+        assert spec is not None and "model" in str(spec)
+        assert acts.residual_spec(100) is None          # not divisible
+        g = acts.residual_spec(4096, gather=True)
+        assert "model" not in str(g)
+    assert acts.residual_spec(4096) is None             # baseline: off
+
+
+def test_no_mesh_is_noop():
+    with acts.policy(acts.OPTIMIZED):
+        # single-device: plans and specs all degrade to None/no-op
+        assert acts.attn_plan(96, 8, 4096) is None
+        assert acts.residual_spec(4096) is None
+        x = jnp.ones((4, 4))
+        assert acts.constrain(x, None) is not None
+
+
+@pytest.mark.parametrize("arch", ["command-r-plus-104b", "rwkv6-7b",
+                                  "llama4-maverick-400b-a17b",
+                                  "zamba2-1.2b"])
+def test_optimized_policy_numerically_equivalent(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                     cfg.vocab_size),
+    }
+    with acts.policy(acts.BASELINE):
+        l0, _ = train_loss(params, cfg, batch)
+    with acts.policy(acts.OPTIMIZED):
+        l1, _ = train_loss(params, cfg, batch)
+    assert abs(float(l0) - float(l1)) < 2e-2

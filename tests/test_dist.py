@@ -1,0 +1,55 @@
+"""Distributed tests: run dist_worker.py in a subprocess with 8 forced
+host devices (keeps this process single-device), parse RESULT lines."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+_WORKER = Path(__file__).parent / "dist_worker.py"
+_SRC = str(Path(__file__).parent.parent / "src")
+
+
+def _run(mode: str, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run(
+        [sys.executable, str(_WORKER), mode],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"worker failed:\n{out.stdout}\n{out.stderr}"
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT"):
+            return line
+    raise AssertionError(f"no RESULT line:\n{out.stdout}\n{out.stderr}")
+
+
+def test_sharded_train_step_moe():
+    line = _run("train")
+    assert "finite=True" in line
+    assert "improved=True" in line        # loss drops on repeated batch
+    assert "sharded=True" in line         # TP/EP actually sharded params
+
+
+def test_sharded_prefill_and_serve_step():
+    line = _run("serve")
+    assert "finite=True" in line
+    assert "pos=66" in line               # 64 prefill + 2 decode steps
+
+
+def test_elastic_restart_smaller_mesh():
+    line = _run("elastic")
+    assert "new_shape=(1, 4)" in line
+    assert "step=2" in line               # optimizer step carried over
+    assert "finite=True" in line
+
+
+def test_multipod_sharding_specs():
+    line = _run("specs")
+    parts = dict(kv.split("=") for kv in line.split() if "=" in kv)
+    # layer stacks are single leaves, so the tree is small — what matters
+    # is that the big leaves are TP-sharded and everything ZeRO-shards.
+    assert int(parts["model_sharded"]) >= 8      # all projections + tables
+    assert int(parts["zero_sharded"]) == int(parts["total"])

@@ -1,0 +1,177 @@
+"""Property-based tests (hypothesis) on model/system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core.spm import (SPMPlan, VMEM_BYTES, plan_attention_blocks,
+                            plan_matmul_blocks)
+from repro.models.attention import chunked_attention
+from repro.models.layers import rope
+from repro.models.model import chunked_cross_entropy
+from repro.models.moe import expert_capacity, moe_block, moe_init
+
+
+# ---------------------------------------------------------------------------
+# RoPE: rotation preserves norms and relative positions
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), S=st.integers(2, 16),
+       D=st.sampled_from([8, 16, 32]))
+def test_rope_preserves_norm(seed, S, D):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, S, 2, D))
+    pos = jnp.broadcast_to(jnp.arange(S), (1, S))
+    y = rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """<rope(q,p1), rope(k,p2)> depends only on p1-p2."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    def dot_at(p1, p2):
+        qr = rope(q, jnp.asarray([[p1]]))
+        kr = rope(k, jnp.asarray([[p2]]))
+        return float(jnp.sum(qr * kr))
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+    assert dot_at(5, 5) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention == naive softmax attention (any chunking)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), chunk=st.sampled_from([7, 16, 33, 128]),
+       Sq=st.integers(3, 24), window=st.sampled_from([0, 5]))
+def test_property_chunked_attention_chunk_invariant(seed, chunk, Sq, window):
+    from repro.kernels.ref import attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (2, Sq, 4, 16))
+    k = jax.random.normal(ks[1], (2, Sq, 2, 16))
+    v = jax.random.normal(ks[2], (2, Sq, 2, 16))
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    out = chunked_attention(q, k, v, causal=True, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross entropy == direct xent
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), S=st.integers(2, 33),
+       chunk=st.sampled_from([4, 8, 512]), V=st.sampled_from([32, 130]))
+def test_property_chunked_xent_matches_direct(seed, S, chunk, V):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    B, d = 2, 16
+    x = jax.random.normal(ks[0], (B, S, d)) * 0.5
+    table = jax.random.normal(ks[1], (V, d)) * 0.5
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    got = float(chunked_cross_entropy(x, table, labels, chunk=chunk))
+    logits = (x.astype(jnp.bfloat16) @ table.astype(jnp.bfloat16).T
+              ).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = float(jnp.mean(lse - gold))
+    assert got == pytest.approx(want, rel=1e-4)
+
+
+def test_chunked_xent_ignores_masked_labels():
+    x = jnp.ones((1, 4, 8))
+    table = jnp.ones((16, 8))
+    all_masked = chunked_cross_entropy(x, table, jnp.full((1, 4), -1))
+    assert float(all_masked) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# MoE: dispatch conservation + capacity bounds
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(E=8, k=2, cf=8.0):
+    return ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                       num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                       head_dim=8, num_experts=E, experts_per_token=k,
+                       capacity_factor=cf)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_moe_no_drop_equals_dense_mixture(seed):
+    """With capacity high enough to keep every pair, MoE output must be
+    exactly the gate-weighted mixture of selected experts."""
+    cfg = _moe_cfg(E=4, k=2, cf=16.0)
+    p = moe_init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 6, 16))
+    out, aux = moe_block(p, cfg, x, compute_dtype=jnp.float32)
+
+    # dense reference: run every expert on every token, combine by gates
+    logits = x.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, ids = jax.lax.top_k(probs, 2)
+    gates = gates / gates.sum(-1, keepdims=True)
+    g = jnp.einsum("bsd,edf->bsef", x, p["gate"])
+    u = jnp.einsum("bsd,edf->bsef", x, p["up"])
+    eo = jnp.einsum("bsef,efd->bsed", jax.nn.silu(g) * u, p["down"])
+    want = jnp.zeros_like(x)
+    for kk in range(2):
+        sel = jnp.take_along_axis(eo, ids[..., kk][..., None, None],
+                                  axis=2)[:, :, 0]
+        want = want + gates[..., kk][..., None] * sel
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_bounded():
+    """With cf=1.0 and adversarially skewed routing, outputs stay finite
+    and dropped tokens contribute zero (not NaN)."""
+    cfg = _moe_cfg(E=4, k=1, cf=0.25)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.ones((1, 16, 16))          # identical tokens -> one expert hot
+    out, _ = moe_block(p, cfg, x)
+    assert bool(jnp.isfinite(out).all())
+    C = expert_capacity(cfg, 16)
+    assert C == max(1, int(np.ceil(16 * 1 / 4 * 0.25)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(S=st.integers(1, 64), E=st.sampled_from([4, 8, 64]),
+       k=st.integers(1, 4), cf=st.floats(0.1, 4.0))
+def test_property_expert_capacity_monotone(S, E, k, cf):
+    cfg = _moe_cfg(E=E, k=min(k, E), cf=cf)
+    C = expert_capacity(cfg, S)
+    assert C >= 1
+    assert C >= int(S * min(k, E) / E * cf) - 1
+
+
+# ---------------------------------------------------------------------------
+# SPM planner invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(8, 8192), k=st.integers(128, 16384),
+       n=st.integers(128, 32768), depth=st.sampled_from([2, 3]))
+def test_property_matmul_plan_fits_vmem(m, k, n, depth):
+    plan = plan_matmul_blocks(m, k, n, pipeline_depth=depth)
+    assert plan.vmem_bytes <= VMEM_BYTES
+    bm, bk = plan.block_shapes["x"]
+    _, bn = plan.block_shapes["w"]
+    assert bm % 8 == 0 and bk % 128 == 0 and bn % 128 == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(q=st.integers(8, 1 << 19), kv=st.integers(128, 1 << 19),
+       d=st.sampled_from([64, 80, 128]))
+def test_property_attention_plan_fits_vmem(q, kv, d):
+    plan = plan_attention_blocks(q, kv, d)
+    assert plan.vmem_bytes <= VMEM_BYTES
+    assert plan.block_shapes["kv"][0] % 128 == 0

@@ -1,0 +1,108 @@
+"""Fig-1 reproduction tests: the DES must reproduce the paper's claims
+and agree with the closed-form Little's-law bounds."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sim import (AMUParams, CoreParams, LatencyModel,
+                            bandwidth_sweep, little_bound_amu,
+                            little_bound_blocking, simulate_amu,
+                            simulate_blocking_core)
+
+LINK = 50e9
+MB = 1 << 22
+
+
+def test_paper_claim_sync_collapses_with_latency():
+    """Paper §1: OoO cores cannot tolerate 300ns-10us far-memory latency."""
+    rows = bandwidth_sweep([200e-9, 1e-6, 3e-6, 10e-6], total_bytes=MB)
+    utils = [r["sync_util"] for r in rows]
+    assert all(a > b for a, b in zip(utils, utils[1:])), utils
+    assert utils[-1] < 0.01          # 10us: <1% of the link
+
+
+def test_paper_claim_amu_sustains_bandwidth():
+    rows = bandwidth_sweep([200e-9, 1e-6, 3e-6, 10e-6], total_bytes=MB)
+    assert all(r["amu_util"] > 0.85 for r in rows), rows
+    assert all(r["speedup"] > 5 for r in rows)
+
+
+def test_paper_claim_speedup_grows_with_latency():
+    rows = bandwidth_sweep([200e-9, 1e-6, 10e-6], total_bytes=MB)
+    sp = [r["speedup"] for r in rows]
+    assert sp[0] < sp[1] < sp[2]
+
+
+def test_granularity_exploits_bandwidth():
+    """Paper §1 'variable granularity': larger granules raise utilization
+    at fixed outstanding count."""
+    lm = LatencyModel(kind="fixed", lo=3e-6, hi=3e-6)
+    utils = []
+    for g in (64, 512, 4096):
+        r = simulate_amu(MB, lm, AMUParams(outstanding=32, granularity=g),
+                         link_bw=LINK)
+        utils.append(r.utilization)
+    assert utils[0] < utils[1] < utils[2]
+
+
+def test_des_matches_little_bound_blocking():
+    core = CoreParams()
+    for lat in (200e-9, 1e-6, 10e-6):
+        lm = LatencyModel(kind="fixed", lo=lat, hi=lat)
+        des = simulate_blocking_core(MB, lm, core, LINK)
+        bound = little_bound_blocking(lat, core, LINK)
+        assert des.achieved_bw <= bound * 1.02
+        assert des.achieved_bw >= bound * 0.5      # within 2x of the bound
+
+
+def test_des_matches_little_bound_amu():
+    amu = AMUParams()
+    for lat in (200e-9, 1e-6, 10e-6):
+        lm = LatencyModel(kind="fixed", lo=lat, hi=lat)
+        des = simulate_amu(MB, lm, amu, LINK)
+        bound = little_bound_amu(lat, amu, LINK)
+        assert des.achieved_bw <= bound * 1.02
+        assert des.achieved_bw >= bound * 0.5
+
+
+def test_wide_distribution_hurts_blocking_more():
+    """In-order retirement: a bimodal tail stalls the window, so the
+    blocking core loses MORE bandwidth than the mean-latency equivalent."""
+    mean = 0.9 * 300e-9 + 0.1 * 10e-6
+    fixed = simulate_blocking_core(
+        MB, LatencyModel("fixed", mean, mean), link_bw=LINK)
+    bimodal = simulate_blocking_core(
+        MB, LatencyModel("bimodal", 300e-9, 10e-6, tail_frac=0.1),
+        link_bw=LINK)
+    assert bimodal.achieved_bw < fixed.achieved_bw * 1.05
+    # while the AMU barely notices the tail
+    amu_fixed = simulate_amu(MB, LatencyModel("fixed", mean, mean),
+                             link_bw=LINK)
+    amu_bi = simulate_amu(MB, LatencyModel("bimodal", 300e-9, 10e-6,
+                                           tail_frac=0.1), link_bw=LINK)
+    assert amu_bi.achieved_bw > 0.8 * amu_fixed.achieved_bw
+
+
+@settings(max_examples=20, deadline=None)
+@given(lat=st.floats(1e-7, 1e-5), out=st.integers(4, 1024))
+def test_property_amu_dominates_blocking(lat, out):
+    lm = LatencyModel("fixed", lat, lat)
+    sync = simulate_blocking_core(MB, lm, link_bw=LINK)
+    asyn = simulate_amu(MB, lm, AMUParams(outstanding=out), link_bw=LINK)
+    assert asyn.achieved_bw >= sync.achieved_bw * 0.9
+
+
+@settings(max_examples=20, deadline=None)
+@given(out=st.integers(1, 512))
+def test_property_mlp_bounded_by_outstanding(out):
+    lm = LatencyModel("fixed", 2e-6, 2e-6)
+    res = simulate_amu(MB, lm, AMUParams(outstanding=out), link_bw=LINK)
+    assert res.mean_mlp <= out + 1e-6
+
+
+def test_utilization_never_exceeds_one():
+    for lat in (1e-7, 1e-6, 1e-5):
+        lm = LatencyModel("lognormal", lat, lat * 10)
+        assert simulate_amu(MB, lm, link_bw=LINK).utilization <= 1.0
+        assert simulate_blocking_core(MB, lm, link_bw=LINK).utilization <= 1.0
