@@ -14,10 +14,16 @@ each gets a bench:
     three-term roofline table.
 
 Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+
+``--smoke`` runs a fast subset (sim sweeps + runtime overhead; skips the
+interpret-mode kernel timings) for CI; ``--json PATH`` additionally
+writes the rows as JSON so each CI run archives a ``BENCH_*.json``
+artifact and the perf trajectory accumulates across commits.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import time
@@ -27,8 +33,12 @@ import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+_ROWS: list = []
+
 
 def _row(name: str, us: float, derived: str = "") -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us, 2),
+                  "derived": derived})
     print(f"{name},{us:.2f},{derived}")
 
 
@@ -76,14 +86,13 @@ def bench_outstanding_sweep() -> None:
 # AMU software runtime overhead
 # ---------------------------------------------------------------------------
 
-def bench_amu_runtime() -> None:
+def bench_amu_runtime(n: int = 20_000) -> None:
     from repro.core.amu import AMU, SimBackend
     # 256 outstanding slots = a realistic hardware queue; completion
     # polling is O(in_flight) per issue, and in_flight <= max_outstanding.
     amu = AMU(backend=SimBackend(base_latency=0.0, bandwidth=1e15),
               max_outstanding=256)
     src = np.zeros(64, np.uint8)
-    n = 20_000
     t0 = time.perf_counter()
     for _ in range(n):
         amu.aload(src)
@@ -187,14 +196,27 @@ def bench_roofline() -> None:
                  f"useful_flops={r['useful_flops_frac']:.3f}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: sim sweeps + runtime overhead, "
+                         "skip interpret-mode kernel timings")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON array")
+    args = ap.parse_args(argv)
+
+    _ROWS.clear()
     print("name,us_per_call,derived")
     bench_fig1_latency_sweep()
     bench_granularity_sweep()
     bench_outstanding_sweep()
-    bench_amu_runtime()
-    bench_kernels()
+    bench_amu_runtime(n=2_000 if args.smoke else 20_000)
+    if not args.smoke:
+        bench_kernels()
     bench_roofline()
+
+    if args.json:
+        Path(args.json).write_text(json.dumps(_ROWS, indent=2) + "\n")
 
 
 if __name__ == "__main__":

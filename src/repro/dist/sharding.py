@@ -1,0 +1,173 @@
+"""PartitionSpec assignment for parameter / optimizer / batch pytrees.
+
+Sharding vocabulary over the ``repro.launch.mesh`` axes:
+
+  * **TP** (``model`` axis) — Megatron-style intra-layer parallelism:
+    column-parallel input projections (q/k/v, gate/up) shard their output
+    dim; row-parallel output projections (o, down, out_proj, Wo, cWv)
+    shard their input dim; embedding/unembedding tables shard the vocab
+    dim,
+  * **EP** (``model`` axis) — stacked expert weights (E, d, ff) shard the
+    expert dim; MoE dispatch stays per-sequence so the only collective is
+    the combine all-reduce,
+  * **DP / ZeRO-1** (``pod`` + ``data`` axes) — the batch shards over the
+    data axes; optimizer moments additionally shard their first
+    evenly-divisible unsharded dim over the data axes (reduce-scatter +
+    all-gather around the update, a la ZeRO stage 1).
+
+Every rule checks divisibility and falls back to replication, so the
+same code serves the (2, 4) CPU test mesh, the (16, 16) pod and the
+(2, 16, 16) multipod without special cases.  Specs are always
+``PartitionSpec`` instances (never ``None``) so spec trees stay
+structure-compatible with parameter trees under ``tree_map``.
+
+``mesh`` arguments accept a ``jax.sharding.Mesh`` or a plain
+``{axis: size}`` mapping (handy for single-process unit tests).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Mapping, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.optim.adamw import OptState
+
+__all__ = [
+    "MODEL_AXIS", "DATA_AXES", "param_specs", "opt_state_specs",
+    "batch_specs", "data_axes_of",
+]
+
+MODEL_AXIS = "model"
+DATA_AXES = ("pod", "data")
+
+#: projections whose *input* dim is model-sharded (their producer is
+#: column-parallel, so row-parallel here elides one all-gather)
+_ROW_PARALLEL = frozenset({"o", "down", "out_proj", "Wo", "cWv"})
+
+#: raw stacked expert tensors (E, d, ff) / (E, ff, d) — expert dim at -3
+_EXPERT_STACKED = frozenset({"gate", "up", "down"})
+
+MeshLike = Union[Mesh, Mapping[str, int]]
+
+
+def _axis_sizes(mesh: MeshLike) -> Dict[str, int]:
+    if mesh is None:
+        return {}
+    if isinstance(mesh, Mapping):
+        return dict(mesh)
+    return dict(mesh.shape)
+
+
+def data_axes_of(mesh: MeshLike) -> Tuple[str, ...]:
+    """Data-parallel axes present (size > 1) on this mesh, outer first."""
+    sizes = _axis_sizes(mesh)
+    return tuple(a for a in DATA_AXES if sizes.get(a, 1) > 1)
+
+
+def _dp_entry(dp_axes: Sequence[str]):
+    return tuple(dp_axes) if len(dp_axes) > 1 else dp_axes[0]
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:  # pragma: no cover - unknown key type
+            out.append(str(k))
+    return tuple(out)
+
+
+def _param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
+                sizes: Mapping[str, int], model_axis: str) -> P:
+    m = sizes.get(model_axis, 1)
+    rank = len(shape)
+    spec = [None] * rank
+
+    def fits(dim: int) -> bool:
+        return m > 1 and shape[dim] > 0 and shape[dim] % m == 0
+
+    last = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+
+    if last == "table" and rank >= 2:
+        if fits(rank - 2):                       # vocab dim of (V, d)
+            spec[rank - 2] = model_axis
+    elif last == "w" and rank >= 2:
+        if parent in _ROW_PARALLEL:
+            if fits(rank - 2):
+                spec[rank - 2] = model_axis
+        elif fits(rank - 1):                     # column-parallel default
+            spec[rank - 1] = model_axis
+    elif last in _EXPERT_STACKED and rank >= 3:  # raw (…, E, d, ff) stacks
+        if fits(rank - 3):
+            spec[rank - 3] = model_axis
+    return P(*spec)
+
+
+def param_specs(mesh: MeshLike, pshapes: Any, *,
+                model_axis: str = MODEL_AXIS) -> Any:
+    """PartitionSpec tree (same structure as ``pshapes``) for parameters.
+
+    ``pshapes`` is any pytree whose leaves have ``.shape`` — typically
+    ``repro.dist.steps.abstract_params(cfg)``.
+    """
+    sizes = _axis_sizes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(_path_names(path), tuple(leaf.shape),
+                                       sizes, model_axis),
+        pshapes)
+
+
+def _zero_spec(spec: P, shape: Tuple[int, ...], dp_axes: Tuple[str, ...],
+               dp: int) -> P:
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, dim in enumerate(shape):
+        if parts[i] is None and dim > 0 and dim % dp == 0:
+            parts[i] = _dp_entry(dp_axes)
+            break
+    return P(*parts)
+
+
+def opt_state_specs(mesh: MeshLike, pshapes: Any, *, zero1: bool = True,
+                    model_axis: str = MODEL_AXIS) -> OptState:
+    """Specs for :class:`repro.optim.adamw.OptState` over ``pshapes``.
+
+    Moments inherit the parameter TP layout; with ``zero1`` they
+    additionally shard their first evenly-divisible unsharded dim over
+    the data axes.  ``step`` is a replicated scalar.
+    """
+    pspecs = param_specs(mesh, pshapes, model_axis=model_axis)
+    dp_axes = data_axes_of(mesh)
+    if zero1 and dp_axes:
+        dp = math.prod(_axis_sizes(mesh)[a] for a in dp_axes)
+        mspecs = jax.tree_util.tree_map(
+            lambda leaf, spec: _zero_spec(spec, tuple(leaf.shape),
+                                          dp_axes, dp),
+            pshapes, pspecs)
+    else:
+        mspecs = pspecs
+    return OptState(m=mspecs, v=mspecs, step=P())
+
+
+def batch_specs(mesh: MeshLike, cfg: ModelConfig,
+                shape: ShapeConfig) -> Dict[str, P]:
+    """Specs for the input batch: (B, S) token/label grids DP-sharded
+    over the data axes (replicated if B does not divide them)."""
+    sizes = _axis_sizes(mesh)
+    dp_axes = data_axes_of(mesh)
+    dp = math.prod(sizes[a] for a in dp_axes) if dp_axes else 1
+    b_entry = (_dp_entry(dp_axes)
+               if dp_axes and shape.global_batch % dp == 0 else None)
+    specs = {"tokens": P(b_entry, None), "labels": P(b_entry, None)}
+    if cfg.family == "encdec":
+        specs["src_embeds"] = P(b_entry, None, None)
+    return specs

@@ -1,0 +1,220 @@
+"""Jitted, donated, mesh-sharded step factories (train / prefill / serve).
+
+Each ``make_*_step`` returns ``(fn, specs)``:
+
+  * ``fn`` — a callable that enters the mesh context and invokes the
+    underlying ``jax.jit``; it also exposes ``.lower(*abstract_args)``
+    so the compile-only dry-run can lower cells without allocating,
+  * ``specs`` — the PartitionSpec trees (``params`` / ``opt`` /
+    ``batch``) the caller uses to place inputs.
+
+Sharding is enforced *inside* the step via ``with_sharding_constraint``
+(callers may hand in replicated arrays — restore/elastic paths do), and
+train outputs carry explicit ``out_shardings`` so donation lines up and
+updated parameters stay TP/ZeRO-sharded across steps.
+
+``abstract_params`` / ``abstract_opt_state`` / ``train_inputs`` /
+``decode_inputs`` build ``ShapeDtypeStruct`` pytrees — nothing is
+allocated — for spec construction and dry-run lowering.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.dist import act_sharding as acts
+from repro.dist.sharding import batch_specs, opt_state_specs, param_specs
+from repro.models import model as model_mod
+from repro.optim.adamw import adamw_init, adamw_update
+
+__all__ = [
+    "make_train_step", "make_prefill_step", "make_serve_step",
+    "abstract_params", "abstract_opt_state", "train_inputs",
+    "decode_inputs",
+]
+
+
+# -- abstract inputs (ShapeDtypeStruct pytrees; nothing allocated) --------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: model_mod.init_params(cfg, k),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(cfg: ModelConfig):
+    return jax.eval_shape(adamw_init, abstract_params(cfg))
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["src_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.float32)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model_mod.init_cache(cfg, B, S))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return cache, tokens
+
+
+# -- shared plumbing -----------------------------------------------------------
+
+def _policy_for(act_policy: Optional[acts.ActPolicy],
+                tcfg: Optional[TrainConfig] = None) -> acts.ActPolicy:
+    if act_policy is not None:
+        return act_policy
+    if tcfg is not None and tcfg.act_sharding == "optimized":
+        return acts.OPTIMIZED
+    return acts.BASELINE
+
+
+def _constrain_tree(tree, specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, s)),
+        tree, specs)
+
+
+def _named(mesh, specs):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+class _MeshedStep:
+    """Jitted step bound to its mesh: entering the mesh context at call
+    time makes the thread-local mesh visible to trace-time policy code
+    (``act_sharding.constrain``) even when the caller sits outside any
+    ``with mesh:`` block (the training loop does)."""
+
+    def __init__(self, fn, mesh):
+        self._fn = fn
+        self.mesh = mesh
+
+    def __call__(self, *args):
+        with self.mesh:
+            return self._fn(*args)
+
+    def lower(self, *args):
+        with self.mesh:
+            return self._fn.lower(*args)
+
+
+# -- train ---------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                    shape: ShapeConfig, *, donate: bool = True,
+                    act_policy: Optional[acts.ActPolicy] = None):
+    """Build the sharded train step: ``fn(params, opt, batch) ->
+    (params, opt, metrics)`` with gradient accumulation over
+    ``tcfg.microbatches`` and optional bf16 gradient compression."""
+    pshapes = abstract_params(cfg)
+    pspecs = param_specs(mesh, pshapes)
+    ospecs = opt_state_specs(mesh, pshapes, zero1=tcfg.zero1)
+    bspecs = batch_specs(mesh, cfg, shape)
+    pol = _policy_for(act_policy, tcfg)
+    k = max(1, tcfg.microbatches)
+    if shape.global_batch % k:
+        raise ValueError(
+            f"microbatches ({k}) must divide the global batch "
+            f"({shape.global_batch})")
+
+    def _compress(g):
+        if tcfg.grad_compression == "bf16":
+            return jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.bfloat16), g)
+        return g
+
+    def loss_fn(p, mb):
+        return model_mod.train_loss(p, cfg, mb, remat=tcfg.remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt, batch):
+        params = _constrain_tree(params, pspecs, mesh)
+        opt = _constrain_tree(opt, ospecs, mesh)
+        batch = _constrain_tree(batch, bspecs, mesh)
+        with acts.policy(pol):
+            if k == 1:
+                (_, metrics), grads = grad_fn(params, batch)
+                grads = jax.tree_util.tree_map(
+                    lambda x: x.astype(jnp.float32), _compress(grads))
+            else:
+                def micro(acc, mb):
+                    (_, m), g = grad_fn(params, mb)
+                    acc = jax.tree_util.tree_map(
+                        lambda a, x: a + x.astype(jnp.float32), acc,
+                        _compress(g))
+                    return acc, m
+
+                mbatch = jax.tree_util.tree_map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                    batch)
+                acc0 = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, metrics = jax.lax.scan(micro, acc0, mbatch)
+                grads = jax.tree_util.tree_map(lambda g: g / k, grads)
+                metrics = jax.tree_util.tree_map(lambda m: m.mean(), metrics)
+            new_p, new_opt, opt_metrics = adamw_update(grads, opt, params,
+                                                       tcfg)
+        return new_p, new_opt, {**metrics, **opt_metrics}
+
+    fn = jax.jit(
+        step,
+        donate_argnums=(0, 1) if donate else (),
+        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                       NamedSharding(mesh, P())))
+    specs = {"params": pspecs, "opt": ospecs, "batch": bspecs}
+    return _MeshedStep(fn, mesh), specs
+
+
+# -- inference -----------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
+                      act_policy: Optional[acts.ActPolicy] = None,
+                      max_len: Optional[int] = None):
+    """Build the sharded prefill: ``fn(params, batch) -> (logits, cache)``.
+
+    The cache is sized to ``max_len`` (default: the shape's sequence
+    length) so the serve step built from the same shape accepts it."""
+    pshapes = abstract_params(cfg)
+    pspecs = param_specs(mesh, pshapes)
+    bspecs = batch_specs(mesh, cfg, shape)
+    pol = _policy_for(act_policy)
+    cache_len = max_len or shape.seq_len
+
+    def step(params, batch):
+        params = _constrain_tree(params, pspecs, mesh)
+        with acts.policy(pol):
+            return model_mod.prefill(params, cfg, batch, max_len=cache_len)
+
+    fn = jax.jit(step)
+    return _MeshedStep(fn, mesh), {"params": pspecs, "batch": bspecs}
+
+
+def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
+                    donate: bool = True,
+                    act_policy: Optional[acts.ActPolicy] = None):
+    """Build the sharded one-token decode: ``fn(params, cache, tokens) ->
+    (logits, cache)`` with the cache donated (in-place KV update)."""
+    pshapes = abstract_params(cfg)
+    pspecs = param_specs(mesh, pshapes)
+    pol = _policy_for(act_policy)
+
+    def step(params, cache, tokens):
+        params = _constrain_tree(params, pspecs, mesh)
+        with acts.policy(pol):
+            return model_mod.decode_step(params, cfg, cache, tokens)
+
+    fn = jax.jit(step, donate_argnums=(1,) if donate else ())
+    return _MeshedStep(fn, mesh), {"params": pspecs}

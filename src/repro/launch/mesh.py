@@ -17,9 +17,21 @@ import math
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_test_mesh", "HW"]
+__all__ = ["make_mesh_compat", "make_production_mesh", "make_test_mesh", "HW"]
+
+
+def make_mesh_compat(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """``jax.make_mesh`` across jax versions: newer jax wants explicit
+    ``axis_types=(AxisType.Auto, ...)`` for GSPMD-propagated axes; older
+    jax (<= 0.4.x) has neither the enum nor the kwarg."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 class HW:
@@ -37,8 +49,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """(data=16, model=16) single pod; (pod=2, data=16, model=16) multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_test_mesh(shape: Tuple[int, ...] = (2, 4),
@@ -49,5 +60,4 @@ def make_test_mesh(shape: Tuple[int, ...] = (2, 4),
         raise RuntimeError(
             f"need {n} devices; set XLA_FLAGS=--xla_force_host_platform_"
             f"device_count={n} before importing jax")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)

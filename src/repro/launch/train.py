@@ -25,7 +25,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import checkpoint as ckpt_mod
 from repro.checkpoint.checkpoint import (latest_step, prune, restore, save,
@@ -40,13 +40,13 @@ from repro.runtime.fault_tolerance import (Heartbeat, StragglerDetector)
 
 
 def build_mesh(data_axis: int, model_axis: int):
+    from repro.launch.mesh import make_mesh_compat
     n = data_axis * model_axis
     devs = jax.devices()
     if len(devs) < n:
         raise SystemExit(f"need {n} devices, have {len(devs)} "
                          f"(set --xla_force_host_platform_device_count)")
-    return jax.make_mesh((data_axis, model_axis), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh_compat((data_axis, model_axis), ("data", "model"))
 
 
 def main(argv=None):

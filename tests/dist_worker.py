@@ -14,11 +14,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat(shape, axes)
 
 
 def mode_train_step():

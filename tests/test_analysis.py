@@ -84,7 +84,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, %r)
 import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.analysis.hlo_program import analyze_hlo
 L, B, S, d = 8, 4, 64, 128
 def f(params, x):
@@ -92,7 +92,8 @@ def f(params, x):
         return jnp.tanh(x @ w), None
     y, _ = jax.lax.scan(body, x, params)
     return y.sum()
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 params = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
 x = jax.ShapeDtypeStruct((B, S, d), jnp.float32)
 with mesh:

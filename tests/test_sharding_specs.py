@@ -1,0 +1,88 @@
+"""repro.dist.sharding spec trees must tree-match the parameter and
+optimizer pytrees and follow the TP/EP/ZeRO rules, for dense and MoE
+configs, on single-pod and multipod axis layouts.
+
+Runs in the main (single-device) test process: ``param_specs`` /
+``opt_state_specs`` accept a plain ``{axis: size}`` mapping, so no
+forced device count is needed here (the end-to-end placement is covered
+by ``test_dist.py``)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke
+from repro.dist.sharding import batch_specs, opt_state_specs, param_specs
+from repro.dist.steps import abstract_opt_state, abstract_params
+from repro.configs.base import ShapeConfig
+
+MESH = {"data": 2, "model": 4}
+MULTIPOD = {"pod": 2, "data": 2, "model": 2}
+
+_structure = jax.tree_util.tree_structure
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "olmoe-1b-7b"])
+def test_param_specs_tree_match_and_leaf_type(arch):
+    pshapes = abstract_params(get_smoke(arch))
+    pspecs = param_specs(MESH, pshapes)
+    assert _structure(pspecs) == _structure(pshapes)
+    for spec in jax.tree_util.tree_leaves(pspecs):
+        assert isinstance(spec, P)          # never None: tree_map-safe
+
+
+@pytest.mark.parametrize("arch", ["phi4-mini-3.8b", "olmoe-1b-7b"])
+def test_opt_state_specs_tree_match(arch):
+    cfg = get_smoke(arch)
+    pshapes = abstract_params(cfg)
+    oshapes = abstract_opt_state(cfg)
+    ospecs = opt_state_specs(MESH, pshapes, zero1=True)
+    assert _structure(ospecs.m) == _structure(oshapes.m)
+    assert _structure(ospecs.v) == _structure(oshapes.v)
+    assert ospecs.step == P()               # replicated scalar
+
+
+def test_dense_tp_layout_phi4_smoke():
+    cfg = get_smoke("phi4-mini-3.8b")
+    pspecs = param_specs(MESH, abstract_params(cfg))
+    layers = pspecs["layers"]["attn"]
+    # column-parallel q/k/v shard the output dim, row-parallel o the input
+    assert layers["q"]["w"][-1] == "model"
+    assert layers["o"]["w"][-2] == "model"
+    assert pspecs["embed"]["table"][0] == "model"
+    mlp = pspecs["layers"]["mlp"]
+    assert mlp["gate"]["w"][-1] == "model"
+    assert mlp["down"]["w"][-2] == "model"
+
+
+def test_moe_expert_parallel_olmoe():
+    """olmoe smoke: 8 experts over model=4 — expert dim (axis -3 of the
+    layer-stacked (L, E, d, ff) tensors) shards over model."""
+    cfg = get_smoke("olmoe-1b-7b")
+    pspecs = param_specs(MESH, abstract_params(cfg))
+    mlp = pspecs["layers"]["mlp"]
+    for name in ("gate", "up", "down"):
+        assert mlp[name][-3] == "model", f"expert dim of {name} not EP-sharded"
+
+
+def test_zero1_shards_every_moment_leaf_multipod():
+    """On the (pod, data, model) mesh every optimizer-moment leaf of the
+    full mistral-nemo config must carry a pod/data axis (ZeRO-1)."""
+    cfg = get_config("mistral-nemo-12b")
+    pshapes = abstract_params(cfg)
+    ospecs = opt_state_specs(MULTIPOD, pshapes, zero1=True)
+    leaves = jax.tree_util.tree_leaves(ospecs.m)
+    assert leaves, "empty moment spec tree"
+    for spec in leaves:
+        assert "pod" in str(spec) or "data" in str(spec), spec
+    # zero1=False keeps the plain TP layout
+    off = opt_state_specs(MULTIPOD, pshapes, zero1=False)
+    assert off.m == param_specs(MULTIPOD, pshapes)
+
+
+def test_batch_specs_divisibility():
+    cfg = get_smoke("phi4-mini-3.8b")
+    sharded = batch_specs(MESH, cfg, ShapeConfig("t", 32, 4, "train"))
+    assert sharded["tokens"] == P("data", None)
+    odd = batch_specs(MESH, cfg, ShapeConfig("t", 32, 3, "train"))
+    assert odd["tokens"] == P(None, None)   # B=3 doesn't divide data=2
