@@ -7,6 +7,9 @@ each gets a bench:
     far-memory band (THE figure),
   * granularity_sweep  — variable-granularity claim (§1, Fig 1 right),
   * outstanding_sweep  — MLP vs ROB/MSHR-limited window (§1),
+  * paged_kv_sweep     — repro.paging pager vs blocking whole-sequence KV
+                         fetch across oversubscription ratios (hit rate,
+                         us/token; the serving-capacity claim),
   * amu_runtime        — software-AMU issue/getfin overhead (runtime path),
   * kernels            — per-kernel interpret-mode us_per_call (semantic
     cost on CPU; real perf comes from the dry-run roofline, not this),
@@ -80,6 +83,24 @@ def bench_outstanding_sweep() -> None:
         us = (time.perf_counter() - t0) * 1e6
         _row("outstanding_sweep", us,
              f"outstanding={q} util={r.utilization:.4f} mlp={r.mean_mlp:.1f}")
+
+
+def bench_paged_kv_sweep() -> None:
+    """repro.paging: AMU prefetching pager vs blocking whole-sequence KV
+    fetch, swept over device-pool oversubscription (SimBackend, fully
+    deterministic).  Tracks the hit rate and us/token of the paging
+    path in CI; the 2x row is the subsystem's acceptance number."""
+    from repro.paging.sim import simulate_paged_serving
+    for oversub in (1.0, 1.5, 2.0, 4.0, 8.0):
+        t0 = time.perf_counter()
+        r = simulate_paged_serving(oversub)
+        us = (time.perf_counter() - t0) * 1e6
+        _row("paged_kv_sweep", us,
+             f"oversub={oversub:g} pool={r['pool_pages']}pg "
+             f"speedup={r['speedup']:.2f} hit_rate={r['hit_rate']:.3f} "
+             f"blocking={r['blocking_us_per_token']:.2f}us/tok "
+             f"paged={r['paged_us_per_token']:.2f}us/tok "
+             f"bulk_wb={r['bulk_writebacks']} demand={r['demand_fetches']}")
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +231,7 @@ def main(argv=None) -> None:
     bench_fig1_latency_sweep()
     bench_granularity_sweep()
     bench_outstanding_sweep()
+    bench_paged_kv_sweep()
     bench_amu_runtime(n=2_000 if args.smoke else 20_000)
     if not args.smoke:
         bench_kernels()

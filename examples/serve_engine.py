@@ -1,9 +1,12 @@
-"""Serving example: continuous batching with the event-driven scheduler.
+"""Serving example: continuous batching with the event-driven scheduler
+over an *oversubscribed* device page pool.
 
 Submits a burst of mixed-length requests against a small dense model and
 shows the engine admitting new requests into slots the moment others
-finish (no drain barrier), with finished sequences' KV parked in the
-host far tier through the AMU.
+finish (no drain barrier), KV paged over a device pool smaller than the
+aggregate demand — cold pages park in the far tier via BULK astore and
+come back hot-tail-first via LATENCY aload — with finished sequences'
+whole KV parked in the host far tier through the AMU.
 
 Run:  PYTHONPATH=src python examples/serve_engine.py
 """
@@ -24,8 +27,11 @@ from repro.serve.engine import Engine
 def main():
     cfg = get_smoke("mistral-nemo-12b")
     params = init_params(cfg, jax.random.PRNGKey(0))
+    # 4 slots x 12 pages would want 48 device pages; give it 12 so the
+    # engine must oversubscribe: preempt cold pages, prefetch on resume.
     eng = Engine(cfg, params, max_batch=4, max_len=96,
-                 prefill_buckets=(16, 32, 64), offload_finished=True)
+                 prefill_buckets=(16, 32, 64), offload_finished=True,
+                 page_size=8, device_pages=12)
 
     rng = np.random.default_rng(7)
     n_requests = 10
@@ -42,6 +48,10 @@ def main():
           f"(occupancy {occ:.2f}; 4 slots, mixed depths)")
     print(f"[serve] prefills {eng.stats['prefills']} "
           f"(bucketed: {sorted(set(k[0] for k in eng._prefills))})")
+    print(f"[serve] page pool: {eng.page_pool.n_pages} pages x "
+          f"{eng.page_size} tok, preemptions {eng.stats['preemptions']}, "
+          f"resumes {eng.stats['resumes']}")
+    print(f"[serve] pager ops: {dict(eng.pager.stats)}")
     print(f"[serve] far-tier AMU ops: {dict(eng.kv_tier.tier.amu.stats)}")
     for rid in sorted(out)[:3]:
         print(f"  request {rid}: {out[rid]}")

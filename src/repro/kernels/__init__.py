@@ -4,7 +4,9 @@ Kernels (each: <name>.py with pl.pallas_call + BlockSpec, ref.py oracle,
 ops.py jit'd wrapper):
   * amu_matmul       — manual double-buffered DMA matmul (aload/getfin/SPM)
   * flash_attention  — streaming attention (causal/SWA/GQA)
-  * decode_attention — one-token attention vs long KV cache (paged stream)
+  * decode_attention — one-token attention vs long KV cache (paged stream),
+                       plus the gather-by-page-table variant over the
+                       repro.paging pool layout (scalar-prefetch frame ids)
   * rwkv6            — chunked WKV6, state-resident linear recurrence
   * mamba2           — chunked SSD (scalar per-head decay)
   * moe_gather       — scalar-prefetch indexed gather (AMU gather pattern)
@@ -12,7 +14,8 @@ ops.py jit'd wrapper):
 
 from repro.kernels import ops, ref
 from repro.kernels.ops import (matmul, flash_attention, decode_attention,
-                               wkv6, ssd, gather_rows)
+                               paged_decode_attention, wkv6, ssd,
+                               gather_rows)
 
 __all__ = ["ops", "ref", "matmul", "flash_attention", "decode_attention",
-           "wkv6", "ssd", "gather_rows"]
+           "paged_decode_attention", "wkv6", "ssd", "gather_rows"]

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["decode_attention"]
+__all__ = ["decode_attention", "paged_decode_attention"]
 
 NEG_INF = -1e30
 _LANE = 128
@@ -108,4 +108,110 @@ def decode_attention(
         ],
         interpret=interpret,
     )(qg, kT, vT)
+    return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: gather-by-page-table (repro.paging pool layout)
+# ---------------------------------------------------------------------------
+
+
+def _paged_decode_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc, m_s, l_s, *, scale: float, page: int, G: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_pg = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    valid_len = len_ref[b]
+    first_kv = j * page
+
+    @pl.when(first_kv < valid_len)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, page)
+        kv_pos = first_kv + jax.lax.broadcasted_iota(jnp.int32, (G, page), 1)
+        s = jnp.where(kv_pos < valid_len, s, NEG_INF)
+        m_prev = m_s[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[:, :1] = l_s[:, :1] * corr + p.sum(-1, keepdims=True)
+        m_s[:, :1] = m_new
+        v = v_ref[0, :, 0].astype(jnp.float32)             # (page, D)
+        acc[...] = acc[...] * corr + jax.lax.dot(p, v)
+
+    @pl.when(j == n_pg - 1)
+    def _():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[:, :1], 1e-30)) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jnp.ndarray,            # (B, H, D)
+    k_pages: jnp.ndarray,      # (N, page, Hkv, D) — the device page pool
+    v_pages: jnp.ndarray,      # (N, page, Hkv, D)
+    page_table: jnp.ndarray,   # (B, pages_per_seq) int32 physical frame ids
+    lengths: jnp.ndarray,      # (B,) int32 valid KV length per sequence
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Decode attention reading the paged KV layout directly.
+
+    Instead of a dense per-slot (B, Skv, Hkv, D) cache, k/v live in the
+    ``repro.paging`` pool layout — a flat array of page frames — and
+    ``page_table`` holds each sequence's logical→physical frame map.
+    The page-table row is a *scalar-prefetch* operand: the k/v index
+    maps dereference it to pick which frame each grid step streams
+    through VMEM, so the gather rides the compiler-pipelined DMA for
+    free (the AMU gather pattern at page granularity — same scheme as
+    ``moe_gather.gather_blocks``).  Entries past a sequence's last page
+    must still hold in-bounds frame ids (0 is fine): their tiles are
+    skipped by the per-sequence ``lengths`` mask but may be prefetched.
+
+    Per-sequence ``lengths`` (unlike the dense kernel's static
+    ``valid_len``) make one call serve the engine's mixed-depth batch.
+    """
+    B, H, D = q.shape
+    N, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    pages_per_seq = page_table.shape[1]
+
+    qg = q.reshape(B, Hkv, G, D)
+
+    kernel = functools.partial(_paged_decode_kernel,
+                               scale=1.0 / math.sqrt(D), page=page, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, j, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, _LANE), jnp.float32),
+            pltpu.VMEM((G, _LANE), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg,
+      k_pages, v_pages)
     return out.reshape(B, H, D)

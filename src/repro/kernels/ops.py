@@ -21,12 +21,15 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.amu_matmul import amu_matmul as _amu_matmul
 from repro.kernels.decode_attention import decode_attention as _decode_attn
+from repro.kernels.decode_attention import \
+    paged_decode_attention as _paged_decode_attn
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba2 import ssd as _ssd
 from repro.kernels.moe_gather import gather_rows as _gather_rows
 from repro.kernels.rwkv6 import wkv6 as _wkv6
 
-__all__ = ["matmul", "flash_attention", "decode_attention", "wkv6", "ssd",
+__all__ = ["matmul", "flash_attention", "decode_attention",
+           "paged_decode_attention", "wkv6", "ssd",
            "gather_rows", "on_tpu", "resolve_impl"]
 
 
@@ -68,6 +71,31 @@ def decode_attention(q, k, v, *, valid_len=None, impl: str = "auto", **kw):
                                          if valid_len is None else valid_len)
     return _decode_attn(q, k, v, valid_len=valid_len,
                         interpret=(impl == "interpret"), **kw)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           impl: str = "auto", **kw):
+    """q: (B, H, D); k/v_pages: (N, page, Hkv, D) pool layout;
+    page_table: (B, pages_per_seq) frame ids; lengths: (B,) valid KV."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        B, H, D = q.shape
+        _, page, Hkv, _ = k_pages.shape
+        k = jnp.take(k_pages, page_table, axis=0)         # (B, pps, page, ...)
+        v = jnp.take(v_pages, page_table, axis=0)
+        Skv = k.shape[1] * page
+        k = k.reshape(B, Skv, Hkv, D)
+        v = v.reshape(B, Skv, Hkv, D)
+        g = H // Hkv
+        qf = (q.astype(jnp.float32) / (D ** 0.5)).reshape(B, Hkv, g, D)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
+        mask = jnp.arange(Skv)[None, :] < lengths[:, None]
+        s = jnp.where(mask[:, None, None, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+        return out.reshape(B, H, D).astype(q.dtype)
+    return _paged_decode_attn(q, k_pages, v_pages, page_table, lengths,
+                              interpret=(impl == "interpret"), **kw)
 
 
 def wkv6(r, k, v, w, u, *, impl: str = "auto", chunk: int = 64):

@@ -27,13 +27,20 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--offload-finished", action="store_true",
                     help="park finished KV in the host far tier (AMU)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page granularity in token positions")
+    ap.add_argument("--device-pages", type=int, default=None,
+                    help="device page pool size; below max_batch * "
+                         "pages_per_seq the engine oversubscribes and "
+                         "preempts (default: no oversubscription)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-                 offload_finished=args.offload_finished)
+                 offload_finished=args.offload_finished,
+                 page_size=args.page_size, device_pages=args.device_pages)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -57,6 +64,10 @@ def main(argv=None):
           f"(batch occupancy {total_new / max(1, eng.stats['steps'] * args.max_batch):.2f})")
     print(f"[serve] mean TTFT {np.mean(ttft)*1e3:.0f} ms, "
           f"mean latency {np.mean(lat)*1e3:.0f} ms")
+    if eng.paging:
+        print(f"[serve] page pool {eng.page_pool.n_pages} x "
+              f"{eng.page_size} tok: preemptions {eng.stats['preemptions']}, "
+              f"resumes {eng.stats['resumes']}, pager {dict(eng.pager.stats)}")
     if args.offload_finished:
         amu = eng.kv_tier.tier.amu
         print(f"[serve] far-tier AMU stats: {dict(amu.stats)}")

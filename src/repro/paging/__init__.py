@@ -1,0 +1,27 @@
+"""repro.paging — page-granularity far-memory KV subsystem.
+
+Turns the repo's serving layer from whole-sequence KV offload into a
+capacity-oversubscribed paging system, built from three pieces that map
+one-to-one onto the source paper's architecture:
+
+  * :mod:`repro.paging.page_table` — the pool of device page frames
+    (near tier / SPM) and per-sequence logical→physical maps with
+    residency bits (APR-style per-page state),
+  * :mod:`repro.paging.pager` — the AMU traffic engine: LATENCY-QoS
+    ``aload`` prefetch, BULK-QoS ``astore`` writeback, LRU-with-pinning
+    eviction, and per-QoS outstanding windows (MACR QoS at issue),
+  * :mod:`repro.paging.events` — the §2.3.2 event-driven model as a
+    scheduler: decode ticks, ``getfin`` page arrivals, and free-page-
+    watermark admission/preemption decisions.
+"""
+
+from repro.paging.events import Event, EventKind, EventLoop, WatermarkPolicy
+from repro.paging.page_table import (NOT_MAPPED, Frame, PagePool, PageState,
+                                     PageTable, PagingError, pages_for)
+from repro.paging.pager import Pager, QoSWindows
+
+__all__ = [
+    "Event", "EventKind", "EventLoop", "WatermarkPolicy",
+    "NOT_MAPPED", "Frame", "PagePool", "PageState", "PageTable",
+    "PagingError", "pages_for", "Pager", "QoSWindows",
+]

@@ -1,0 +1,116 @@
+"""Event-driven serving scheduler (the paper's §2.3.2 model, generalized).
+
+The paper's event-driven programming model drives computation from
+memory-completion events: issue many asynchronous accesses, then let
+``getfin`` completions — not program order — decide what runs next.
+Here the same loop shape schedules *sequences* instead of cache lines:
+
+  * ``TICK`` — one decode step of the serving engine (the compute event
+    the paper overlaps transfers against),
+  * ``PAGE_ARRIVED`` — a pager ``getfin`` completion flipped a page's
+    residency bit; a waiting sequence may now be runnable,
+  * ``ADMIT`` / ``PREEMPT`` — capacity decisions made from *free-page
+    watermarks* over the device pool, replacing the seed engine's
+    free-slot counting: a request is admitted when the pool can hold
+    its working set above the low watermark, and a victim is preempted
+    when free pages fall below it,
+  * ``COMPLETE`` — a sequence finished and released its pages.
+
+The loop itself is deliberately tiny and deterministic: a FIFO event
+queue drained to empty each iteration, with handlers registered per
+event kind.  Both the serving engine (`repro.serve.engine`) and the
+``paged_kv_sweep`` benchmark drive their scheduling through it.
+"""
+
+from __future__ import annotations
+
+import collections
+import enum
+from dataclasses import dataclass
+from typing import Any, Callable, Deque, Dict, List
+
+from repro.paging.page_table import PagePool, PagingError
+
+__all__ = ["EventKind", "Event", "EventLoop", "WatermarkPolicy"]
+
+
+class EventKind(enum.Enum):
+    TICK = "tick"                    # one decode step elapsed
+    PAGE_ARRIVED = "page_arrived"    # getfin landed a page (seq, logical)
+    ADMIT = "admit"                  # admission decision for a request
+    PREEMPT = "preempt"              # a victim must shed pages
+    COMPLETE = "complete"            # a sequence finished
+
+
+@dataclass
+class Event:
+    kind: EventKind
+    payload: Any = None
+
+
+@dataclass
+class WatermarkPolicy:
+    """Free-page watermark admission/preemption rules.
+
+    low
+        Frames that must remain free *after* an admission for it to be
+        allowed — headroom so active sequences can still grow a page
+        without an immediate preemption storm.
+    critical
+        When free frames fall to/below this, the scheduler should start
+        preempting (shedding cold pages) even between admissions.
+    """
+
+    low: int = 1
+    critical: int = 0
+
+    def can_admit(self, pool: PagePool, pages_needed: int) -> bool:
+        return pool.n_free - pages_needed >= self.low
+
+    def should_preempt(self, pool: PagePool) -> bool:
+        return pool.n_free <= self.critical
+
+    def deficit(self, pool: PagePool, pages_needed: int) -> int:
+        """Frames that must be freed before ``pages_needed`` fits."""
+        return max(0, pages_needed + self.low - pool.n_free)
+
+
+class EventLoop:
+    """FIFO event queue with per-kind handlers, drained to quiescence."""
+
+    def __init__(self) -> None:
+        self._q: Deque[Event] = collections.deque()
+        self._handlers: Dict[EventKind, List[Callable[[Event], None]]] = \
+            collections.defaultdict(list)
+        self.ticks = 0
+        self.history: collections.Counter = collections.Counter()
+
+    def on(self, kind: EventKind, handler: Callable[[Event], None]) -> None:
+        self._handlers[kind].append(handler)
+
+    def post(self, kind: EventKind, payload: Any = None) -> None:
+        self._q.append(Event(kind, payload))
+
+    def tick(self) -> None:
+        """Post one TICK and drain — the per-decode-step heartbeat."""
+        self.ticks += 1
+        self.post(EventKind.TICK, self.ticks)
+        self.drain()
+
+    def drain(self, max_events: int = 100_000) -> int:
+        """Dispatch queued events (and any they post) until quiescent."""
+        n = 0
+        while self._q:
+            if n >= max_events:
+                raise PagingError("event loop livelock: "
+                                  f"{max_events} events without quiescing")
+            ev = self._q.popleft()
+            self.history[ev.kind] += 1
+            for h in self._handlers.get(ev.kind, ()):
+                h(ev)
+            n += 1
+        return n
+
+    @property
+    def pending(self) -> int:
+        return len(self._q)

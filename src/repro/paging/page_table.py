@@ -1,0 +1,291 @@
+"""Page tables over a fixed device page pool.
+
+The paper's far-memory model applied at *page granularity*: instead of
+moving one sequence's entire KV as a single AMU request (the coarse
+blocking-transfer pattern §1 argues against), KV state is carved into
+fixed-size pages of token positions.  A page is the unit of transfer,
+residency and eviction — the central systems knob the memory-
+disaggregation literature identifies.
+
+Two objects:
+
+  * :class:`PagePool` — the physical device pages (the near tier /
+    SPM in paper terms).  A fixed number of frames, a free heap, and
+    per-frame metadata: owner, residency, dirty, pin, last-use tick.
+    Frames are reused without zeroing (CoW-free reuse: a page's content
+    is always fully overwritten by its next owner before being read).
+  * :class:`PageTable` — per-sequence logical→physical maps.  Each
+    entry is one page's *Access Pattern Register* worth of state: where
+    the page lives (device frame / far tier / in flight) plus the
+    residency bit the pager flips as ``getfin`` completions land.
+
+Mapping onto the paper's vocabulary: a page table entry's physical
+frame id is what an APR base address would hold; the per-page
+:class:`PageState` is the completion state machine that ``aload`` /
+``astore`` / ``getfin`` drive; and the pool's free-frame watermarks are
+what the event-driven scheduler (``repro.paging.events``) consults in
+place of the paper's free-SPM-slot counts.
+"""
+
+from __future__ import annotations
+
+import enum
+import heapq
+from dataclasses import dataclass, field
+from typing import Any, Dict, Hashable, List, Optional
+
+from repro.core.amu import AMUError
+
+__all__ = ["PagingError", "PageState", "Frame", "PagePool", "PageTable",
+           "NOT_MAPPED", "pages_for"]
+
+#: Physical frame id meaning "no device frame backs this entry".
+NOT_MAPPED: int = -1
+
+
+class PagingError(AMUError):
+    """Invalid paging-layer usage (double free, bad map, pool misuse)."""
+
+
+class PageState(enum.Enum):
+    UNMAPPED = "unmapped"    # never allocated (beyond the sequence's length)
+    RESIDENT = "resident"    # device frame holds the page
+    PARKED = "parked"        # far tier holds the page; no device frame
+    ARRIVING = "arriving"    # aload in flight; device frame reserved
+
+
+@dataclass
+class Frame:
+    """Per-physical-page metadata (the pool's frame table row)."""
+
+    phys: int
+    owner: Optional[Hashable] = None
+    logical: int = -1
+    pinned: bool = False
+    dirty: bool = False
+    last_use: int = 0
+    data: Any = None         # frame contents when not materialised elsewhere
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Number of pages covering ``n_tokens`` positions."""
+    return -(-max(0, n_tokens) // page_size)
+
+
+class PagePool:
+    """Fixed pool of device page frames with a free heap.
+
+    The free list is a min-heap so allocation is O(log n) and frame ids
+    are reused lowest-first (deterministic layouts for tests).
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1:
+            raise PagingError("PagePool needs at least one page")
+        if page_size < 1:
+            raise PagingError("page_size must be >= 1 tokens")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.frames: List[Frame] = [Frame(phys=i) for i in range(n_pages)]
+        self._free: List[int] = list(range(n_pages))
+        heapq.heapify(self._free)
+        self._allocated = [False] * n_pages
+        self._use_seq = 0            # monotonic recency stamp for LRU
+
+    # -- alloc/free ---------------------------------------------------------
+    def alloc(self, owner: Hashable, logical: int) -> int:
+        """Take a free frame for (owner, logical); raises when exhausted."""
+        if not self._free:
+            raise PagingError("page pool exhausted")
+        phys = heapq.heappop(self._free)
+        self._allocated[phys] = True
+        f = self.frames[phys]
+        f.owner, f.logical = owner, logical
+        f.pinned = f.dirty = False
+        f.data = None
+        return phys
+
+    def free(self, phys: int) -> None:
+        self._check(phys)
+        if not self._allocated[phys]:
+            raise PagingError(f"double free of frame {phys}")
+        f = self.frames[phys]
+        if f.pinned:
+            raise PagingError(f"cannot free pinned frame {phys}")
+        f.owner, f.logical, f.dirty, f.data = None, -1, False, None
+        self._allocated[phys] = False
+        heapq.heappush(self._free, phys)
+
+    # -- metadata -----------------------------------------------------------
+    def pin(self, phys: int) -> None:
+        self._check_live(phys)
+        self.frames[phys].pinned = True
+
+    def unpin(self, phys: int) -> None:
+        self._check_live(phys)
+        self.frames[phys].pinned = False
+
+    def touch(self, phys: int) -> None:
+        """Stamp a frame as most-recently-used (internal monotonic
+        counter, so pager completions and scheduler ticks share one
+        recency order)."""
+        self._check_live(phys)
+        self._use_seq += 1
+        self.frames[phys].last_use = self._use_seq
+
+    def mark_dirty(self, phys: int, dirty: bool = True) -> None:
+        self._check_live(phys)
+        self.frames[phys].dirty = dirty
+
+    def lru_victims(self, n: int) -> List[int]:
+        """Up to ``n`` unpinned allocated frames, least-recently-used first."""
+        live = [f for f in self.frames
+                if self._allocated[f.phys] and not f.pinned]
+        live.sort(key=lambda f: (f.last_use, f.phys))
+        return [f.phys for f in live[:n]]
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def _check(self, phys: int) -> None:
+        if not 0 <= phys < self.n_pages:
+            raise PagingError(f"bad frame id {phys}")
+
+    def _check_live(self, phys: int) -> None:
+        self._check(phys)
+        if not self._allocated[phys]:
+            raise PagingError(f"frame {phys} is not allocated")
+
+
+@dataclass
+class PTE:
+    """One logical page's entry: state + device frame when resident."""
+
+    state: PageState = PageState.UNMAPPED
+    phys: int = NOT_MAPPED
+
+
+class PageTable:
+    """Per-sequence logical→physical page maps over one :class:`PagePool`."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self._maps: Dict[Hashable, List[PTE]] = {}
+
+    # -- sequence lifecycle --------------------------------------------------
+    def register(self, seq: Hashable) -> None:
+        if seq in self._maps:
+            raise PagingError(f"sequence {seq!r} already registered")
+        self._maps[seq] = []
+
+    def register_parked(self, seq: Hashable, n_pages: int) -> None:
+        """Register a sequence whose pages all start in the far tier
+        (restore / cold-start path: no device frames are taken)."""
+        self.register(seq)
+        self._maps[seq] = [PTE(state=PageState.PARKED)
+                           for _ in range(n_pages)]
+
+    def drop(self, seq: Hashable) -> None:
+        """Unregister a sequence, freeing every device frame it maps."""
+        for pte in self._entries(seq):
+            if pte.phys != NOT_MAPPED:
+                self.pool.frames[pte.phys].pinned = False
+                self.pool.free(pte.phys)
+        del self._maps[seq]
+
+    def sequences(self) -> List[Hashable]:
+        return list(self._maps)
+
+    # -- growth --------------------------------------------------------------
+    def ensure_capacity(self, seq: Hashable, n_tokens: int) -> List[int]:
+        """Extend the map so ``n_tokens`` positions are covered by RESIDENT
+        pages, allocating frames for any new logical pages.  Returns the
+        list of newly-allocated logical page indices."""
+        entries = self._entries(seq)
+        need = pages_for(n_tokens, self.pool.page_size)
+        new: List[int] = []
+        while len(entries) < need:
+            logical = len(entries)
+            phys = self.pool.alloc(seq, logical)
+            entries.append(PTE(state=PageState.RESIDENT, phys=phys))
+            new.append(logical)
+        return new
+
+    def truncate(self, seq: Hashable, n_pages: int) -> None:
+        """Drop trailing entries beyond ``n_pages``, freeing any frames
+        they hold (growth pages that never received content)."""
+        entries = self._entries(seq)
+        while len(entries) > n_pages:
+            pte = entries.pop()
+            if pte.phys != NOT_MAPPED:
+                self.pool.frames[pte.phys].pinned = False
+                self.pool.free(pte.phys)
+
+    def pages_needed(self, seq_or_tokens, n_tokens: Optional[int] = None) -> int:
+        """Additional frames required to cover ``n_tokens`` positions.
+        Call as ``pages_needed(n_tokens)`` for an unregistered sequence."""
+        if n_tokens is None:
+            return pages_for(seq_or_tokens, self.pool.page_size)
+        have = len(self._entries(seq_or_tokens))
+        return max(0, pages_for(n_tokens, self.pool.page_size) - have)
+
+    # -- entry access --------------------------------------------------------
+    def entry(self, seq: Hashable, logical: int) -> PTE:
+        entries = self._entries(seq)
+        if not 0 <= logical < len(entries):
+            raise PagingError(f"sequence {seq!r} has no logical page {logical}")
+        return entries[logical]
+
+    def n_pages(self, seq: Hashable) -> int:
+        return len(self._entries(seq))
+
+    def logical_pages(self, seq: Hashable, state: Optional[PageState] = None
+                      ) -> List[int]:
+        return [i for i, p in enumerate(self._entries(seq))
+                if state is None or p.state is state]
+
+    def resident(self, seq: Hashable) -> bool:
+        """True iff every mapped page of ``seq`` is device-resident."""
+        entries = self._entries(seq)
+        return all(p.state is PageState.RESIDENT for p in entries)
+
+    # -- state transitions (driven by the pager) -----------------------------
+    def mark_parked(self, seq: Hashable, logical: int) -> int:
+        """RESIDENT → PARKED; frees and returns the frame id."""
+        pte = self.entry(seq, logical)
+        if pte.state is not PageState.RESIDENT:
+            raise PagingError(
+                f"park of non-resident page ({seq!r}, {logical}): {pte.state}")
+        phys, pte.phys = pte.phys, NOT_MAPPED
+        pte.state = PageState.PARKED
+        self.pool.frames[phys].pinned = False
+        self.pool.free(phys)
+        return phys
+
+    def mark_arriving(self, seq: Hashable, logical: int) -> int:
+        """PARKED → ARRIVING; allocates and returns the reserved frame."""
+        pte = self.entry(seq, logical)
+        if pte.state is not PageState.PARKED:
+            raise PagingError(
+                f"fetch of non-parked page ({seq!r}, {logical}): {pte.state}")
+        pte.phys = self.pool.alloc(seq, logical)
+        pte.state = PageState.ARRIVING
+        return pte.phys
+
+    def mark_resident(self, seq: Hashable, logical: int) -> None:
+        """ARRIVING → RESIDENT (the page's residency bit; getfin landed)."""
+        pte = self.entry(seq, logical)
+        if pte.state is not PageState.ARRIVING:
+            raise PagingError(
+                f"arrival for page ({seq!r}, {logical}) in state {pte.state}")
+        pte.state = PageState.RESIDENT
+
+    def _entries(self, seq: Hashable) -> List[PTE]:
+        if seq not in self._maps:
+            raise PagingError(f"unknown sequence {seq!r}")
+        return self._maps[seq]

@@ -1,0 +1,325 @@
+"""AMU-backed demand/prefetch pager over the device page pool.
+
+The pager is the traffic engine between the pool (near tier) and the
+far tier, expressed entirely as the paper's instruction set against
+:class:`repro.core.amu.AMU`:
+
+  * **prefetch** — LATENCY-QoS ``aload`` of the next-needed pages,
+    issued while the current decode step computes, so the far-memory
+    latency hides behind useful work (the paper's MACR: a small
+    granularity + high priority for latency-critical random access),
+  * **writeback / eviction** — BULK-QoS ``astore`` of cold or evicted
+    pages under an LRU-with-pinning policy (pinned frames back active
+    decode slots and are never victims),
+  * **poll** — ``getfin``: non-blocking completion drain that flips the
+    page table's residency bits and never stalls the event loop.
+
+On top of the AMU's global outstanding-slot queue the pager adds
+*per-QoS outstanding windows*: each class gets its own bounded window
+so BULK writeback can never occupy every hardware queue entry ahead of
+a latency-critical fetch — the QoS field of the paper's Memory Access
+Configuration Register enforced at the issue stage.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
+
+from repro.core.amu import AMU, AccessConfig, FAILURE_CODE, QoS, SimBackend
+from repro.paging.page_table import (PagePool, PageState, PageTable,
+                                     PagingError)
+
+__all__ = ["Pager", "QoSWindows"]
+
+_PENDING = -2        # rid sentinel: request queued behind its QoS window
+
+
+class QoSWindows:
+    """Per-QoS outstanding-request windows layered over one AMU queue."""
+
+    def __init__(self, windows: Dict[QoS, int]):
+        for q, w in windows.items():
+            if w < 1:
+                raise PagingError(f"QoS window for {q.name} must be >= 1")
+        self.limit = dict(windows)
+        self.in_flight: Dict[QoS, int] = {q: 0 for q in windows}
+
+    def has_room(self, qos: QoS) -> bool:
+        return self.in_flight[qos] < self.limit[qos]
+
+    def take(self, qos: QoS) -> None:
+        if not self.has_room(qos):
+            raise PagingError(f"QoS window {qos.name} full")
+        self.in_flight[qos] += 1
+
+    def release(self, qos: QoS) -> None:
+        if self.in_flight[qos] <= 0:
+            raise PagingError(f"QoS window {qos.name} release underflow")
+        self.in_flight[qos] -= 1
+
+
+class Pager:
+    """Demand/prefetch pager: moves pages between pool frames and the
+    far tier through LATENCY aloads and BULK astores."""
+
+    def __init__(
+        self,
+        pool: PagePool,
+        table: PageTable,
+        amu: Optional[AMU] = None,
+        *,
+        page_nbytes: int = 1 << 16,
+        latency_window: int = 16,
+        bulk_window: int = 4,
+        granularity: Optional[int] = None,
+    ):
+        self.pool = pool
+        self.table = table
+        self.amu = amu or AMU(max_outstanding=latency_window + bulk_window)
+        self.page_nbytes = int(page_nbytes)
+        g = granularity or self.page_nbytes
+        self.fetch_config = AccessConfig(granularity_bytes=g, qos=QoS.LATENCY)
+        self.evict_config = AccessConfig(granularity_bytes=g, qos=QoS.BULK)
+        self.windows = QoSWindows({QoS.LATENCY: latency_window,
+                                   QoS.BULK: bulk_window})
+        self._far: Dict[Tuple[Hashable, int], Any] = {}    # far-tier home copies
+        self._inflight: Dict[int, Tuple[str, Hashable, int]] = {}
+        self._page_rid: Dict[Tuple[Hashable, int], int] = {}
+        self._pending: Dict[QoS, Deque[Tuple[str, Hashable, int,
+                                             Callable[[], int]]]] = {
+            QoS.LATENCY: collections.deque(),
+            QoS.BULK: collections.deque(),
+        }
+        self.stats = collections.Counter()
+
+    # -- write path: park / writeback ---------------------------------------
+    def writeback(self, seq: Hashable, logical: int, data: Any) -> None:
+        """Park one RESIDENT page: the far tier becomes its home (BULK
+        astore models the transfer), and its device frame is freed."""
+        self.table.mark_parked(seq, logical)
+        self._far[(seq, logical)] = data
+        self.stats["writeback"] += 1
+        self._issue(QoS.BULK, "astore", seq, logical,
+                    lambda: self.amu.astore(data, nbytes=self.page_nbytes,
+                                            config=self.evict_config))
+
+    def park_clean(self, seq: Hashable, logical: int) -> None:
+        """Park a page whose far-tier home copy is already current —
+        no astore traffic (the clean-eviction fast path)."""
+        if (seq, logical) not in self._far:
+            raise PagingError(
+                f"page ({seq!r}, {logical}) has no far-tier copy; "
+                "use writeback for dirty pages")
+        self.table.mark_parked(seq, logical)
+        self.stats["clean_evict"] += 1
+
+    def evict(self, seq: Hashable, logical: int) -> None:
+        """Evict one resident page: BULK writeback when its frame is
+        dirty, frame free only when clean."""
+        pte = self.table.entry(seq, logical)
+        if pte.state is not PageState.RESIDENT:
+            raise PagingError(
+                f"evict of non-resident page ({seq!r}, {logical})")
+        frame = self.pool.frames[pte.phys]
+        if frame.dirty or (seq, logical) not in self._far:
+            self.writeback(seq, logical, frame.data)
+        else:
+            self.park_clean(seq, logical)
+        self.stats["evictions"] += 1
+
+    def evict_lru(self, n: int) -> int:
+        """Evict up to ``n`` unpinned RESIDENT frames, least-recently-used
+        first (ARRIVING frames have a fetch in flight and are skipped).
+        Returns how many were actually evicted."""
+        done = 0
+        for phys in self.pool.lru_victims(self.pool.n_pages):
+            if done >= n:
+                break
+            f = self.pool.frames[phys]
+            if self.table.entry(f.owner, f.logical).state \
+                    is not PageState.RESIDENT:
+                continue
+            self.evict(f.owner, f.logical)
+            done += 1
+        return done
+
+    # -- read path: prefetch / demand fetch ---------------------------------
+    def prefetch(self, seq: Hashable, logical: int) -> bool:
+        """Begin a LATENCY aload of one PARKED page (non-blocking).
+        Returns False when the page is already resident or in flight."""
+        pte = self.table.entry(seq, logical)
+        if pte.state in (PageState.RESIDENT, PageState.ARRIVING):
+            return False
+        if self.pool.n_free == 0:
+            self.stats["prefetch_no_frame"] += 1
+            return False
+        self.table.mark_arriving(seq, logical)
+        src = self._far[(seq, logical)]
+        self.stats["prefetch"] += 1
+        self._issue(QoS.LATENCY, "aload", seq, logical,
+                    lambda: self.amu.aload(src, nbytes=self.page_nbytes,
+                                           config=self.fetch_config))
+        return True
+
+    def prefetch_seq(self, seq: Hashable, *, tail_first: bool = True) -> int:
+        """Prefetch every parked page of ``seq``; with ``tail_first`` the
+        hot tail (most recent positions) is issued — and so arrives —
+        first, which is the order a rescheduled decode touches them."""
+        parked = self.table.logical_pages(seq, PageState.PARKED)
+        if tail_first:
+            parked = parked[::-1]
+        n = 0
+        for logical in parked:
+            n += bool(self.prefetch(seq, logical))
+        return n
+
+    def poll(self) -> List[Tuple[Hashable, int]]:
+        """getfin until the completion queue is empty; returns the pages
+        whose aloads landed this call (residency bits now set)."""
+        arrived: List[Tuple[Hashable, int]] = []
+        while True:
+            rid = self.amu.getfin()
+            if rid == FAILURE_CODE:
+                break
+            got = self._finish(rid)
+            if got is not None:
+                arrived.append(got)
+        self._pump()
+        return arrived
+
+    def wait_page(self, seq: Hashable, logical: int) -> None:
+        """Blocking: ensure one page is RESIDENT (demand fetch)."""
+        pte = self.table.entry(seq, logical)
+        if pte.state is PageState.RESIDENT:
+            return
+        if pte.state is PageState.PARKED:
+            if self.pool.n_free == 0 and not self.evict_lru(1):
+                raise PagingError(
+                    f"demand fetch of ({seq!r}, {logical}): pool "
+                    "exhausted and nothing evictable")
+            if not self.prefetch(seq, logical):
+                raise PagingError(
+                    f"demand fetch of ({seq!r}, {logical}) failed to issue")
+            self.stats["demand_fetch"] += 1
+        rid = self._page_rid.get((seq, logical), _PENDING)
+        if rid == _PENDING:
+            self._force_issue(seq, logical)
+            rid = self._page_rid[(seq, logical)]
+        self.amu.wait(rid)
+        self._finish(rid)
+
+    def wait_arriving(self, seq: Hashable) -> None:
+        """Blocking: land every ARRIVING page of ``seq`` (no new frames
+        are taken — safe under pool pressure)."""
+        for logical in self.table.logical_pages(seq, PageState.ARRIVING):
+            self.wait_page(seq, logical)
+
+    def wait_seq(self, seq: Hashable) -> None:
+        """Blocking: ensure every page of ``seq`` is RESIDENT.  Parked
+        pages are all issued before the first wait so their transfers
+        overlap each other (never one-fetch-at-a-time)."""
+        self.prefetch_seq(seq, tail_first=False)
+        for logical in range(self.table.n_pages(seq)):
+            self.wait_page(seq, logical)
+
+    # -- far-tier access ------------------------------------------------------
+    def far_copy(self, seq: Hashable, logical: int) -> Any:
+        return self._far[(seq, logical)]
+
+    def has_far(self, seq: Hashable, logical: int) -> bool:
+        return (seq, logical) in self._far
+
+    def store_far(self, seq: Hashable, logical: int, data: Any) -> None:
+        self._far[(seq, logical)] = data
+
+    def drop_far(self, seq: Hashable) -> None:
+        for key in [k for k in self._far if k[0] == seq]:
+            del self._far[key]
+        for key in [k for k in self._page_rid if k[0] == seq]:
+            del self._page_rid[key]
+
+    def advance(self, dt: float) -> List[Tuple[Hashable, int]]:
+        """Advance a simulated backend's clock by ``dt`` and poll.  On a
+        real backend this is just a poll (time advances by itself)."""
+        if isinstance(self.amu.backend, SimBackend):
+            self.amu.backend.advance(dt)
+        return self.poll()
+
+    # -- issue machinery -----------------------------------------------------
+    def _issue(self, qos: QoS, kind: str, seq: Hashable, logical: int,
+               submit: Callable[[], int]) -> None:
+        if self.windows.has_room(qos):
+            self.windows.take(qos)
+            rid = submit()
+            self._track(rid, kind, seq, logical)
+        else:
+            self.stats["window_queued"] += 1
+            if kind == "aload":
+                self._page_rid[(seq, logical)] = _PENDING
+            self._pending[qos].append((kind, seq, logical, submit))
+
+    def _track(self, rid: int, kind: str, seq: Hashable, logical: int) -> None:
+        self._inflight[rid] = (kind, seq, logical)
+        if kind == "aload":
+            self._page_rid[(seq, logical)] = rid
+
+    def _pump(self) -> None:
+        for qos in (QoS.LATENCY, QoS.BULK):       # latency class drains first
+            dq = self._pending[qos]
+            while dq and self.windows.has_room(qos):
+                kind, seq, logical, submit = dq.popleft()
+                self.windows.take(qos)
+                rid = submit()
+                self._track(rid, kind, seq, logical)
+
+    def _force_issue(self, seq: Hashable, logical: int) -> None:
+        for qos, dq in self._pending.items():
+            for i, (kind, s, l, submit) in enumerate(dq):
+                if (s, l) == (seq, logical):
+                    del dq[i]
+                    while not self.windows.has_room(qos):
+                        self._drain_one(qos)
+                    self.windows.take(qos)
+                    rid = submit()
+                    self._track(rid, kind, seq, logical)
+                    return
+        raise PagingError(f"page ({seq!r}, {logical}) not pending")
+
+    def _drain_one(self, qos: QoS) -> None:
+        """Make room in a full window by finishing one of its requests."""
+        for rid, (kind, _, _) in list(self._inflight.items()):
+            if self._qos_of(kind) is qos:
+                self.amu.wait(rid)
+                self._finish(rid)
+                return
+        raise PagingError(f"QoS window {qos.name} full with nothing in flight")
+
+    def _qos_of(self, kind: str) -> QoS:
+        return QoS.LATENCY if kind == "aload" else QoS.BULK
+
+    def _finish(self, rid: int) -> Optional[Tuple[Hashable, int]]:
+        """Bookkeeping for one consumed completion id."""
+        entry = self._inflight.pop(rid, None)
+        if entry is None:
+            return None                       # foreign request on a shared AMU
+        kind, seq, logical = entry
+        self.windows.release(self._qos_of(kind))
+        self._pump()
+        if kind != "aload":
+            return None
+        self._page_rid.pop((seq, logical), None)
+        # The sequence may have been dropped while its fetch was in flight.
+        try:
+            pte = self.table.entry(seq, logical)
+        except PagingError:
+            return None
+        if pte.state is PageState.ARRIVING:
+            frame = self.pool.frames[pte.phys]
+            frame.data = self._far[(seq, logical)]
+            frame.dirty = False
+            self.table.mark_resident(seq, logical)
+            self.pool.touch(pte.phys)
+            self.stats["arrived"] += 1
+            return (seq, logical)
+        return None

@@ -1,15 +1,31 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine over the paged KV subsystem.
 
 The scheduler is the paper's *event-driven model* (§2.3.2) applied to
-requests instead of cache lines: decode steps are the event loop; new
-requests are admitted into free slots the moment one finishes (no
-drain-the-batch barrier); parked sequences come back from the host KV
-tier via AMU prefetch that overlaps the current decode step.
+requests instead of cache lines: decode steps are the event loop's
+ticks; pager ``getfin`` completions post PAGE_ARRIVED events; admission
+and preemption decisions come from *free-page watermarks* over the
+device page pool (``repro.paging``) instead of free-slot counts.  This
+is what lets the engine admit more concurrent sequences than device
+memory can hold:
 
-Decode runs with a *fixed* batch of ``max_batch`` slots (one compiled
-program); per-slot positions (``Cache.pos`` is per-sequence) make the
-mixed-depth batch correct.  Empty slots decode garbage that is simply
-ignored — the standard fixed-shape trade on TPU.
+  * each sequence's KV is accounted in fixed-size pages of a shared
+    :class:`~repro.paging.PagePool`; active slots pin their pages,
+  * when growth (or a new admission) exceeds the pool, a victim is
+    *preempted*: only its **cold** pages are written back (BULK-QoS
+    ``astore``; pages whose far-tier copy is still current move for
+    free), while the hot tail stays cached on-device,
+  * rescheduling prefetches the parked pages **hot tail first** with
+    LATENCY-QoS ``aload`` that overlaps the current decode step; the
+    sequence re-enters a slot the moment its residency bits are all set
+    — no re-prefill, bit-exact resume.
+
+Decode itself is mesh-sharded: the step function comes from
+``repro.dist.steps.make_serve_step`` (TP-sharded params, donated cache)
+bound to the engine's mesh — a 1×1 mesh by default, the production
+(data, model) mesh when one is passed in.  Decode runs with a *fixed*
+batch of ``max_batch`` slots (one compiled program); per-slot positions
+make the mixed-depth batch correct, and empty slots decode garbage that
+is simply ignored — the standard fixed-shape trade on TPU.
 """
 
 from __future__ import annotations
@@ -23,10 +39,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.models.model import (Cache, decode_step, init_cache, prefill)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.steps import make_serve_step
+from repro.launch.mesh import make_mesh_compat
+from repro.models.model import Cache, init_cache, prefill
+from repro.paging import (EventKind, EventLoop, PagePool, PageState,
+                          PageTable, Pager, PagingError, WatermarkPolicy,
+                          pages_for)
 from repro.serve.kv_cache import (KVOffloadTier, SlotPool, extract_slot,
-                                  insert_slot)
+                                  insert_slot, join_kv_pages, split_kv_pages)
 
 __all__ = ["Request", "Engine"]
 
@@ -44,6 +65,11 @@ class Request:
     submitted_t: float = 0.0
     first_token_t: float = 0.0
     done_t: float = 0.0
+    # paging state (set when the request has been preempted):
+    residue: Any = None                 # non-KV cache remainder while parked
+    clean_pages: int = 0                # leading pages whose far copy is current
+    n_preempts: int = 0
+    admit_seq: int = -1                 # admission order (preemption priority)
 
     @property
     def done(self) -> bool:
@@ -65,6 +91,13 @@ class Engine:
         greedy: bool = True,
         offload_finished: bool = False,
         clock: Callable[[], float] = time.monotonic,
+        mesh=None,
+        page_size: int = 16,
+        device_pages: Optional[int] = None,
+        watermark: Optional[WatermarkPolicy] = None,
+        hot_tail_pages: int = 1,
+        pager: Optional[Pager] = None,
+        step_dt: float = 1e-3,
     ):
         self.cfg = cfg
         self.params = params
@@ -81,17 +114,70 @@ class Engine:
         self.finished: Dict[int, Request] = {}
         self.kv_tier = KVOffloadTier() if offload_finished else None
         self._ids = itertools.count()
-        self._decode = jax.jit(
-            lambda p, c, t: decode_step(p, cfg, c, t))
+        self._admits = itertools.count()
+
+        # -- mesh-sharded decode step (dist.steps, not a raw jit) ----------
+        self.mesh = mesh if mesh is not None else \
+            make_mesh_compat((1, 1), ("data", "model"))
+        shape = ShapeConfig("serve_engine", max_len, max_batch, "decode")
+        self._decode, self._decode_specs = make_serve_step(
+            cfg, self.mesh, shape, donate=False)
         self._prefills: Dict[int, Any] = {}
-        self.stats = {"steps": 0, "prefills": 0, "admitted": 0}
+
+        # -- page-granularity KV residency over a fixed device pool --------
+        kv = self.cache.kv if isinstance(self.cache.kv, dict) else {}
+        self.paging = "k" in kv
+        self.page_size = page_size
+        self.step_dt = step_dt
+        self.hot_tail_pages = max(0, hot_tail_pages)
+        self._resuming: Dict[int, Request] = {}
+        if self.paging:
+            k = kv["k"]
+            self.slot_tokens = int(k.shape[2])       # ring size for SWA
+            per_seq = pages_for(self.slot_tokens, page_size)
+            n_pages = device_pages if device_pages is not None \
+                else max_batch * per_seq
+            page_nbytes = int(2 * k.shape[0] * page_size * k.shape[3]
+                              * k.shape[4] * k.dtype.itemsize)
+            self.page_pool = PagePool(n_pages, page_size)
+            self.page_table = PageTable(self.page_pool)
+            self.pager = pager or Pager(self.page_pool, self.page_table,
+                                        page_nbytes=page_nbytes)
+        else:
+            self.slot_tokens = 0
+            self.page_pool = self.page_table = self.pager = None
+        self.policy = watermark or WatermarkPolicy(low=0, critical=0)
+
+        self.events = EventLoop()
+        self.events.on(EventKind.TICK, self._on_tick)
+        self.events.on(EventKind.PAGE_ARRIVED, self._on_page_arrived)
+        self.events.on(EventKind.COMPLETE, self._on_complete)
+        self.stats = {"steps": 0, "prefills": 0, "admitted": 0,
+                      "preemptions": 0, "resumes": 0}
 
     # -- public API ----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
                eos_id: Optional[int] = None,
                src_embeds: Optional[np.ndarray] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if self.paging:
+            full = pages_for(min(len(prompt) + max_new_tokens,
+                                 self.slot_tokens), self.page_size)
+            if full > self.page_pool.n_pages:
+                raise PagingError(
+                    f"request needs {full} pages; pool has only "
+                    f"{self.page_pool.n_pages} — it could never complete")
+            # admission only ever needs the prompt's pages (growth is
+            # exempt from the low watermark) — reject what can't admit
+            admit = pages_for(min(len(prompt), self.slot_tokens),
+                              self.page_size)
+            if admit + self.policy.low > self.page_pool.n_pages:
+                raise PagingError(
+                    f"request needs {admit} pages at admission; pool of "
+                    f"{self.page_pool.n_pages} under low watermark "
+                    f"{self.policy.low} can never admit it")
         rid = next(self._ids)
-        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+        req = Request(rid=rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
                       src_embeds=src_embeds, submitted_t=self.clock())
         self.queue.append(req)
@@ -100,12 +186,53 @@ class Engine:
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         """Event loop until every submitted request completes."""
         for _ in range(max_steps):
-            if not self.queue and not self.active:
+            if not self.queue and not self.active and not self._resuming:
                 break
             self._admit()
             if self.active:
                 self._step()
+            self.events.tick()
+            if not self.active and self._resuming:
+                # nothing decodable: land the in-flight pages, then
+                # demand-fetch the head resume so the loop always
+                # progresses (its misses may evict other resumes' pages)
+                for req in list(self._resuming.values()):
+                    self.pager.wait_arriving(req.rid)
+                self.pager.wait_seq(next(iter(self._resuming.values())).rid)
+                self._admit()
+            if not self.active and not self._resuming and self.queue:
+                # everything just finished this step: retry admission
+                # now rather than waiting for the next iteration
+                self._admit()
+                if not self.active and not self._resuming:
+                    # nothing running and nothing in flight: the state
+                    # can never change, so admission is blocked for
+                    # good — fail loudly instead of spinning to max_steps
+                    raise PagingError(
+                        f"{len(self.queue)} queued requests can never be "
+                        "admitted (free pages "
+                        f"{self.page_pool.n_free if self.paging else 'n/a'}"
+                        f", low watermark {self.policy.low})")
         return {r.rid: r.generated for r in self.finished.values()}
+
+    # -- event handlers -------------------------------------------------------
+    def _on_tick(self, ev) -> None:
+        if self.pager is None:
+            return
+        for seq, logical in self.pager.advance(self.step_dt):
+            self.events.post(EventKind.PAGE_ARRIVED, (seq, logical))
+
+    def _on_page_arrived(self, ev) -> None:
+        seq, logical = ev.payload
+        pte = self.page_table.entry(seq, logical)
+        if pte.state is PageState.RESIDENT:
+            self.page_pool.touch(pte.phys)
+
+    def _on_complete(self, ev) -> None:
+        rid = ev.payload
+        if self.paging and rid in self.page_table.sequences():
+            self.page_table.drop(rid)
+            self.pager.drop_far(rid)
 
     # -- internals ------------------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -148,21 +275,192 @@ class Engine:
         single = single._replace(pos=jnp.full((1,), plen, jnp.int32))
         return logits, single
 
+    # -- paging helpers -------------------------------------------------------
+    def _make_room(self, need: int, protect: frozenset,
+                   preempt: bool = True) -> bool:
+        """Bring the pool to at least ``need`` free frames.  Escalation
+        order: getfin poll, LRU eviction of unpinned cached pages,
+        draining in-flight fetches (their frames become evictable), then
+        — for growth, never for fresh admission — preempting a victim."""
+        pool = self.page_pool
+        if pool.n_free >= need:
+            return True
+        self.pager.poll()
+        while pool.n_free < need:
+            if self.pager.evict_lru(need - pool.n_free):
+                continue
+            if self._resuming:
+                for req in list(self._resuming.values()):
+                    self.pager.wait_arriving(req.rid)
+                if self.pager.evict_lru(need - pool.n_free):
+                    continue
+            if not preempt or not self._preempt_one(protect):
+                return False
+        return True
+
+    def _preempt_one(self, protect: frozenset) -> bool:
+        """Park the most recently admitted unprotected active sequence."""
+        victims = [r for r in self.active.values()
+                   if r.rid not in protect]
+        if not victims or len(self.active) <= 1:
+            return False
+        victim = max(victims, key=lambda r: r.admit_seq)
+        self._park(victim)
+        return True
+
+    def _park(self, req: Request) -> None:
+        """Preempt: cold pages → far tier (BULK), hot tail stays cached
+        on-device (unpinned, LRU-evictable), slot freed, request back to
+        the head of the queue."""
+        slot = req.slot
+        tokens = int(np.asarray(self.cache.pos)[slot])
+        single = extract_slot(self.cache, slot, self.max_batch)
+        residue, pages = split_kv_pages(single, self.page_size, tokens)
+        rid = req.rid
+        # a frame allocated for the *next* write (pos on a page boundary)
+        # holds no content yet — release it; resume growth re-allocates
+        self.page_table.truncate(rid, len(pages))
+        n_hot = min(self.hot_tail_pages, len(pages))
+        n_cold = len(pages) - n_hot
+        for logical in range(len(pages) - 1, -1, -1):   # tail first: hot
+            pte = self.page_table.entry(rid, logical)
+            self.page_pool.unpin(pte.phys)
+            if logical >= n_cold:                        # hot tail: cached
+                frame = self.page_pool.frames[pte.phys]
+                frame.data = pages[logical]
+                frame.dirty = not (logical < req.clean_pages
+                                   and self.pager.has_far(rid, logical))
+                self.page_pool.touch(pte.phys)
+            elif (logical < req.clean_pages
+                  and self.pager.has_far(rid, logical)):
+                self.pager.park_clean(rid, logical)      # far copy current
+            else:
+                self.pager.writeback(rid, logical, pages[logical])
+        req.residue = residue
+        # append-only KV: full far-tier pages stay valid forever — except
+        # under an SWA ring, where wrap rewrites old pages in place.
+        req.clean_pages = 0 if self.cfg.attention == "swa" \
+            else min(n_cold, tokens // self.page_size)
+        req.n_preempts += 1
+        req.slot = None
+        del self.active[slot]
+        self.pool.release(slot)
+        self.queue.insert(0, req)
+        self.stats["preemptions"] += 1
+        self.events.post(EventKind.PREEMPT, rid)
+
+    def _start_resume(self, req: Request) -> bool:
+        """Begin bringing a parked request back: LATENCY-QoS prefetch of
+        its parked pages, hot tail first, overlapping decode.  A resume
+        is a continuation, not a fresh admission, so like growth it is
+        exempt from the low watermark — it only needs raw frames."""
+        parked = self.page_table.logical_pages(req.rid, PageState.PARKED)
+        if self.page_pool.n_free < len(parked) and \
+                not self._make_room(len(parked), frozenset({req.rid}),
+                                    preempt=False):
+            return False
+        self.pager.prefetch_seq(req.rid, tail_first=True)
+        self._resuming[req.rid] = req
+        return True
+
+    def _try_finish_resumes(self) -> None:
+        """Slot in any resuming request whose pages have all arrived."""
+        for rid, req in list(self._resuming.items()):
+            if not self.page_table.resident(rid):
+                # pages evicted again under pressure mid-resume get a
+                # fresh LATENCY prefetch (no-op when all are in flight)
+                self.pager.prefetch_seq(rid, tail_first=True)
+                continue
+            if not self.pool.n_free:
+                continue
+            pages = []
+            for logical in range(self.page_table.n_pages(rid)):
+                pte = self.page_table.entry(rid, logical)
+                pages.append(self.page_pool.frames[pte.phys].data)
+                self.page_pool.pin(pte.phys)
+                self.page_pool.touch(pte.phys)
+            single = join_kv_pages(req.residue, pages, self.slot_tokens)
+            slot = self.pool.alloc()
+            self.cache = insert_slot(self.cache, single, slot, self.max_batch)
+            req.slot = slot
+            req.residue = None
+            req.admit_seq = next(self._admits)
+            self.active[slot] = req
+            del self._resuming[rid]
+            self.stats["resumes"] += 1
+            self.events.post(EventKind.ADMIT, rid)
+
+    def _alloc_pinned(self, rid: int, n_tokens: int) -> None:
+        """Allocate (pin + mark dirty) frames so ``rid`` covers
+        ``n_tokens`` positions — active slots own their pages."""
+        for logical in self.page_table.ensure_capacity(rid, n_tokens):
+            pte = self.page_table.entry(rid, logical)
+            self.page_pool.pin(pte.phys)
+            self.page_pool.mark_dirty(pte.phys)
+
+    def _ensure_growth(self) -> None:
+        """Before a decode step: every active sequence about to cross a
+        page boundary gets a pinned frame, evicting/preempting under the
+        watermark policy when the pool is short."""
+        pos_np = np.asarray(self.cache.pos)     # one device sync per step
+        for req in list(self.active.values()):
+            if req.slot is None or req.slot not in self.active:
+                continue                    # preempted by an earlier victim
+            pos = int(pos_np[req.slot])
+            if pos >= self.slot_tokens:
+                continue                    # SWA ring wrapped: no growth
+            need = self.page_table.pages_needed(req.rid, pos + 1)
+            if not need:
+                continue
+            if not self._make_room(need, frozenset({req.rid})):
+                raise PagingError(
+                    f"cannot grow request {req.rid}: pool of "
+                    f"{self.page_pool.n_pages} pages exhausted")
+            self._alloc_pinned(req.rid, pos + 1)
+
+    # -- scheduling ------------------------------------------------------------
     def _admit(self) -> None:
-        while self.queue and self.pool.n_free:
-            req = self.queue.pop(0)
+        self._try_finish_resumes()
+        while self.queue:
+            req = self.queue[0]
+            if req.residue is not None:                   # preempted: resume
+                if req.rid in self._resuming or not self._start_resume(req):
+                    break
+                self.queue.pop(0)
+                self._try_finish_resumes()
+                continue
+            if not self.pool.n_free:
+                break
+            if self.paging:
+                need = pages_for(min(len(req.prompt), self.slot_tokens),
+                                 self.page_size)
+                if not self.policy.can_admit(self.page_pool, need) and \
+                        not self._make_room(need + self.policy.low,
+                                            frozenset(), preempt=False):
+                    break
+            self.queue.pop(0)
             slot = self.pool.alloc()
             logits, single = self._prefill_one(req)
             self.cache = insert_slot(self.cache, single, slot, self.max_batch)
             req.slot = slot
+            req.admit_seq = next(self._admits)
+            if self.paging:
+                self.page_table.register(req.rid)
+                self._alloc_pinned(req.rid,
+                                   min(len(req.prompt), self.slot_tokens))
             first = int(np.argmax(np.asarray(logits)[0]))
             req.generated.append(first)
             req.first_token_t = self.clock()
             self.active[slot] = req
             self.stats["admitted"] += 1
+            self.events.post(EventKind.ADMIT, req.rid)
             self._finish_if_done(req)
 
     def _step(self) -> None:
+        if self.paging:
+            self._ensure_growth()
+        if not self.active:
+            return
         toks = np.zeros((self.max_batch, 1), np.int32)
         for slot, req in self.active.items():
             toks[slot, 0] = req.generated[-1]
@@ -188,3 +486,5 @@ class Engine:
             self.pool.release(slot)
         req.done_t = self.clock()
         self.finished[req.rid] = req
+        self.events.post(EventKind.COMPLETE, req.rid)
+        self.events.drain()

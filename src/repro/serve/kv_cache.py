@@ -1,46 +1,65 @@
-"""Serving-side KV management: slot pool + host far-tier via the AMU.
+"""Serving-side KV management: slot pool, page split/join, far tier.
 
 The device cache is the model's stacked ``Cache`` (L x B_slots x ...).
 This module adds what a serving deployment needs around it:
 
-  * :class:`SlotPool` — fixed decode slots, alloc/free,
+  * :class:`SlotPool` — fixed decode slots, heap-backed alloc/free,
   * slot extract/insert — move one sequence's cache state between the
     batched device cache and a standalone per-sequence tree,
-  * :class:`KVOffloadTier` — park preempted/finished sequences' KV in
-    host memory (``astore``) and bring them back with LATENCY-QoS
-    ``aload`` when rescheduled: the paper's far-memory tier applied to
-    KV paging.  Granularity is one sequence's whole KV (the AMU's
-    variable-granularity knob: one big request instead of thousands of
-    cache lines).
+  * :func:`split_kv_pages` / :func:`join_kv_pages` — carve a
+    single-sequence cache into ``repro.paging`` page-granularity far-
+    tier payloads (and back, bit-exact): the transfer unit the engine's
+    pager moves, replacing the seed's one-request-per-whole-sequence
+    pattern the paper argues against,
+  * :class:`KVOffloadTier` — park *finished* sequences' complete KV in
+    host memory (``astore``) and bring it back with LATENCY-QoS
+    ``aload``; live preemption goes through ``repro.paging`` instead.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Hashable, List, Optional
+import heapq
+from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.amu import AMU, AccessConfig, QoS
+from repro.core.amu import AMU, AMUError, AccessConfig, QoS
 from repro.core.offload import FarMemoryTier
 from repro.models.model import Cache
+from repro.paging.page_table import pages_for
 
-__all__ = ["SlotPool", "extract_slot", "insert_slot", "KVOffloadTier"]
+__all__ = ["SlotPool", "extract_slot", "insert_slot", "KVOffloadTier",
+           "split_kv_pages", "join_kv_pages"]
 
 
 class SlotPool:
+    """Fixed decode slots.  The free list is a min-heap so alloc/release
+    are O(log n) (the seed's sort-per-free was O(n log n) per release,
+    O(n² log n) across a drain) and ids hand out lowest-first."""
+
     def __init__(self, n_slots: int):
         self.free: List[int] = list(range(n_slots))
+        heapq.heapify(self.free)
+        self._is_free = [True] * n_slots
         self.n_slots = n_slots
 
     def alloc(self) -> Optional[int]:
-        return self.free.pop(0) if self.free else None
+        if not self.free:
+            return None
+        slot = heapq.heappop(self.free)
+        self._is_free[slot] = False
+        return slot
 
     def release(self, slot: int) -> None:
-        assert 0 <= slot < self.n_slots and slot not in self.free
-        self.free.append(slot)
-        self.free.sort()
+        if not 0 <= slot < self.n_slots:
+            raise AMUError(f"release of invalid slot {slot} "
+                           f"(pool has {self.n_slots})")
+        if self._is_free[slot]:
+            raise AMUError(f"double release of slot {slot}")
+        self._is_free[slot] = True
+        heapq.heappush(self.free, slot)
 
     @property
     def n_free(self) -> int:
@@ -77,6 +96,58 @@ def insert_slot(cache: Cache, single, slot: int, n_slots: int) -> Cache:
                 dst, src.astype(dst.dtype), slot, axis=0)
         return dst
     return jax.tree_util.tree_map(ins, cache, single)
+
+
+def split_kv_pages(single: Cache, page_size: int, n_tokens: int
+                   ) -> Tuple[Cache, List[Dict[str, np.ndarray]]]:
+    """Carve a single-sequence cache into (residue, KV pages).
+
+    Page ``i`` holds token positions ``[i*page_size, (i+1)*page_size)``
+    of the stacked k/v — shape ``(L, 1, page_size, Hkv, D)`` each — as
+    host numpy (the far-tier representation).  The residue is the cache
+    tree with k/v zeroed out: SSM state, cross-attn KV, positions and
+    ring metadata, all tiny relative to the KV and parked whole.
+
+    ``n_tokens`` is clamped to the KV token axis (SWA ring buffers hold
+    at most ``window`` positions regardless of absolute position).
+    """
+    k, v = single.kv["k"], single.kv["v"]
+    valid = min(n_tokens, int(k.shape[2]))
+    n_pages = pages_for(valid, page_size)
+    k_np = np.asarray(k)
+    v_np = np.asarray(v)
+    pages = []
+    for i in range(n_pages):
+        lo, hi = i * page_size, min((i + 1) * page_size, k_np.shape[2])
+        pages.append({"k": k_np[:, :, lo:hi].copy(),
+                      "v": v_np[:, :, lo:hi].copy()})
+    residue = single._replace(kv=dict(
+        single.kv, k=np.zeros_like(k_np[:, :, :0]),
+        v=np.zeros_like(v_np[:, :, :0])))
+    residue = jax.tree_util.tree_map(np.asarray, residue)
+    return residue, pages
+
+
+def join_kv_pages(residue: Cache, pages: List[Dict[str, np.ndarray]],
+                  token_capacity: int) -> Cache:
+    """Inverse of :func:`split_kv_pages`: reassemble the single-sequence
+    cache with its KV materialised from pages into a ``token_capacity``-
+    long buffer (positions past the last page stay zero — never
+    attended, exactly as after prefill)."""
+    L, B, _, Hkv, D = residue.kv["k"].shape
+    kdt = residue.kv["k"].dtype
+    total = sum(pg["k"].shape[2] for pg in pages)
+    if total > token_capacity:
+        raise AMUError(f"pages hold {total} tokens > capacity {token_capacity}")
+    k = np.zeros((L, B, token_capacity, Hkv, D), kdt)
+    v = np.zeros((L, B, token_capacity, Hkv, D), residue.kv["v"].dtype)
+    off = 0
+    for pg in pages:
+        n = pg["k"].shape[2]
+        k[:, :, off:off + n] = pg["k"]
+        v[:, :, off:off + n] = pg["v"]
+        off += n
+    return residue._replace(kv=dict(residue.kv, k=k, v=v))
 
 
 class KVOffloadTier:

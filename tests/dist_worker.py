@@ -90,6 +90,37 @@ def mode_serve_step():
           f"pos={int(cache.pos[0])} shape={l3.shape[0]}x{l3.shape[1]}")
 
 
+def mode_engine():
+    """Serving engine with its decode step mesh-sharded over (2, 4):
+    the Engine builds its step via dist.steps.make_serve_step, so params
+    placed TP-sharded must stay sharded across decode steps."""
+    from repro.configs import get_smoke
+    from repro.dist.sharding import param_specs
+    from repro.dist.steps import abstract_params
+    from repro.models.model import init_params
+    from repro.serve.engine import Engine
+
+    cfg = get_smoke("mistral-nemo-12b")
+    mesh = make_mesh((2, 4), ("data", "model"))
+    pspecs = param_specs(mesh, abstract_params(cfg))
+    with mesh:
+        params = jax.jit(lambda k: init_params(cfg, k),
+                         out_shardings=jax.tree_util.tree_map(
+                             lambda s: NamedSharding(mesh, s),
+                             pspecs))(jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, max_batch=3, max_len=64, mesh=mesh,
+                     prefill_buckets=(16,), page_size=8, device_pages=9)
+        for i in range(5):
+            eng.submit(np.arange(4 + i) % cfg.vocab_size, max_new_tokens=6)
+        out = eng.run()
+    sharded = any("model" in str(leaf.sharding.spec)
+                  for leaf in jax.tree_util.tree_leaves(params)
+                  if hasattr(leaf, "sharding"))
+    lens = sorted(len(v) for v in out.values())
+    print(f"RESULT engine done={len(out)} lens={lens} sharded={sharded} "
+          f"steps={eng.stats['steps']} shared={eng.stats['steps'] < 5 * 6}")
+
+
 def mode_elastic():
     """Save on (2,4), restore and step on (1,4): elastic DP shrink."""
     import tempfile
@@ -162,4 +193,5 @@ def mode_multipod_specs():
 
 if __name__ == "__main__":
     {"train": mode_train_step, "serve": mode_serve_step,
-     "elastic": mode_elastic, "specs": mode_multipod_specs}[sys.argv[1]]()
+     "engine": mode_engine, "elastic": mode_elastic,
+     "specs": mode_multipod_specs}[sys.argv[1]]()

@@ -39,6 +39,16 @@ def test_sharded_prefill_and_serve_step():
     assert "pos=66" in line               # 64 prefill + 2 decode steps
 
 
+def test_engine_decode_mesh_sharded():
+    """Engine wired onto dist.steps.make_serve_step: TP-sharded params,
+    continuous batching and the paged KV pool all on a (2, 4) mesh."""
+    line = _run("engine")
+    assert "done=5" in line
+    assert "lens=[6, 6, 6, 6, 6]" in line
+    assert "sharded=True" in line
+    assert "shared=True" in line          # batched decode, no drain barrier
+
+
 def test_elastic_restart_smaller_mesh():
     line = _run("elastic")
     assert "new_shape=(1, 4)" in line

@@ -1,0 +1,315 @@
+"""repro.paging tests: page-table invariants, pager overlap under
+simulated latency, QoS windows, watermark admission, oversubscribed
+engine end-to-end with forced preemption."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.amu import AMU, AMUError, QoS, SimBackend
+from repro.paging import (EventKind, EventLoop, PagePool, PageState,
+                          PageTable, Pager, PagingError, WatermarkPolicy,
+                          pages_for)
+from repro.paging.sim import simulate_paged_serving
+from repro.serve.kv_cache import SlotPool
+
+
+def make_pager(n_pages=8, page_size=4, base_latency=5e-6, **kw):
+    pool = PagePool(n_pages, page_size)
+    table = PageTable(pool)
+    amu = AMU(backend=SimBackend(base_latency=base_latency, bandwidth=10e9),
+              max_outstanding=64)
+    return pool, table, Pager(pool, table, amu, page_nbytes=1 << 12, **kw)
+
+
+# ---------------------------------------------------------------------------
+# page table / pool invariants
+# ---------------------------------------------------------------------------
+
+def test_page_table_alloc_evict_refault_invariants():
+    pool, table, pager = make_pager(n_pages=6, page_size=4)
+    table.register("a")
+    assert table.ensure_capacity("a", 9) == [0, 1, 2]     # ceil(9/4)
+    assert pool.n_free == 3
+    assert table.resident("a")
+    for l in range(3):
+        pool.mark_dirty(table.entry("a", l).phys)
+
+    # evict all three -> parked, frames back in the pool
+    assert pager.evict_lru(3) == 3
+    assert pool.n_free == 6
+    assert table.logical_pages("a", PageState.PARKED) == [0, 1, 2]
+    assert not table.resident("a")
+
+    # refault: prefetch reserves a frame (ARRIVING), arrival sets the bit
+    assert pager.prefetch("a", 1)
+    assert table.entry("a", 1).state is PageState.ARRIVING
+    assert pool.n_free == 5
+    assert not pager.prefetch("a", 1)          # idempotent while in flight
+    pager.advance(1e-3)
+    assert table.entry("a", 1).state is PageState.RESIDENT
+
+    # drop releases everything, even pinned frames
+    pager.wait_seq("a")
+    pool.pin(table.entry("a", 0).phys)
+    table.drop("a")
+    assert pool.n_free == 6
+    with pytest.raises(PagingError):
+        table.entry("a", 0)
+
+
+def test_pool_exhaustion_double_free_and_pinning():
+    pool = PagePool(2, page_size=4)
+    a = pool.alloc("s", 0)
+    pool.alloc("s", 1)
+    with pytest.raises(PagingError):
+        pool.alloc("s", 2)                     # exhausted
+    pool.pin(a)
+    with pytest.raises(PagingError):
+        pool.free(a)                           # pinned frames cannot free
+    pool.unpin(a)
+    pool.free(a)
+    with pytest.raises(PagingError):
+        pool.free(a)                           # double free
+    assert pool.lru_victims(5) == [1]          # only the unpinned live frame
+
+
+def test_pages_for():
+    assert pages_for(0, 4) == 0
+    assert pages_for(1, 4) == 1
+    assert pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+
+
+def test_slotpool_heap_and_double_release():
+    p = SlotPool(3)
+    slots = [p.alloc() for _ in range(3)]
+    assert slots == [0, 1, 2] and p.alloc() is None
+    p.release(1)
+    assert p.alloc() == 1
+    p.release(2)
+    p.release(0)
+    assert p.alloc() == 0                      # lowest-first, heap order
+    with pytest.raises(AMUError):
+        p.release(2)                           # double release
+    with pytest.raises(AMUError):
+        p.release(99)                          # out of range
+
+
+# ---------------------------------------------------------------------------
+# pager: overlap, QoS windows
+# ---------------------------------------------------------------------------
+
+def test_pager_prefetch_hides_decode_tick():
+    """A page prefetched at tick start must be resident by tick end with
+    zero extra waiting: the fetch latency hides behind >= 1 decode tick."""
+    pool, table, pager = make_pager(base_latency=5e-6)
+    table.register_parked("s", 2)
+    pager.store_far("s", 0, None)
+    pager.store_far("s", 1, None)
+
+    tick = 50e-6                               # one decode step >> fetch
+    pager.prefetch_seq("s")
+    t_before = pager.amu.backend.now
+    pager.advance(tick)                        # the decode step happens
+    assert table.resident("s")                 # landed inside the tick
+    t_after = pager.amu.backend.now
+    assert t_after - t_before == pytest.approx(tick)   # no extra stall
+    # blocking the same fetch instead would have cost extra time
+    pool2, table2, pager2 = make_pager(base_latency=5e-6)
+    table2.register_parked("s", 2)
+    pager2.store_far("s", 0, None)
+    pager2.store_far("s", 1, None)
+    t0 = pager2.amu.backend.now
+    pager2.wait_seq("s")
+    pager2.advance(tick)
+    assert pager2.amu.backend.now - t0 > tick  # fetch serialized with tick
+
+
+def test_pager_qos_windows_limit_outstanding():
+    pool, table, pager = make_pager(n_pages=16, page_size=1, bulk_window=2,
+                                    latency_window=4)
+    table.register("s")
+    table.ensure_capacity("s", 8)
+    for l in range(8):
+        pool.mark_dirty(table.entry("s", l).phys)
+    for l in range(8):                         # 8 dirty evictions, window 2
+        pager.evict("s", l)
+    assert pager.windows.in_flight[QoS.BULK] <= 2
+    assert pager.stats["window_queued"] >= 6
+    for _ in range(6):                         # each poll completes one
+        pager.advance(1.0)                     # window batch, pumps next
+    assert pager.windows.in_flight[QoS.BULK] == 0
+    assert pager.windows.in_flight[QoS.LATENCY] == 0
+
+
+def test_pager_clean_eviction_skips_astore():
+    pool, table, pager = make_pager()
+    table.register_parked("s", 2)
+    pager.store_far("s", 0, None)
+    pager.store_far("s", 1, None)
+    pager.wait_seq("s")                        # fetched pages are clean
+    astores_before = pager.amu.stats["astore"]
+    assert pager.evict_lru(2) == 2
+    assert pager.amu.stats["astore"] == astores_before   # no writeback
+    assert pager.stats["clean_evict"] == 2
+
+
+# ---------------------------------------------------------------------------
+# events / watermarks
+# ---------------------------------------------------------------------------
+
+def test_watermark_policy():
+    pool = PagePool(8, 4)
+    wp = WatermarkPolicy(low=2, critical=1)
+    assert wp.can_admit(pool, 6)
+    assert not wp.can_admit(pool, 7)           # would dip under low
+    assert wp.deficit(pool, 7) == 1
+    for i in range(7):
+        pool.alloc("s", i)
+    assert wp.should_preempt(pool)             # free (1) <= critical
+
+
+def test_event_loop_dispatch_and_livelock_guard():
+    loop = EventLoop()
+    seen = []
+    loop.on(EventKind.PAGE_ARRIVED, lambda ev: seen.append(ev.payload))
+    loop.post(EventKind.PAGE_ARRIVED, ("s", 3))
+    loop.tick()
+    assert seen == [("s", 3)] and loop.ticks == 1
+    loop.on(EventKind.ADMIT, lambda ev: loop.post(EventKind.ADMIT))
+    loop.post(EventKind.ADMIT)
+    with pytest.raises(PagingError):
+        loop.drain(max_events=50)              # self-posting handler
+
+
+# ---------------------------------------------------------------------------
+# policy sim: the paper's claim at the serving level
+# ---------------------------------------------------------------------------
+
+def test_paged_sim_beats_blocking_at_2x_oversubscription():
+    r = simulate_paged_serving(2.0)
+    assert r["speedup"] >= 1.5                 # the acceptance number
+    assert r["hit_rate"] >= 0.8                # prefetch lands in time
+    assert r["bulk_writebacks"] > 0            # dirty tails pay BULK astore
+
+
+def test_paged_sim_determinism():
+    a = simulate_paged_serving(2.0)
+    b = simulate_paged_serving(2.0)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# engine end-to-end: oversubscription + forced preemption
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    from repro.configs import get_smoke
+    from repro.models import init_params
+    cfg = get_smoke("phi4-mini-3.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_oversubscribed_preempts_and_matches_solo(dense_setup):
+    """3 sequences x 3 pages of demand on a 5-page pool: the engine must
+    preempt, park cold pages, resume hot-tail-first, and the preempted
+    request's tokens must equal a solo run (bit-exact page round-trip)."""
+    from repro.serve.engine import Engine
+    cfg, params = dense_setup
+    prompt = np.arange(7) % cfg.vocab_size
+
+    solo = Engine(cfg, params, max_batch=1, max_len=64, prefill_buckets=(16,))
+    solo.submit(prompt, max_new_tokens=12)
+    ref = solo.run()[0]
+
+    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_buckets=(16,),
+                 page_size=8, device_pages=5)
+    rid = eng.submit(prompt, max_new_tokens=12)
+    eng.submit(np.arange(5) % cfg.vocab_size, max_new_tokens=12)
+    eng.submit(np.arange(9) % cfg.vocab_size, max_new_tokens=12)
+    out = eng.run()
+
+    assert len(out) == 3 and all(len(v) == 12 for v in out.values())
+    assert eng.stats["preemptions"] > 0        # pool pressure forced a park
+    assert eng.stats["resumes"] == eng.stats["preemptions"]
+    assert out[rid] == ref                     # exact resume, no re-prefill
+    # page accounting drained cleanly
+    assert eng.page_pool.n_free == eng.page_pool.n_pages
+    assert eng.pager.stats["writeback"] > 0    # cold pages took BULK astore
+    assert eng.pager.stats["arrived"] > 0      # resume came via LATENCY aload
+    assert eng.events.history[EventKind.PREEMPT] == eng.stats["preemptions"]
+
+
+def test_engine_admits_more_demand_than_pool(dense_setup):
+    """Aggregate KV demand is ~2x the device pool; every request must
+    still complete (the oversubscribed-serving acceptance criterion)."""
+    from repro.serve.engine import Engine
+    cfg, params = dense_setup
+    # per request: ceil((5 + 11) / 4) = 4 pages; 6 requests = 24 pages
+    # of total demand on a 12-page pool (2x oversubscription).
+    eng = Engine(cfg, params, max_batch=4, max_len=64, prefill_buckets=(16,),
+                 page_size=4, device_pages=12)
+    for i in range(6):
+        eng.submit(np.arange(5 + i) % cfg.vocab_size, max_new_tokens=11)
+    out = eng.run()
+    assert len(out) == 6 and all(len(v) == 11 for v in out.values())
+    total_demand = sum(pages_for(5 + i + 11, 4) for i in range(6))
+    assert total_demand > eng.page_pool.n_pages
+    assert eng.page_pool.n_free == eng.page_pool.n_pages
+
+
+def test_engine_rejects_impossible_request(dense_setup):
+    from repro.serve.engine import Engine
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, max_batch=2, max_len=64, page_size=8,
+                 device_pages=2)
+    with pytest.raises(PagingError):
+        eng.submit(np.arange(30), max_new_tokens=30)   # needs > pool
+
+
+def test_engine_watermark_blocks_admission(dense_setup):
+    """With a high low-watermark the second request must wait for the
+    first to finish (admission by free pages, not free slots)."""
+    from repro.serve.engine import Engine
+    cfg, params = dense_setup
+    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(16,),
+                 page_size=8, device_pages=4,
+                 watermark=WatermarkPolicy(low=3))
+    eng.submit(np.arange(6), max_new_tokens=4)         # 1..2 pages
+    eng.submit(np.arange(6), max_new_tokens=4)
+    out = eng.run()
+    assert len(out) == 2 and all(len(v) == 4 for v in out.values())
+    # admitting the second (1 page) while the first held one would leave
+    # free < low, so the runs serialize: 3 decode steps each, no sharing
+    assert eng.stats["steps"] >= 2 * 3                 # fully serialized
+    # a prompt whose admission can never clear the watermark is rejected
+    # up front instead of being silently dropped by run()
+    with pytest.raises(PagingError):
+        eng.submit(np.arange(10), max_new_tokens=4)    # 2 pages + low 3 > 4
+
+
+def test_paged_decode_attention_matches_dense():
+    import jax.numpy as jnp
+    from repro.kernels.decode_attention import (decode_attention,
+                                                paged_decode_attention)
+    rng = np.random.default_rng(0)
+    B, H, Hkv, D, page, per_seq = 3, 8, 2, 64, 16, 4
+    N = B * per_seq + 2                        # spare frames stay unused
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((N, page, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((N, page, Hkv, D)), jnp.float32)
+    pt = rng.permutation(N)[:B * per_seq].reshape(B, per_seq).astype(np.int32)
+    lengths = np.array([37, 64, 5], np.int32)  # mixed depths in one call
+    out = paged_decode_attention(q, kp, vp, jnp.asarray(pt),
+                                 jnp.asarray(lengths))
+    kp_np, vp_np = np.asarray(kp), np.asarray(vp)
+    for b in range(B):
+        kd = np.concatenate([kp_np[pt[b, j]] for j in range(per_seq)])[None]
+        vd = np.concatenate([vp_np[pt[b, j]] for j in range(per_seq)])[None]
+        ref = decode_attention(q[b:b + 1], jnp.asarray(kd), jnp.asarray(vd),
+                               valid_len=int(lengths[b]), bkv=16)
+        np.testing.assert_allclose(np.asarray(out[b:b + 1]), np.asarray(ref),
+                                   atol=1e-5)
