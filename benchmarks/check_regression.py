@@ -1,0 +1,84 @@
+"""CI gate: diff a fresh BENCH_smoke.json against the committed baseline.
+
+The ``paged_kv_sweep`` rows are fully deterministic (SimBackend virtual
+clock), so any movement is a code change, not noise.  The gate fails
+when the paged policy's decode throughput (1 / ``paged=...us/tok``) at
+any swept oversubscription ratio drops more than ``--threshold``
+(default 10%) below the committed baseline; improvements just print.
+
+Usage::
+
+    python benchmarks/check_regression.py BENCH_smoke.json \
+        benchmarks/BENCH_baseline.json [--threshold 0.10]
+
+Regenerate the baseline (after an intentional perf change) with::
+
+    PYTHONPATH=src python benchmarks/run.py --smoke \
+        --json benchmarks/BENCH_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict
+
+
+def paged_rows(rows) -> Dict[float, Dict[str, float]]:
+    """oversub -> parsed numeric fields of each paged_kv_sweep row."""
+    out: Dict[float, Dict[str, float]] = {}
+    for row in rows:
+        if row.get("name") != "paged_kv_sweep":
+            continue
+        fields: Dict[str, float] = {}
+        for key, val in re.findall(r"(\w+)=([-\d.]+)", row.get("derived", "")):
+            fields[key] = float(val)
+        if "oversub" in fields:
+            out[fields["oversub"]] = fields
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", type=Path)
+    ap.add_argument("baseline", type=Path)
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="max fractional throughput regression (default 10%)")
+    args = ap.parse_args(argv)
+
+    cur = paged_rows(json.loads(args.current.read_text()))
+    base = paged_rows(json.loads(args.baseline.read_text()))
+    if not base:
+        print("FAIL: baseline has no paged_kv_sweep rows")
+        return 1
+
+    failed = False
+    for oversub, b in sorted(base.items()):
+        c = cur.get(oversub)
+        if c is None:
+            print(f"FAIL: oversub={oversub:g} row missing from current run")
+            failed = True
+            continue
+        # throughput = 1 / us-per-token; regression = throughput drop
+        b_tok = b["paged"]
+        c_tok = c["paged"]
+        change = b_tok / c_tok - 1.0          # >0: faster, <0: slower
+        status = "OK"
+        if change < -args.threshold:
+            status = "FAIL"
+            failed = True
+        print(f"{status}: oversub={oversub:g} paged {b_tok:.2f} -> "
+              f"{c_tok:.2f} us/tok ({change:+.1%} throughput), "
+              f"speedup {b.get('speedup', 0):.2f} -> "
+              f"{c.get('speedup', 0):.2f}")
+    if failed:
+        print(f"paged_kv_sweep throughput regressed beyond "
+              f"{args.threshold:.0%} of the committed baseline")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -89,7 +89,12 @@ def bench_paged_kv_sweep() -> None:
     """repro.paging: AMU prefetching pager vs blocking whole-sequence KV
     fetch, swept over device-pool oversubscription (SimBackend, fully
     deterministic).  Tracks the hit rate and us/token of the paging
-    path in CI; the 2x row is the subsystem's acceptance number."""
+    path in CI; the 2x row is the subsystem's acceptance number.
+
+    ``speedup`` is decode computing on the paged layout directly (the
+    engine's current path — zero densification); ``densify`` is the same
+    pager with the old per-activation join/insert round-trip added, so
+    the delta is what eliminating dense KV re-materialisation buys."""
     from repro.paging.sim import simulate_paged_serving
     for oversub in (1.0, 1.5, 2.0, 4.0, 8.0):
         t0 = time.perf_counter()
@@ -100,6 +105,8 @@ def bench_paged_kv_sweep() -> None:
              f"speedup={r['speedup']:.2f} hit_rate={r['hit_rate']:.3f} "
              f"blocking={r['blocking_us_per_token']:.2f}us/tok "
              f"paged={r['paged_us_per_token']:.2f}us/tok "
+             f"densify={r['paged_densify_us_per_token']:.2f}us/tok "
+             f"densify_speedup={r['speedup_densify']:.2f} "
              f"bulk_wb={r['bulk_writebacks']} demand={r['demand_fetches']}")
 
 

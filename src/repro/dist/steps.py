@@ -35,7 +35,7 @@ from repro.optim.adamw import adamw_init, adamw_update
 __all__ = [
     "make_train_step", "make_prefill_step", "make_serve_step",
     "abstract_params", "abstract_opt_state", "train_inputs",
-    "decode_inputs",
+    "decode_inputs", "paged_cache_specs",
 ]
 
 
@@ -67,6 +67,22 @@ def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
     cache = jax.eval_shape(lambda: model_mod.init_cache(cfg, B, S))
     tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
     return cache, tokens
+
+
+def paged_cache_specs(mesh, cfg: ModelConfig) -> Dict[str, P]:
+    """PartitionSpecs for the PagedCache pool layout.
+
+    Frames are ``(L, N, page, Hkv, D)``: the KV-head axis shards over
+    ``model`` exactly like the dense per-slot cache would, provided the
+    head count divides the axis; otherwise the pool replicates (the
+    page table and positions always do — they are tiny int32 control
+    state every shard needs whole, like the paper's APRs).
+    """
+    model_size = mesh.shape.get("model", 1)
+    pages = (P(None, None, None, "model", None)
+             if model_size > 1 and cfg.num_kv_heads % model_size == 0
+             else P())
+    return {"k_pages": pages, "v_pages": pages, "page_table": P()}
 
 
 # -- shared plumbing -----------------------------------------------------------
@@ -204,17 +220,37 @@ def make_prefill_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
 
 def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
                     donate: bool = True,
-                    act_policy: Optional[acts.ActPolicy] = None):
+                    act_policy: Optional[acts.ActPolicy] = None,
+                    paged: bool = False, kernel_impl: str = "auto"):
     """Build the sharded one-token decode: ``fn(params, cache, tokens) ->
-    (logits, cache)`` with the cache donated (in-place KV update)."""
+    (logits, cache)`` with the cache donated (in-place KV update).
+
+    With ``paged=True`` the step consumes a
+    :class:`~repro.models.model.PagedCache` — decode computes directly
+    on the page-pool layout, with the pool arrays mesh-constrained via
+    :func:`paged_cache_specs` so the sharded serve step reads frames
+    without a resharding collective.  ``kernel_impl`` selects the
+    paged-attention backend (``auto``: the Pallas gather kernel on TPU,
+    the XLA gather elsewhere)."""
     pshapes = abstract_params(cfg)
     pspecs = param_specs(mesh, pshapes)
     pol = _policy_for(act_policy)
+    cspecs = paged_cache_specs(mesh, cfg) if paged else None
 
     def step(params, cache, tokens):
         params = _constrain_tree(params, pspecs, mesh)
+        if cspecs is not None:
+            kv = dict(cache.kv)
+            for name, spec in cspecs.items():
+                kv[name] = jax.lax.with_sharding_constraint(
+                    kv[name], NamedSharding(mesh, spec))
+            cache = cache._replace(kv=kv)
         with acts.policy(pol):
-            return model_mod.decode_step(params, cfg, cache, tokens)
+            return model_mod.decode_step(params, cfg, cache, tokens,
+                                         impl=kernel_impl)
 
     fn = jax.jit(step, donate_argnums=(1,) if donate else ())
-    return _MeshedStep(fn, mesh), {"params": pspecs}
+    specs = {"params": pspecs}
+    if cspecs is not None:
+        specs["paged_cache"] = cspecs
+    return _MeshedStep(fn, mesh), specs

@@ -27,10 +27,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["decode_attention", "paged_decode_attention"]
+__all__ = ["decode_attention", "paged_decode_attention", "default_interpret"]
 
 NEG_INF = -1e30
 _LANE = 128
+
+
+def default_interpret() -> bool:
+    """Backend auto-detection for the ``interpret`` flag.
+
+    Mosaic can only compile Pallas kernels for TPU; every other backend
+    (CPU containers, the tier-1 suite) must run the kernel body in
+    interpreter mode.  Defaulting to a *hard-coded* ``True`` silently
+    forced interpreter mode on TPU too — interpret only when no
+    compiled-kernel backend is available.
+    """
+    return jax.default_backend() != "tpu"
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
@@ -76,8 +88,10 @@ def decode_attention(
     *,
     valid_len: Optional[int] = None,
     bkv: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
+    if interpret is None:                  # auto: compiled on TPU only
+        interpret = default_interpret()
     B, H, D = q.shape
     _, Skv, Hkv, _ = k.shape
     G = H // Hkv
@@ -161,7 +175,7 @@ def paged_decode_attention(
     page_table: jnp.ndarray,   # (B, pages_per_seq) int32 physical frame ids
     lengths: jnp.ndarray,      # (B,) int32 valid KV length per sequence
     *,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Decode attention reading the paged KV layout directly.
 
@@ -179,6 +193,8 @@ def paged_decode_attention(
     Per-sequence ``lengths`` (unlike the dense kernel's static
     ``valid_len``) make one call serve the engine's mixed-depth batch.
     """
+    if interpret is None:                  # auto: compiled on TPU only
+        interpret = default_interpret()
     B, H, D = q.shape
     N, page, Hkv, _ = k_pages.shape
     G = H // Hkv

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.amu_matmul import amu_matmul as _amu_matmul
 from repro.kernels.decode_attention import decode_attention as _decode_attn
+from repro.kernels.decode_attention import default_interpret
 from repro.kernels.decode_attention import \
     paged_decode_attention as _paged_decode_attn
 from repro.kernels.flash_attention import flash_attention as _flash
@@ -30,7 +31,7 @@ from repro.kernels.rwkv6 import wkv6 as _wkv6
 
 __all__ = ["matmul", "flash_attention", "decode_attention",
            "paged_decode_attention", "wkv6", "ssd",
-           "gather_rows", "on_tpu", "resolve_impl"]
+           "gather_rows", "on_tpu", "resolve_impl", "default_interpret"]
 
 
 def on_tpu() -> bool:
@@ -79,6 +80,10 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
     page_table: (B, pages_per_seq) frame ids; lengths: (B,) valid KV."""
     impl = resolve_impl(impl)
     if impl == "xla":
+        # gather the dense view and defer to the shared one-token
+        # reference (the dense decode block's exact expressions) so the
+        # paged and dense decode paths stay bit-exact
+        from repro.models.attention import one_token_attention
         B, H, D = q.shape
         _, page, Hkv, _ = k_pages.shape
         k = jnp.take(k_pages, page_table, axis=0)         # (B, pps, page, ...)
@@ -86,13 +91,7 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
         Skv = k.shape[1] * page
         k = k.reshape(B, Skv, Hkv, D)
         v = v.reshape(B, Skv, Hkv, D)
-        g = H // Hkv
-        qf = (q.astype(jnp.float32) / (D ** 0.5)).reshape(B, Hkv, g, D)
-        s = jnp.einsum("bhgd,bkhd->bhgk", qf, k.astype(jnp.float32))
-        mask = jnp.arange(Skv)[None, :] < lengths[:, None]
-        s = jnp.where(mask[:, None, None, :], s, -1e30)
-        w = jax.nn.softmax(s, axis=-1)
-        out = jnp.einsum("bhgk,bkhd->bhgd", w, v.astype(jnp.float32))
+        out = one_token_attention(q, k, v, lengths, Hkv)
         return out.reshape(B, H, D).astype(q.dtype)
     return _paged_decode_attn(q, k_pages, v_pages, page_table, lengths,
                               interpret=(impl == "interpret"), **kw)

@@ -33,6 +33,13 @@ def main(argv=None):
                     help="device page pool size; below max_batch * "
                          "pages_per_seq the engine oversubscribes and "
                          "preempts (default: no oversubscription)")
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense per-slot KV cache (A/B "
+                         "reference for the paged decode path)")
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=("auto", "pallas", "interpret", "xla"),
+                    help="paged-attention backend (auto: Pallas on TPU, "
+                         "XLA gather elsewhere)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -40,7 +47,8 @@ def main(argv=None):
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
                  offload_finished=args.offload_finished,
-                 page_size=args.page_size, device_pages=args.device_pages)
+                 page_size=args.page_size, device_pages=args.device_pages,
+                 paging=not args.dense, kernel_impl=args.kernel_impl)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()

@@ -30,7 +30,8 @@ Params = Dict[str, jnp.ndarray]
 
 __all__ = [
     "attn_init", "attention_block", "decode_attention_block",
-    "init_kv_cache", "chunked_attention", "NEG_INF",
+    "paged_decode_attention_block", "one_token_attention",
+    "init_kv_cache", "init_paged_kv_cache", "chunked_attention", "NEG_INF",
 ]
 
 NEG_INF = -1e30
@@ -288,14 +289,126 @@ def decode_attention_block(
     kc = kc.at[jnp.arange(B), slot].set(k_new[:, 0].astype(kc.dtype))
     vc = vc.at[jnp.arange(B), slot].set(v_new[:, 0].astype(vc.dtype))
     valid = jnp.minimum(pos + 1, slots)              # (B,)
-    # one-token attention: (B, H, slots) scores — linear in cache length
+    out = _one_token_attention(cfg, q, kc, vc, valid)
+    out = out.astype(compute_dtype)
+    return dense(p["o"], out, compute_dtype), (kc, vc)
+
+
+def one_token_attention(q, kc, vc, valid, num_kv_heads: int):
+    """One-query-token attention over a dense (B, Skv, Hkv, D) cache.
+
+    THE XLA reference for decode attention: shared by the dense decode
+    block and (through ``kernels.ops.paged_decode_attention``'s gather)
+    the paged block, so the two layouts stay bit-exact — identical
+    expressions, identical shapes.  ``q``: (B, H, D); ``valid``: (B,)
+    masks KV positions at/past it.  Returns f32 (B, 1, H * D).
+    """
+    B, H, hd = q.shape
+    slots = kc.shape[1]
     qf = (q.astype(jnp.float32) * (1.0 / math.sqrt(hd)))
-    qf = qf.reshape(B, cfg.num_kv_heads, cfg.q_per_kv, hd)
+    qf = qf.reshape(B, num_kv_heads, H // num_kv_heads, hd)
     s = jnp.einsum("bhgd,bkhd->bhgk", qf, kc.astype(jnp.float32))
     kv_idx = jnp.arange(slots)
     s = jnp.where((kv_idx[None, :] < valid[:, None])[:, None, None, :],
                   s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", w, vc.astype(jnp.float32))
+    return out.reshape(B, 1, H * hd)
+
+
+def _one_token_attention(cfg: ModelConfig, q, kc, vc, valid):
+    """cfg-typed wrapper: ``q`` is the block's (B, 1, H, D) projection."""
+    B = q.shape[0]
+    return one_token_attention(q.reshape(B, cfg.num_heads, cfg.head_dim),
+                               kc, vc, valid, cfg.num_kv_heads)
+
+
+# -- paged decode path (repro.paging pool layout) ---------------------------------
+
+
+def init_paged_kv_cache(cfg: ModelConfig, n_frames: int, page_size: int,
+                        batch: int, max_len: int,
+                        n_layers: Optional[int] = None,
+                        dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """KV cache in the ``repro.paging`` device-pool layout.
+
+    Instead of one dense per-slot buffer, k/v live in ``n_frames``
+    physical page frames of ``page_size`` token positions, stacked over
+    layers — one frame holds a page's K or V *for every layer*, matching
+    the engine's transfer unit.  ``page_table`` maps each decode slot's
+    logical pages to frames; rows are initialised to ``n_frames - 1``,
+    which callers should reserve as the trash frame (writes from empty
+    slots land there, reads are masked by per-sequence lengths).
+
+    The per-sequence token capacity must be an exact multiple of
+    ``page_size`` so the gathered view of a sequence is shape-identical
+    to the dense cache (bit-exactness depends on it).
+    """
+    L = n_layers if n_layers is not None else cfg.num_layers
+    slots = min(max_len, cfg.window) if cfg.attention == "swa" else max_len
+    if slots % page_size:
+        raise ValueError(
+            f"page_size {page_size} must divide the per-sequence token "
+            f"capacity {slots} for the paged decode layout")
+    pages_per_seq = slots // page_size
+    shape = (L, n_frames, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k_pages": jnp.zeros(shape, dtype),
+        "v_pages": jnp.zeros(shape, dtype),
+        "page_table": jnp.full((batch, pages_per_seq), n_frames - 1,
+                               jnp.int32),
+    }
+
+
+def paged_decode_attention_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # (B, 1, d)
+    layer_pages: Tuple[jnp.ndarray, jnp.ndarray],  # k,v (N, page, Hkv, D)
+    page_table: jnp.ndarray,             # (B, pages_per_seq) int32 frame ids
+    pos: jnp.ndarray,                    # (B,) int32: per-sequence position
+    *,
+    compute_dtype=jnp.bfloat16,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One-token attention computing directly on the paged KV layout.
+
+    The paged counterpart of :func:`decode_attention_block`: the new
+    token's K/V is scattered straight into its page-table-mapped pool
+    frame (no dense per-slot cache exists at all), and attention reads
+    the pool through the page table — the Pallas scalar-prefetch gather
+    kernel on TPU, a ``jnp.take`` gather under XLA.  The XLA path's
+    gathered view is sliced to the exact dense-cache shape and fed
+    through the same expressions as the dense block, so outputs are
+    bit-exact with an uninterrupted dense decode.
+    """
+    from repro.kernels import ops
+
+    B = x.shape[0]
+    hd = cfg.head_dim
+    kp, vp = layer_pages
+    page = kp.shape[1]
+    slots = page_table.shape[1] * page           # token capacity per sequence
+    q, k_new, v_new = _project_qkv(p, cfg, x, compute_dtype)
+    pos = jnp.broadcast_to(pos, (B,))
+    posv = pos[:, None]                              # (B, 1)
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(posv, (3, B, 1))
+        q, k_new = _position_encode(cfg, q, k_new, pos3)
+    else:
+        q, k_new = _position_encode(cfg, q, k_new, posv)
+    slot = (pos % slots if cfg.attention == "swa"
+            else jnp.minimum(pos, slots - 1))        # (B,)
+    frame = page_table[jnp.arange(B), slot // page]  # (B,) physical frames
+    row = slot % page
+    kp = kp.at[frame, row].set(k_new[:, 0].astype(kp.dtype))
+    vp = vp.at[frame, row].set(v_new[:, 0].astype(vp.dtype))
+    valid = jnp.minimum(pos + 1, slots)              # (B,)
+
+    # one dispatcher for every backend: ops' XLA fallback gathers the
+    # dense view and runs one_token_attention — the same expressions as
+    # the dense block, so paged-vs-dense stays bit-exact
+    out = ops.paged_decode_attention(
+        q[:, 0], kp, vp, page_table, valid, impl=impl)
     out = out.reshape(B, 1, cfg.num_heads * hd).astype(compute_dtype)
-    return dense(p["o"], out, compute_dtype), (kc, vc)
+    return dense(p["o"], out, compute_dtype), (kp, vp)

@@ -27,7 +27,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_block, attn_init,
-                                    decode_attention_block, init_kv_cache)
+                                    decode_attention_block, init_kv_cache,
+                                    init_paged_kv_cache,
+                                    paged_decode_attention_block)
 from repro.models.layers import (embed, embed_init, rms_norm, rms_norm_init,
                                  swiglu, swiglu_init, unembed)
 from repro.models.moe import moe_block, moe_init
@@ -36,7 +38,8 @@ Params = Dict[str, Any]
 
 __all__ = [
     "init_params", "train_loss", "prefill", "decode_step", "init_cache",
-    "chunked_cross_entropy", "count_params",
+    "PagedCache", "init_paged_cache", "chunked_cross_entropy",
+    "count_params",
 ]
 
 
@@ -403,39 +406,79 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                  pos=jnp.zeros((batch,), jnp.int32))
 
 
+class PagedCache(NamedTuple):
+    """Decode-time state with attention KV in the paged pool layout.
+
+    ``kv`` holds ``k_pages`` / ``v_pages`` of shape
+    ``(L, n_frames, page, Hkv, D)`` — the device :class:`repro.paging.
+    PagePool`'s frames, stacked over layers — plus the per-slot
+    ``page_table`` (B, pages_per_seq) of physical frame ids.  Non-KV
+    state (SSM, cross-attn, positions) keeps the dense per-slot layout:
+    it is tiny relative to the KV and is never paged.
+    """
+
+    kv: Dict[str, jnp.ndarray]         # k_pages / v_pages / page_table
+    ssm: Any                           # RWKVState/MambaState stacked or ()
+    cross: Dict[str, jnp.ndarray]      # encdec: cross-attn KV + enc_out
+    pos: jnp.ndarray                   # next absolute position, (B,)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     n_frames: int, page_size: int,
+                     src_len: Optional[int] = None) -> PagedCache:
+    """Like :func:`init_cache` but with the KV in pool-frame layout.
+
+    Frame ``n_frames - 1`` is the *trash frame*: unmapped page-table
+    entries (and every entry of an empty decode slot) point there, so
+    garbage decode writes never corrupt a live sequence's page.
+    """
+    base = init_cache(cfg, batch, max_len, src_len=src_len)
+    fam = cfg.family
+    if fam not in ("dense", "moe", "encdec", "hybrid"):
+        raise ValueError(f"family {fam!r} has no KV to page")
+    n_layers = None
+    if fam == "hybrid":
+        every = cfg.shared_attn_every or cfg.num_layers
+        n_layers = cfg.num_layers // every
+    kv = init_paged_kv_cache(cfg, n_frames, page_size, batch, max_len,
+                             n_layers=n_layers)
+    return PagedCache(kv=kv, ssm=base.ssm, cross=base.cross, pos=base.pos)
+
+
 def decode_step(params, cfg: ModelConfig, cache: Cache,
                 tokens: jnp.ndarray,
-                src_embeds: Optional[jnp.ndarray] = None
-                ) -> Tuple[jnp.ndarray, Cache]:
-    """One-token decode.  tokens: (B, 1) int32.  Returns (logits (B, V), cache)."""
+                src_embeds: Optional[jnp.ndarray] = None,
+                *, impl: str = "auto") -> Tuple[jnp.ndarray, Cache]:
+    """One-token decode.  tokens: (B, 1) int32.  Returns (logits (B, V), cache).
+
+    Accepts either a dense :class:`Cache` or a :class:`PagedCache`; for
+    the latter, attention computes directly on the paged pool layout
+    (``impl`` selects the paged-gather backend: the Pallas kernel on
+    TPU, the XLA gather elsewhere).
+    """
     cdt = _cdtype(cfg)
-    B = tokens.shape[0]
     pos = cache.pos
     x = embed(params["embed"], tokens, cdt)
     fam = cfg.family
+    paged = isinstance(cache, PagedCache)
 
-    if fam in ("dense", "moe"):
-        is_moe = bool(cfg.num_experts)
-        if is_moe and cfg.moe_every > 1:
-            x, kv = _decode_grouped_moe(params, cfg, x, cache, cdt)
-        else:
-            def body(carry, xs):
-                x = carry
-                lp, kl, vl = xs
-                a, (kn, vn) = decode_attention_block(
-                    lp["attn"], cfg, rms_norm(lp["attn_norm"], x, cfg.norm_eps),
-                    (kl, vl), pos, compute_dtype=cdt)
-                x = x + a
-                h = rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
-                if is_moe:
-                    m, _ = moe_block(lp["mlp"], cfg, h, compute_dtype=cdt)
-                else:
-                    m = swiglu(lp["mlp"], h, cdt)
-                return x + m, (kn, vn)
-            x, (knew, vnew) = jax.lax.scan(
-                body, x, (params["layers"], cache.kv["k"], cache.kv["v"]))
-            kv = dict(cache.kv, k=knew, v=vnew)
-    elif fam == "ssm":
+    if paged:
+        if fam == "ssm":
+            raise ValueError("family 'ssm' has no KV to page")
+        pt = cache.kv["page_table"]
+        kkey, vkey = "k_pages", "v_pages"
+
+        def attn(p, h, kl, vl):
+            return paged_decode_attention_block(
+                p, cfg, h, (kl, vl), pt, pos, compute_dtype=cdt, impl=impl)
+    else:
+        kkey, vkey = "k", "v"
+
+        def attn(p, h, kl, vl):
+            return decode_attention_block(p, cfg, h, (kl, vl), pos,
+                                          compute_dtype=cdt)
+
+    if fam == "ssm":
         def body(carry, xs):
             x = carry
             lp, st = xs
@@ -446,13 +489,12 @@ def decode_step(params, cfg: ModelConfig, cache: Cache,
                                               tuple(cache.ssm)))
         kv = cache.kv
         cache = cache._replace(ssm=ssm_mod.RWKVState(*new_state))
-    elif fam == "hybrid":
-        x, kv, new_state = _decode_hybrid(params, cfg, x, cache, cdt)
-        cache = cache._replace(ssm=new_state)
-    elif fam == "encdec":
-        x, kv = _decode_encdec(params, cfg, x, cache, cdt)
     else:
-        raise ValueError(fam)
+        x, kn, vn, new_state = _decode_families(
+            params, cfg, x, cache, cache.kv[kkey], cache.kv[vkey], attn, cdt)
+        kv = dict(cache.kv, **{kkey: kn, vkey: vn})
+        if new_state is not None:
+            cache = cache._replace(ssm=new_state)
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
     table = params["embed"]["table"] if cfg.tie_embeddings else \
@@ -463,31 +505,74 @@ def decode_step(params, cfg: ModelConfig, cache: Cache,
     return logits.astype(jnp.float32), new_cache
 
 
-def _decode_grouped_moe(params, cfg, x, cache, cdt):
+def _decode_families(params, cfg: ModelConfig, x, cache, ks, vs, attn,
+                     cdt):
+    """One-token decode through the family layer stacks, parameterized
+    over the attention callback and the KV arrays — the dense per-slot
+    cache and the paged pool frames share every line of layer structure,
+    which is what keeps the two layouts bit-exact by construction.
+
+    ``attn(p, h, kl, vl) -> (out, (kn, vn))`` runs one attention block
+    on the pre-normed hidden ``h``; ``ks``/``vs`` are the stacked-over-
+    layers KV arrays (axis 0 scanned per layer/group).  Returns
+    ``(x, k_new, v_new, new_ssm_state_or_None)``.
+    """
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        is_moe = bool(cfg.num_experts)
+        if is_moe and cfg.moe_every > 1:
+            x, kn, vn = _decode_grouped_moe(params, cfg, x, ks, vs, attn,
+                                            cdt)
+        else:
+            def body(carry, xs):
+                x = carry
+                lp, kl, vl = xs
+                a, (kn, vn) = attn(lp["attn"],
+                                   rms_norm(lp["attn_norm"], x, cfg.norm_eps),
+                                   kl, vl)
+                x = x + a
+                h = rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+                if is_moe:
+                    m, _ = moe_block(lp["mlp"], cfg, h, compute_dtype=cdt)
+                else:
+                    m = swiglu(lp["mlp"], h, cdt)
+                return x + m, (kn, vn)
+            x, (kn, vn) = jax.lax.scan(body, x, (params["layers"], ks, vs))
+        return x, kn, vn, None
+    if fam == "hybrid":
+        return _decode_hybrid(params, cfg, x, cache, ks, vs, attn, cdt)
+    if fam == "encdec":
+        x, kn, vn = _decode_encdec(params, cfg, x, cache, ks, vs, attn, cdt)
+        return x, kn, vn, None
+    raise ValueError(f"_decode_families: bad family {fam}")
+
+
+def _decode_grouped_moe(params, cfg, x, ks, vs, attn, cdt):
     """Decode path for moe_every>1 (llama4): scan groups, inner dense scan."""
-    pos = cache.pos
     n_groups = cfg.num_layers // cfg.moe_every
     d_per = cfg.moe_every - 1
     # cache layout: layer l -> group g = l // moe_every, slot = l % moe_every
-    k = cache.kv["k"].reshape((n_groups, cfg.moe_every) + cache.kv["k"].shape[1:])
-    v = cache.kv["v"].reshape((n_groups, cfg.moe_every) + cache.kv["v"].shape[1:])
+    kshape = ks.shape
+    k = ks.reshape((n_groups, cfg.moe_every) + kshape[1:])
+    v = vs.reshape((n_groups, cfg.moe_every) + kshape[1:])
 
     def group_body(x, xs):
         gp, kg, vg = xs
         def dense_body(x, ys):
             lp, kl, vl = ys
-            a, (kn, vn) = decode_attention_block(
-                lp["attn"], cfg, rms_norm(lp["attn_norm"], x, cfg.norm_eps),
-                (kl, vl), pos, compute_dtype=cdt)
+            a, (kn, vn) = attn(lp["attn"],
+                               rms_norm(lp["attn_norm"], x, cfg.norm_eps),
+                               kl, vl)
             x = x + a
-            m = swiglu(lp["mlp"], rms_norm(lp["mlp_norm"], x, cfg.norm_eps), cdt)
+            m = swiglu(lp["mlp"], rms_norm(lp["mlp_norm"], x, cfg.norm_eps),
+                       cdt)
             return x + m, (kn, vn)
         x, (kd, vd) = jax.lax.scan(dense_body, x,
                                    (gp["dense"], kg[:d_per], vg[:d_per]))
         lp = gp["moe"]
-        a, (km, vm) = decode_attention_block(
-            lp["attn"], cfg, rms_norm(lp["attn_norm"], x, cfg.norm_eps),
-            (kg[d_per], vg[d_per]), pos, compute_dtype=cdt)
+        a, (km, vm) = attn(lp["attn"],
+                           rms_norm(lp["attn_norm"], x, cfg.norm_eps),
+                           kg[d_per], vg[d_per])
         x = x + a
         m, _ = moe_block(lp["mlp"], cfg,
                          rms_norm(lp["mlp_norm"], x, cfg.norm_eps),
@@ -498,14 +583,10 @@ def _decode_grouped_moe(params, cfg, x, cache, cdt):
         return x, (kout, vout)
 
     x, (kn, vn) = jax.lax.scan(group_body, x, (params["groups"], k, v))
-    kv = dict(cache.kv,
-              k=kn.reshape(cache.kv["k"].shape),
-              v=vn.reshape(cache.kv["v"].shape))
-    return x, kv
+    return x, kn.reshape(kshape), vn.reshape(kshape)
 
 
-def _decode_hybrid(params, cfg, x, cache, cdt):
-    pos = cache.pos
+def _decode_hybrid(params, cfg, x, cache, ks, vs, attn, cdt):
     every = cfg.shared_attn_every or cfg.num_layers
     n_groups = cfg.num_layers // every
     tail = cfg.num_layers - n_groups * every
@@ -513,56 +594,49 @@ def _decode_hybrid(params, cfg, x, cache, cdt):
         (n_groups, every) + a.shape[1:]), cache.ssm)
     shared = params["shared_attn"]
 
+    def mamba_body(x, ys):
+        lp, st = ys
+        y, st2 = ssm_mod.mamba2_step(lp, cfg, x, ssm_mod.MambaState(*st),
+                                     compute_dtype=cdt)
+        return y, tuple(st2)
+
     def group_body(carry, xs):
         x = carry
         gp, st_g, kl, vl = xs
-        def mamba_body(x, ys):
-            lp, st = ys
-            y, st2 = ssm_mod.mamba2_step(lp, cfg, x, ssm_mod.MambaState(*st),
-                                         compute_dtype=cdt)
-            return y, tuple(st2)
         x, st_new = jax.lax.scan(mamba_body, x, (gp, tuple(st_g)))
-        a, (kn, vn) = decode_attention_block(
-            shared["attn"], cfg, rms_norm(shared["attn_norm"], x, cfg.norm_eps),
-            (kl, vl), pos, compute_dtype=cdt)
+        a, (kn, vn) = attn(shared["attn"],
+                           rms_norm(shared["attn_norm"], x, cfg.norm_eps),
+                           kl, vl)
         x = x + a
         x = x + swiglu(shared["mlp"], rms_norm(shared["mlp_norm"], x,
                                                cfg.norm_eps), cdt)
         return x, (st_new, kn, vn)
 
     x, (st_new, kn, vn) = jax.lax.scan(
-        group_body, x, (params["mamba_groups"], tuple(sg),
-                        cache.kv["k"], cache.kv["v"]))
+        group_body, x, (params["mamba_groups"], tuple(sg), ks, vs))
     st_new = ssm_mod.MambaState(*st_new)
     st_flat = jax.tree_util.tree_map(
         lambda a: a.reshape((n_groups * every,) + a.shape[2:]), st_new)
     if tail:
         st_tail = jax.tree_util.tree_map(lambda a: a[n_groups * every:],
                                          cache.ssm)
-        def mamba_body(x, ys):
-            lp, st = ys
-            y, st2 = ssm_mod.mamba2_step(lp, cfg, x, ssm_mod.MambaState(*st),
-                                         compute_dtype=cdt)
-            return y, tuple(st2)
         x, st_tail_new = jax.lax.scan(mamba_body, x,
                                       (params["mamba_tail"], tuple(st_tail)))
         st_flat = jax.tree_util.tree_map(
             lambda a, b: jnp.concatenate([a, b], axis=0),
             st_flat, ssm_mod.MambaState(*st_tail_new))
-    kv = dict(cache.kv, k=kn, v=vn)
-    return x, kv, st_flat
+    return x, kn, vn, st_flat
 
 
-def _decode_encdec(params, cfg, x, cache, cdt):
-    pos = cache.pos
+def _decode_encdec(params, cfg, x, cache, ks, vs, attn, cdt):
     enc_out = cache.cross["enc_out"]
 
     def body(carry, xs):
         x = carry
         lp, kl, vl, ck, cv = xs
-        a, (kn, vn) = decode_attention_block(
-            lp["self_attn"], cfg, rms_norm(lp["self_norm"], x, cfg.norm_eps),
-            (kl, vl), pos, compute_dtype=cdt)
+        a, (kn, vn) = attn(lp["self_attn"],
+                           rms_norm(lp["self_norm"], x, cfg.norm_eps),
+                           kl, vl)
         x = x + a
         # cross attention against precomputed cross KV (no rope, not causal)
         from repro.models.attention import chunked_attention
@@ -578,10 +652,9 @@ def _decode_encdec(params, cfg, x, cache, cdt):
         return x, (kn, vn)
 
     x, (kn, vn) = jax.lax.scan(
-        body, x, (params["decoder"], cache.kv["k"], cache.kv["v"],
+        body, x, (params["decoder"], ks, vs,
                   cache.cross["k"], cache.cross["v"]))
-    kv = dict(cache.kv, k=kn, v=vn)
-    return x, kv
+    return x, kn, vn
 
 
 def prefill(params, cfg: ModelConfig, batch, *, max_len: Optional[int] = None

@@ -26,9 +26,10 @@ from __future__ import annotations
 import collections
 from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
 
-from repro.core.amu import AMU, AccessConfig, FAILURE_CODE, QoS, SimBackend
-from repro.paging.page_table import (PagePool, PageState, PageTable,
-                                     PagingError)
+from repro.core.amu import (AMU, AMUError, AccessConfig, FAILURE_CODE, QoS,
+                            RequestState, SimBackend)
+from repro.paging.page_table import (NOT_MAPPED, PagePool, PageState,
+                                     PageTable, PagingError)
 
 __all__ = ["Pager", "QoSWindows"]
 
@@ -73,9 +74,15 @@ class Pager:
         latency_window: int = 16,
         bulk_window: int = 4,
         granularity: Optional[int] = None,
+        read_frame: Optional[Callable[[int], Any]] = None,
     ):
         self.pool = pool
         self.table = table
+        # Optional hook: read a frame's content out of the device pool.
+        # When the engine keeps page payloads in device arrays rather
+        # than per-frame host copies, ``Frame.data`` is None and this is
+        # how eviction obtains the writeback payload.
+        self.read_frame = read_frame
         self.amu = amu or AMU(max_outstanding=latency_window + bulk_window)
         self.page_nbytes = int(page_nbytes)
         g = granularity or self.page_nbytes
@@ -123,7 +130,10 @@ class Pager:
                 f"evict of non-resident page ({seq!r}, {logical})")
         frame = self.pool.frames[pte.phys]
         if frame.dirty or (seq, logical) not in self._far:
-            self.writeback(seq, logical, frame.data)
+            data = frame.data
+            if data is None and self.read_frame is not None:
+                data = self.read_frame(pte.phys)
+            self.writeback(seq, logical, data)
         else:
             self.park_clean(seq, logical)
         self.stats["evictions"] += 1
@@ -176,10 +186,21 @@ class Pager:
 
     def poll(self) -> List[Tuple[Hashable, int]]:
         """getfin until the completion queue is empty; returns the pages
-        whose aloads landed this call (residency bits now set)."""
+        whose aloads landed this call (residency bits now set).
+
+        A *failed* request (``getfin`` raising :class:`AMUError`) must
+        not leak its QoS window slot: the failure is reaped — window
+        released, an aload's ARRIVING page reverted to PARKED so a
+        retry can re-issue it — and polling continues.  Without this a
+        single fault would permanently shrink the window until the
+        class wedged entirely."""
         arrived: List[Tuple[Hashable, int]] = []
         while True:
-            rid = self.amu.getfin()
+            try:
+                rid = self.amu.getfin()
+            except AMUError:
+                self._reap_failed()
+                continue
             if rid == FAILURE_CODE:
                 break
             got = self._finish(rid)
@@ -187,6 +208,33 @@ class Pager:
                 arrived.append(got)
         self._pump()
         return arrived
+
+    def _reap_failed(self) -> None:
+        """Clean up every tracked request the AMU marked FAILED."""
+        for rid in list(self._inflight):
+            if self.amu.request(rid).state is RequestState.FAILED:
+                self._fail_one(rid)
+        self._pump()
+
+    def _fail_one(self, rid: int) -> None:
+        """Undo one failed request's bookkeeping: release its QoS window
+        slot and, for an aload, free the reserved frame and mark the
+        page PARKED again (the far copy is still intact, so a later
+        prefetch simply retries)."""
+        kind, seq, logical = self._inflight.pop(rid)
+        self.windows.release(self._qos_of(kind))
+        self.stats[f"{kind}_failed"] += 1
+        if kind != "aload":
+            return
+        self._page_rid.pop((seq, logical), None)
+        try:
+            pte = self.table.entry(seq, logical)
+        except PagingError:
+            return                        # sequence dropped mid-flight
+        if pte.state is PageState.ARRIVING:
+            phys, pte.phys = pte.phys, NOT_MAPPED
+            pte.state = PageState.PARKED
+            self.pool.free(phys)
 
     def wait_page(self, seq: Hashable, logical: int) -> None:
         """Blocking: ensure one page is RESIDENT (demand fetch)."""
@@ -206,7 +254,14 @@ class Pager:
         if rid == _PENDING:
             self._force_issue(seq, logical)
             rid = self._page_rid[(seq, logical)]
-        self.amu.wait(rid)
+        req = self.amu.wait(rid)
+        if req.error is not None:
+            if rid in self._inflight:
+                self._fail_one(rid)
+            self._pump()
+            raise PagingError(
+                f"demand fetch of ({seq!r}, {logical}) failed"
+            ) from req.error
         self._finish(rid)
 
     def wait_arriving(self, seq: Hashable) -> None:
@@ -287,11 +342,17 @@ class Pager:
         raise PagingError(f"page ({seq!r}, {logical}) not pending")
 
     def _drain_one(self, qos: QoS) -> None:
-        """Make room in a full window by finishing one of its requests."""
+        """Make room in a full window by finishing one of its requests.
+        A drained request that *failed* is reaped like any other fault —
+        window released, ARRIVING page reverted — never treated as a
+        successful arrival."""
         for rid, (kind, _, _) in list(self._inflight.items()):
             if self._qos_of(kind) is qos:
-                self.amu.wait(rid)
-                self._finish(rid)
+                req = self.amu.wait(rid)
+                if req.error is not None:
+                    self._fail_one(rid)
+                else:
+                    self._finish(rid)
                 return
         raise PagingError(f"QoS window {qos.name} full with nothing in flight")
 

@@ -39,12 +39,23 @@ def simulate_paged_serving(
     base_latency: float = 10e-6,
     bandwidth: float = 10e9,
     latency_window: int = 8,
+    densify_bandwidth: float = 20e9,
 ) -> Dict[str, float]:
     """Serve ``n_seqs`` decode bursts whose KV starts in the far tier,
     with the device pool sized to ``total_pages / oversubscription``.
     Returns virtual-clock timings for both policies plus the pager's
     page hit rate (fraction of pages already resident when a burst
-    starts — prefetch that landed in time)."""
+    starts — prefetch that landed in time).
+
+    Also models the *densification tax* the engine paid before decode
+    computed on the paged layout directly: every sequence activation
+    used to join its pages into a contiguous slot buffer and insert it
+    into the batched cache (one full-sequence copy at
+    ``densify_bandwidth``), and parking extracted it back out.  The
+    ``paged_densify_*`` keys are the paged policy *with* that copy-in/
+    copy-out; ``speedup`` (paged, no densification — what the engine
+    does now) vs ``speedup_densify`` quantifies what eliminating the
+    round-trip buys at the serving level."""
     total_pages = n_seqs * pages_per_seq
     pool_pages = max(pages_per_seq, int(round(total_pages / oversubscription)))
     seq_bytes = pages_per_seq * page_bytes
@@ -102,6 +113,12 @@ def simulate_paged_serving(
         pool.mark_dirty(pinned[-1])             # decode wrote the tail page
     paged_time = pamu.backend.now - t0
 
+    # densification tax of the pre-paged-decode engine: one whole-sequence
+    # join on every activation and one extract on every deactivation
+    # (2 x seq_bytes of device copies per sequence served).
+    densify_time = n_seqs * 2 * seq_bytes / densify_bandwidth
+    paged_densify_time = paged_time + densify_time
+
     return {
         "oversubscription": oversubscription,
         "pool_pages": pool_pages,
@@ -111,6 +128,9 @@ def simulate_paged_serving(
         "hit_rate": hits / total_pages,
         "blocking_us_per_token": blocking_time / total_tokens * 1e6,
         "paged_us_per_token": paged_time / total_tokens * 1e6,
+        "paged_densify_us_per_token": paged_densify_time / total_tokens * 1e6,
+        "speedup_densify": blocking_time / paged_densify_time,
+        "densify_eliminated_frac": densify_time / paged_densify_time,
         "bulk_writebacks": pager.stats["writeback"],
         "clean_evictions": pager.stats["clean_evict"],
         "demand_fetches": pager.stats["demand_fetch"],

@@ -19,13 +19,28 @@ memory can hold:
     sequence re-enters a slot the moment its residency bits are all set
     — no re-prefill, bit-exact resume.
 
+Decode computes **directly on the paged layout**: the device cache is a
+:class:`~repro.models.model.PagedCache` whose k/v live in the pool's
+page frames, and the serve step's attention reads them through the
+per-slot page table (:func:`~repro.models.attention.
+paged_decode_attention_block` — the Pallas scalar-prefetch gather on
+TPU).  Admission installs page-table rows and scatters the prefilled KV
+pages straight into their frames; preemption parks cold pages without
+ever extracting a dense slot; resume is a page-table patch plus a
+LATENCY prefetch.  The admit/preempt/resume hot path performs **zero
+dense KV re-materialisation** — ``extract_slot``/``insert_slot``
+survive only on the non-paged fallback and the finished-sequence
+:class:`~repro.serve.kv_cache.KVOffloadTier` path, exactly the
+round-trip the AMU papers argue against eliminating elsewhere.
+
 Decode itself is mesh-sharded: the step function comes from
-``repro.dist.steps.make_serve_step`` (TP-sharded params, donated cache)
-bound to the engine's mesh — a 1×1 mesh by default, the production
-(data, model) mesh when one is passed in.  Decode runs with a *fixed*
-batch of ``max_batch`` slots (one compiled program); per-slot positions
-make the mixed-depth batch correct, and empty slots decode garbage that
-is simply ignored — the standard fixed-shape trade on TPU.
+``repro.dist.steps.make_serve_step`` (TP-sharded params, paged-cache
+PartitionSpecs) bound to the engine's mesh — a 1×1 mesh by default, the
+production (data, model) mesh when one is passed in.  Decode runs with
+a *fixed* batch of ``max_batch`` slots (one compiled program); per-slot
+positions make the mixed-depth batch correct, and empty slots decode
+garbage into a reserved *trash frame* that no live sequence maps — the
+standard fixed-shape trade on TPU, made safe at page granularity.
 """
 
 from __future__ import annotations
@@ -33,6 +48,7 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -42,12 +58,14 @@ import numpy as np
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.dist.steps import make_serve_step
 from repro.launch.mesh import make_mesh_compat
-from repro.models.model import Cache, init_cache, prefill
+from repro.models.model import (Cache, PagedCache, init_cache,
+                                init_paged_cache, prefill)
 from repro.paging import (EventKind, EventLoop, PagePool, PageState,
                           PageTable, Pager, PagingError, WatermarkPolicy,
                           pages_for)
-from repro.serve.kv_cache import (KVOffloadTier, SlotPool, extract_slot,
-                                  insert_slot, join_kv_pages, split_kv_pages)
+from repro.serve.kv_cache import (KVOffloadTier, SlotPool, extract_aux_slot,
+                                  extract_slot, insert_aux_slot, insert_slot,
+                                  join_kv_pages)
 
 __all__ = ["Request", "Engine"]
 
@@ -66,7 +84,7 @@ class Request:
     first_token_t: float = 0.0
     done_t: float = 0.0
     # paging state (set when the request has been preempted):
-    residue: Any = None                 # non-KV cache remainder while parked
+    residue: Any = None                 # non-KV aux payload while parked
     clean_pages: int = 0                # leading pages whose far copy is current
     n_preempts: int = 0
     admit_seq: int = -1                 # admission order (preemption priority)
@@ -77,6 +95,45 @@ class Request:
             return True
         return bool(self.generated and self.eos_id is not None
                     and self.generated[-1] == self.eos_id)
+
+
+# -- jitted pool-frame scatters (module level: one compile per shape) ---------
+
+@partial(jax.jit, donate_argnums=(0, 1), static_argnums=(5,))
+def _scatter_seq_pages(k_pages, v_pages, k_single, v_single, frames,
+                       n_pg: int):
+    """Write one sequence's dense prefill KV into its pool frames.
+
+    ``k_single``/``v_single``: (L, 1, S, Hkv, D) from prefill — S is the
+    prefill *bucket*, at most the slot capacity; only the leading
+    ``n_pg`` pages (the prompt's — the exact frames admission just
+    mapped) are scattered, the tail zero-padded up to a page multiple.
+    The pool arrays are donated: the update aliases in place instead of
+    copying the whole pool per admission."""
+    L, _, S, Hkv, D = k_single.shape
+    page = k_pages.shape[2]
+    take = min(n_pg * page, S)
+    k_single = k_single[:, :, :take]
+    v_single = v_single[:, :, :take]
+    pad = n_pg * page - take
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        k_single = jnp.pad(k_single, widths)
+        v_single = jnp.pad(v_single, widths)
+    ks = k_single[:, 0].reshape(L, n_pg, page, Hkv, D)
+    vs = v_single[:, 0].reshape(L, n_pg, page, Hkv, D)
+    k_pages = k_pages.at[:, frames].set(ks.astype(k_pages.dtype))
+    v_pages = v_pages.at[:, frames].set(vs.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_one_page(k_pages, v_pages, k_data, v_data, phys):
+    """Land one far-tier page payload (L, page, Hkv, D) in frame ``phys``
+    (pool arrays donated: an in-place page write, not a pool copy)."""
+    k_pages = k_pages.at[:, phys].set(k_data.astype(k_pages.dtype))
+    v_pages = v_pages.at[:, phys].set(v_data.astype(v_pages.dtype))
+    return k_pages, v_pages
 
 
 class Engine:
@@ -96,7 +153,9 @@ class Engine:
         device_pages: Optional[int] = None,
         watermark: Optional[WatermarkPolicy] = None,
         hot_tail_pages: int = 1,
-        pager: Optional[Pager] = None,
+        pager_factory: Optional[Callable[..., Pager]] = None,
+        paging: Optional[bool] = None,
+        kernel_impl: str = "auto",
         step_dt: float = 1e-3,
     ):
         self.cfg = cfg
@@ -108,7 +167,6 @@ class Engine:
         self.greedy = greedy
         self.clock = clock
         self.pool = SlotPool(max_batch)
-        self.cache: Cache = init_cache(cfg, max_batch, max_len)
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}     # slot -> request
         self.finished: Dict[int, Request] = {}
@@ -116,37 +174,64 @@ class Engine:
         self._ids = itertools.count()
         self._admits = itertools.count()
 
-        # -- mesh-sharded decode step (dist.steps, not a raw jit) ----------
-        self.mesh = mesh if mesh is not None else \
-            make_mesh_compat((1, 1), ("data", "model"))
-        shape = ShapeConfig("serve_engine", max_len, max_batch, "decode")
-        self._decode, self._decode_specs = make_serve_step(
-            cfg, self.mesh, shape, donate=False)
-        self._prefills: Dict[int, Any] = {}
-
         # -- page-granularity KV residency over a fixed device pool --------
-        kv = self.cache.kv if isinstance(self.cache.kv, dict) else {}
-        self.paging = "k" in kv
+        # (decided before the decode step is built: the step consumes the
+        # paged layout directly when the family has attention KV)
+        shapes = jax.eval_shape(lambda: init_cache(cfg, max_batch, max_len))
+        kv_shapes = shapes.kv if isinstance(shapes.kv, dict) else {}
+        self.paging = ("k" in kv_shapes) if paging is None else \
+            (paging and "k" in kv_shapes)
         self.page_size = page_size
         self.step_dt = step_dt
         self.hot_tail_pages = max(0, hot_tail_pages)
         self._resuming: Dict[int, Request] = {}
         if self.paging:
-            k = kv["k"]
+            k = kv_shapes["k"]
             self.slot_tokens = int(k.shape[2])       # ring size for SWA
-            per_seq = pages_for(self.slot_tokens, page_size)
+            if self.slot_tokens % page_size:
+                raise PagingError(
+                    f"page_size {page_size} must divide the per-sequence "
+                    f"token capacity {self.slot_tokens}")
+            self.pages_per_seq = self.slot_tokens // page_size
             n_pages = device_pages if device_pages is not None \
-                else max_batch * per_seq
+                else max_batch * self.pages_per_seq
             page_nbytes = int(2 * k.shape[0] * page_size * k.shape[3]
                               * k.shape[4] * k.dtype.itemsize)
             self.page_pool = PagePool(n_pages, page_size)
             self.page_table = PageTable(self.page_pool)
-            self.pager = pager or Pager(self.page_pool, self.page_table,
-                                        page_nbytes=page_nbytes)
+            if pager_factory is not None:
+                self.pager = pager_factory(self.page_pool, self.page_table,
+                                           page_nbytes=page_nbytes)
+            else:
+                self.pager = Pager(self.page_pool, self.page_table,
+                                   page_nbytes=page_nbytes)
+            if self.pager.read_frame is None:    # keep a factory's hook
+                self.pager.read_frame = self._read_frame
+            # device frames: pool frames + one trash frame at the end
+            self.trash_frame = n_pages
+            self.cache: Any = init_paged_cache(
+                cfg, max_batch, max_len, n_frames=n_pages + 1,
+                page_size=page_size)
+            self._pt_np = np.full((max_batch, self.pages_per_seq),
+                                  self.trash_frame, np.int32)
+            self._pt_dirty = True
         else:
             self.slot_tokens = 0
             self.page_pool = self.page_table = self.pager = None
+            self.cache = init_cache(cfg, max_batch, max_len)
         self.policy = watermark or WatermarkPolicy(low=0, critical=0)
+
+        # -- mesh-sharded decode step (dist.steps, not a raw jit) ----------
+        self.mesh = mesh if mesh is not None else \
+            make_mesh_compat((1, 1), ("data", "model"))
+        shape = ShapeConfig("serve_engine", max_len, max_batch, "decode")
+        # cache donated: the step aliases the pool frames in place —
+        # no per-token copy of the KV pool (self.cache is rebound to the
+        # step's output immediately, so the donation is safe)
+        self._decode, self._decode_specs = make_serve_step(
+            cfg, self.mesh, shape, donate=True, paged=self.paging,
+            kernel_impl=kernel_impl)
+        self._prefills: Dict[int, Any] = {}
 
         self.events = EventLoop()
         self.events.on(EventKind.TICK, self._on_tick)
@@ -226,6 +311,7 @@ class Engine:
         seq, logical = ev.payload
         pte = self.page_table.entry(seq, logical)
         if pte.state is PageState.RESIDENT:
+            self._land_frame(pte.phys)       # scatter into the device pool
             self.page_pool.touch(pte.phys)
 
     def _on_complete(self, ev) -> None:
@@ -275,6 +361,46 @@ class Engine:
         single = single._replace(pos=jnp.full((1,), plen, jnp.int32))
         return logits, single
 
+    # -- paged device-pool plumbing -------------------------------------------
+    def _read_frame(self, phys: int) -> Dict[str, np.ndarray]:
+        """Pull one frame's content (L, page, Hkv, D) off the device —
+        the page-granularity transfer unit the pager's astores move."""
+        kv = self.cache.kv
+        return {"k": np.asarray(kv["k_pages"][:, phys]),
+                "v": np.asarray(kv["v_pages"][:, phys])}
+
+    def _land_frame(self, phys: int) -> None:
+        """If the pool frame holds a far-tier payload that has not been
+        scattered into the device pool yet, land it now."""
+        frame = self.page_pool.frames[phys]
+        if frame.data is None:
+            return                       # content already lives in the pool
+        kv = self.cache.kv
+        kp, vp = _scatter_one_page(
+            kv["k_pages"], kv["v_pages"],
+            jnp.asarray(frame.data["k"]), jnp.asarray(frame.data["v"]),
+            jnp.asarray(phys, jnp.int32))
+        self.cache = self.cache._replace(kv=dict(kv, k_pages=kp, v_pages=vp))
+        frame.data = None
+
+    def _install_sequence(self, req: Request, single: Cache) -> None:
+        """Admission on the paged layout: scatter the prefilled KV pages
+        into their pool frames and install the slot's page-table row +
+        aux state.  No dense batched KV exists to insert into."""
+        slot = req.slot
+        kv = self.cache.kv
+        # only the prompt's pages — exactly the frames _alloc_pinned just
+        # mapped; the bucket tail beyond them is zeros, never attended
+        n_pg = pages_for(min(len(req.prompt), self.slot_tokens),
+                         self.page_size)
+        frames = jnp.asarray(self._pt_np[slot, :n_pg])
+        kp, vp = _scatter_seq_pages(
+            kv["k_pages"], kv["v_pages"],
+            single.kv["k"], single.kv["v"], frames, n_pg)
+        cache = self.cache._replace(kv=dict(kv, k_pages=kp, v_pages=vp))
+        aux = {"ssm": single.ssm, "cross": single.cross, "pos": single.pos}
+        self.cache = insert_aux_slot(cache, aux, slot, self.max_batch)
+
     # -- paging helpers -------------------------------------------------------
     def _make_room(self, need: int, protect: frozenset,
                    preempt: bool = True) -> bool:
@@ -310,39 +436,44 @@ class Engine:
 
     def _park(self, req: Request) -> None:
         """Preempt: cold pages → far tier (BULK), hot tail stays cached
-        on-device (unpinned, LRU-evictable), slot freed, request back to
-        the head of the queue."""
+        *in the device pool* (unpinned, LRU-evictable), slot freed,
+        request back to the head of the queue.  The KV never round-trips
+        through a dense slot: cold pages are read frame-by-frame off the
+        pool (the page-granularity astore payload), hot pages do not
+        move at all."""
         slot = req.slot
-        tokens = int(np.asarray(self.cache.pos)[slot])
-        single = extract_slot(self.cache, slot, self.max_batch)
-        residue, pages = split_kv_pages(single, self.page_size, tokens)
         rid = req.rid
+        tokens = int(np.asarray(self.cache.pos)[slot])
+        valid = min(tokens, self.slot_tokens)
+        n_pages = pages_for(valid, self.page_size)
         # a frame allocated for the *next* write (pos on a page boundary)
         # holds no content yet — release it; resume growth re-allocates
-        self.page_table.truncate(rid, len(pages))
-        n_hot = min(self.hot_tail_pages, len(pages))
-        n_cold = len(pages) - n_hot
-        for logical in range(len(pages) - 1, -1, -1):   # tail first: hot
+        self.page_table.truncate(rid, n_pages)
+        n_hot = min(self.hot_tail_pages, n_pages)
+        n_cold = n_pages - n_hot
+        for logical in range(n_pages - 1, -1, -1):   # tail first: hot
             pte = self.page_table.entry(rid, logical)
             self.page_pool.unpin(pte.phys)
-            if logical >= n_cold:                        # hot tail: cached
+            if logical >= n_cold:                    # hot tail: stays pooled
                 frame = self.page_pool.frames[pte.phys]
-                frame.data = pages[logical]
+                frame.data = None                    # content is in the pool
                 frame.dirty = not (logical < req.clean_pages
                                    and self.pager.has_far(rid, logical))
                 self.page_pool.touch(pte.phys)
             elif (logical < req.clean_pages
                   and self.pager.has_far(rid, logical)):
-                self.pager.park_clean(rid, logical)      # far copy current
+                self.pager.park_clean(rid, logical)  # far copy current
             else:
-                self.pager.writeback(rid, logical, pages[logical])
-        req.residue = residue
+                self.pager.writeback(rid, logical, self._read_frame(pte.phys))
+        req.residue = extract_aux_slot(self.cache, slot, self.max_batch)
         # append-only KV: full far-tier pages stay valid forever — except
         # under an SWA ring, where wrap rewrites old pages in place.
         req.clean_pages = 0 if self.cfg.attention == "swa" \
-            else min(n_cold, tokens // self.page_size)
+            else min(n_cold, valid // self.page_size)
         req.n_preempts += 1
         req.slot = None
+        self._pt_np[slot] = self.trash_frame
+        self._pt_dirty = True
         del self.active[slot]
         self.pool.release(slot)
         self.queue.insert(0, req)
@@ -364,7 +495,11 @@ class Engine:
         return True
 
     def _try_finish_resumes(self) -> None:
-        """Slot in any resuming request whose pages have all arrived."""
+        """Slot in any resuming request whose pages have all arrived.
+        Re-entry is a page-table patch: pin the frames, land any payload
+        that is still host-side, point the slot's page-table row at the
+        frames and restore the tiny aux state.  The KV itself is already
+        where decode reads it."""
         for rid, req in list(self._resuming.items()):
             if not self.page_table.resident(rid):
                 # pages evicted again under pressure mid-resume get a
@@ -373,15 +508,16 @@ class Engine:
                 continue
             if not self.pool.n_free:
                 continue
-            pages = []
+            slot = self.pool.alloc()
             for logical in range(self.page_table.n_pages(rid)):
                 pte = self.page_table.entry(rid, logical)
-                pages.append(self.page_pool.frames[pte.phys].data)
                 self.page_pool.pin(pte.phys)
                 self.page_pool.touch(pte.phys)
-            single = join_kv_pages(req.residue, pages, self.slot_tokens)
-            slot = self.pool.alloc()
-            self.cache = insert_slot(self.cache, single, slot, self.max_batch)
+                self._land_frame(pte.phys)
+                self._pt_np[slot, logical] = pte.phys
+            self._pt_dirty = True
+            self.cache = insert_aux_slot(self.cache, req.residue,
+                                         slot, self.max_batch)
             req.slot = slot
             req.residue = None
             req.admit_seq = next(self._admits)
@@ -390,13 +526,16 @@ class Engine:
             self.stats["resumes"] += 1
             self.events.post(EventKind.ADMIT, rid)
 
-    def _alloc_pinned(self, rid: int, n_tokens: int) -> None:
-        """Allocate (pin + mark dirty) frames so ``rid`` covers
-        ``n_tokens`` positions — active slots own their pages."""
-        for logical in self.page_table.ensure_capacity(rid, n_tokens):
-            pte = self.page_table.entry(rid, logical)
+    def _alloc_pinned(self, req: Request, n_tokens: int) -> None:
+        """Allocate (pin + mark dirty) frames so ``req`` covers
+        ``n_tokens`` positions and point its slot's page-table row at
+        them — active slots own their pages."""
+        for logical in self.page_table.ensure_capacity(req.rid, n_tokens):
+            pte = self.page_table.entry(req.rid, logical)
             self.page_pool.pin(pte.phys)
             self.page_pool.mark_dirty(pte.phys)
+            self._pt_np[req.slot, logical] = pte.phys
+            self._pt_dirty = True
 
     def _ensure_growth(self) -> None:
         """Before a decode step: every active sequence about to cross a
@@ -416,11 +555,12 @@ class Engine:
                 raise PagingError(
                     f"cannot grow request {req.rid}: pool of "
                     f"{self.page_pool.n_pages} pages exhausted")
-            self._alloc_pinned(req.rid, pos + 1)
+            self._alloc_pinned(req, pos + 1)
 
     # -- scheduling ------------------------------------------------------------
     def _admit(self) -> None:
-        self._try_finish_resumes()
+        if self.paging:
+            self._try_finish_resumes()
         while self.queue:
             req = self.queue[0]
             if req.residue is not None:                   # preempted: resume
@@ -440,14 +580,17 @@ class Engine:
                     break
             self.queue.pop(0)
             slot = self.pool.alloc()
-            logits, single = self._prefill_one(req)
-            self.cache = insert_slot(self.cache, single, slot, self.max_batch)
             req.slot = slot
-            req.admit_seq = next(self._admits)
+            logits, single = self._prefill_one(req)
             if self.paging:
                 self.page_table.register(req.rid)
-                self._alloc_pinned(req.rid,
+                self._alloc_pinned(req,
                                    min(len(req.prompt), self.slot_tokens))
+                self._install_sequence(req, single)
+            else:
+                self.cache = insert_slot(self.cache, single, slot,
+                                         self.max_batch)
+            req.admit_seq = next(self._admits)
             first = int(np.argmax(np.asarray(logits)[0]))
             req.generated.append(first)
             req.first_token_t = self.clock()
@@ -464,6 +607,13 @@ class Engine:
         toks = np.zeros((self.max_batch, 1), np.int32)
         for slot, req in self.active.items():
             toks[slot, 0] = req.generated[-1]
+        if self.paging and self._pt_dirty:
+            # refresh the device page-table rows from the host mirror
+            # (skipped on steady-state steps with no scheduling events)
+            kv = self.cache.kv
+            self.cache = self.cache._replace(
+                kv=dict(kv, page_table=jnp.asarray(self._pt_np)))
+            self._pt_dirty = False
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(toks))
         self.stats["steps"] += 1
@@ -473,6 +623,37 @@ class Engine:
             req.generated.append(nxt)
             self._finish_if_done(req)
 
+    def _extract_finished(self, req: Request) -> Cache:
+        """Reassemble a finished sequence's dense single cache from its
+        pool pages for the :class:`KVOffloadTier` — the one place a
+        dense per-sequence KV is still materialised, off the hot path."""
+        slot = req.slot
+        kv = self.cache.kv
+        L, _, page, Hkv, D = kv["k_pages"].shape
+        tokens = min(int(np.asarray(self.cache.pos)[slot]), self.slot_tokens)
+        aux = extract_aux_slot(self.cache, slot, self.max_batch)
+        pages = []
+        for logical in range(self.page_table.n_pages(req.rid)):
+            pte = self.page_table.entry(req.rid, logical)
+            if pte.state is PageState.RESIDENT:
+                data = self.page_pool.frames[pte.phys].data \
+                    or self._read_frame(pte.phys)
+            else:                         # parked mid-flight: far copy
+                data = self.pager.far_copy(req.rid, logical)
+            take = min(page, tokens - logical * page)
+            if take <= 0:
+                break
+            pages.append({"k": data["k"][:, None, :take],
+                          "v": data["v"][:, None, :take]})
+        kdt = np.dtype(kv["k_pages"].dtype)
+        residue = Cache(
+            kv={"k": np.zeros((L, 1, 0, Hkv, D), kdt),
+                "v": np.zeros((L, 1, 0, Hkv, D), kdt),
+                "pos": np.zeros((), np.int32),
+                "slots": np.asarray(self.slot_tokens, np.int32)},
+            ssm=aux["ssm"], cross=aux["cross"], pos=aux["pos"])
+        return join_kv_pages(residue, pages, self.slot_tokens)
+
     def _finish_if_done(self, req: Request) -> None:
         if not req.done:
             return
@@ -481,8 +662,12 @@ class Engine:
             del self.active[slot]
         if slot is not None:
             if self.kv_tier is not None:
-                self.kv_tier.park(req.rid, extract_slot(
-                    self.cache, slot, self.max_batch))
+                single = (self._extract_finished(req) if self.paging else
+                          extract_slot(self.cache, slot, self.max_batch))
+                self.kv_tier.park(req.rid, single)
+            if self.paging:
+                self._pt_np[slot] = self.trash_frame
+                self._pt_dirty = True
             self.pool.release(slot)
         req.done_t = self.clock()
         self.finished[req.rid] = req

@@ -30,8 +30,9 @@ from repro.core.offload import FarMemoryTier
 from repro.models.model import Cache
 from repro.paging.page_table import pages_for
 
-__all__ = ["SlotPool", "extract_slot", "insert_slot", "KVOffloadTier",
-           "split_kv_pages", "join_kv_pages"]
+__all__ = ["SlotPool", "extract_slot", "insert_slot", "extract_aux_slot",
+           "insert_aux_slot", "KVOffloadTier", "split_kv_pages",
+           "join_kv_pages"]
 
 
 class SlotPool:
@@ -98,6 +99,46 @@ def insert_slot(cache: Cache, single, slot: int, n_slots: int) -> Cache:
     return jax.tree_util.tree_map(ins, cache, single)
 
 
+def extract_aux_slot(cache, slot: int, n_slots: int) -> Dict[str, Any]:
+    """Pull one sequence's *non-KV* state (ssm, cross, pos) to the host.
+
+    The paged engine's park payload: under the pool layout the KV never
+    leaves its page frames, so preemption only carries this tiny
+    remainder (plus per-page far-tier transfers) — nothing dense is
+    ever re-materialised.
+    """
+    def ex(leaf):
+        if _is_batched_axis1(leaf, n_slots):
+            return np.asarray(leaf[:, slot:slot + 1])
+        if _is_batched_axis0(leaf, n_slots):
+            return np.asarray(leaf[slot:slot + 1])
+        return np.asarray(leaf)
+    return {
+        "ssm": jax.tree_util.tree_map(ex, cache.ssm),
+        "cross": jax.tree_util.tree_map(ex, cache.cross),
+        "pos": np.asarray(cache.pos[slot:slot + 1]),
+    }
+
+
+def insert_aux_slot(cache, aux: Dict[str, Any], slot: int, n_slots: int):
+    """Write an :func:`extract_aux_slot` payload back into ``slot``."""
+    def ins(dst, src):
+        src = jnp.asarray(src)
+        if _is_batched_axis1(dst, n_slots):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=1)
+        if _is_batched_axis0(dst, n_slots):
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=0)
+        return dst
+    return cache._replace(
+        ssm=jax.tree_util.tree_map(ins, cache.ssm, aux["ssm"]),
+        cross=jax.tree_util.tree_map(ins, cache.cross, aux["cross"]),
+        pos=jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, jnp.asarray(aux["pos"]).astype(cache.pos.dtype),
+            slot, axis=0))
+
+
 def split_kv_pages(single: Cache, page_size: int, n_tokens: int
                    ) -> Tuple[Cache, List[Dict[str, np.ndarray]]]:
     """Carve a single-sequence cache into (residue, KV pages).
@@ -118,7 +159,10 @@ def split_kv_pages(single: Cache, page_size: int, n_tokens: int
     v_np = np.asarray(v)
     pages = []
     for i in range(n_pages):
-        lo, hi = i * page_size, min((i + 1) * page_size, k_np.shape[2])
+        # clamp the last page to ``valid`` — clamping to the cache
+        # capacity instead silently shipped up to a page of stale tail
+        # content to the far tier whenever valid % page_size != 0
+        lo, hi = i * page_size, min((i + 1) * page_size, valid)
         pages.append({"k": k_np[:, :, lo:hi].copy(),
                       "v": v_np[:, :, lo:hi].copy()})
     residue = single._replace(kv=dict(

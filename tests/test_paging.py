@@ -1,8 +1,9 @@
 """repro.paging tests: page-table invariants, pager overlap under
-simulated latency, QoS windows, watermark admission, oversubscribed
-engine end-to-end with forced preemption."""
+simulated latency, QoS windows, fault recovery, watermark admission,
+oversubscribed engine end-to-end with forced preemption."""
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -11,7 +12,7 @@ from repro.paging import (EventKind, EventLoop, PagePool, PageState,
                           PageTable, Pager, PagingError, WatermarkPolicy,
                           pages_for)
 from repro.paging.sim import simulate_paged_serving
-from repro.serve.kv_cache import SlotPool
+from repro.serve.kv_cache import (SlotPool, join_kv_pages, split_kv_pages)
 
 
 def make_pager(n_pages=8, page_size=4, base_latency=5e-6, **kw):
@@ -143,6 +144,96 @@ def test_pager_qos_windows_limit_outstanding():
     assert pager.windows.in_flight[QoS.LATENCY] == 0
 
 
+def make_faulty_pager(n_pages=8, page_size=4, **kw):
+    """Pager whose SimBackend raises on issue while ``fail['on']``."""
+    fail = {"on": True}
+
+    def latency_fn(req):
+        if fail["on"]:
+            raise RuntimeError("injected far-memory fault")
+        return 5e-6
+
+    pool = PagePool(n_pages, page_size)
+    table = PageTable(pool)
+    amu = AMU(backend=SimBackend(base_latency=5e-6, bandwidth=10e9,
+                                 latency_fn=latency_fn),
+              max_outstanding=64)
+    return fail, pool, table, Pager(pool, table, amu, page_nbytes=1 << 12,
+                                    **kw)
+
+
+def test_pager_failed_aload_releases_qos_window():
+    """A failed aload must not permanently occupy its LATENCY window
+    slot: the window is released, the reserved frame freed, the page
+    reverted to PARKED, and a retry succeeds at full window width."""
+    fail, pool, table, pager = make_faulty_pager(latency_window=2,
+                                                 bulk_window=2)
+    table.register_parked("s", 2)
+    pager.store_far("s", 0, None)
+    pager.store_far("s", 1, None)
+    assert pager.prefetch("s", 0) and pager.prefetch("s", 1)
+    assert pager.windows.in_flight[QoS.LATENCY] == 2
+    pager.advance(1.0)                       # poll reaps both failures
+    assert pager.windows.in_flight[QoS.LATENCY] == 0
+    assert pager.stats["aload_failed"] == 2
+    assert table.logical_pages("s", PageState.PARKED) == [0, 1]
+    assert pool.n_free == pool.n_pages       # reserved frames returned
+    fail["on"] = False                       # fault clears: retry works
+    assert pager.prefetch_seq("s") == 2      # full window still available
+    pager.advance(1.0)
+    assert table.resident("s")
+
+
+def test_pager_failed_astore_releases_qos_window():
+    fail, pool, table, pager = make_faulty_pager(latency_window=4,
+                                                 bulk_window=2)
+    table.register("s")
+    table.ensure_capacity("s", 8)            # 2 pages resident
+    for l in range(2):
+        pool.mark_dirty(table.entry("s", l).phys)
+        pager.evict("s", l)                  # dirty: BULK astore, fails
+    pager.advance(1.0)
+    assert pager.windows.in_flight[QoS.BULK] == 0
+    assert pager.stats["astore_failed"] == 2
+    # the far dict already holds the payload, so the pages stay parked
+    # and remain fetchable once the fault clears
+    fail["on"] = False
+    pager.prefetch_seq("s")
+    pager.advance(1.0)
+    assert table.resident("s")
+
+
+def test_pager_failed_demand_fetch_raises_but_releases_window():
+    fail, pool, table, pager = make_faulty_pager(latency_window=2)
+    table.register_parked("s", 1)
+    pager.store_far("s", 0, None)
+    with pytest.raises(PagingError):
+        pager.wait_page("s", 0)
+    assert pager.windows.in_flight[QoS.LATENCY] == 0
+    assert table.entry("s", 0).state is PageState.PARKED
+    fail["on"] = False
+    pager.wait_page("s", 0)                  # retry succeeds
+    assert table.resident("s")
+
+
+def test_pager_drain_of_failed_request_is_not_an_arrival():
+    """Draining a full QoS window must reap a FAILED request (window
+    released, page back to PARKED) — never count it as a landed page."""
+    fail, pool, table, pager = make_faulty_pager(latency_window=1)
+    table.register_parked("s", 2)
+    pager.store_far("s", 0, None)
+    pager.store_far("s", 1, None)
+    assert pager.prefetch("s", 1)            # fails at issue, holds window
+    assert pager.prefetch("s", 0)            # queued behind the window
+    fail["on"] = False                       # fault clears for the retry
+    pager.wait_page("s", 0)                  # _force_issue drains the fail
+    assert table.entry("s", 0).state is PageState.RESIDENT
+    assert table.entry("s", 1).state is PageState.PARKED   # reverted
+    assert pager.stats["aload_failed"] == 1
+    assert pager.stats["arrived"] == 1       # only the real arrival
+    assert pager.windows.in_flight[QoS.LATENCY] == 0
+
+
 def test_pager_clean_eviction_skips_astore():
     pool, table, pager = make_pager()
     table.register_parked("s", 2)
@@ -153,6 +244,69 @@ def test_pager_clean_eviction_skips_astore():
     assert pager.evict_lru(2) == 2
     assert pager.amu.stats["astore"] == astores_before   # no writeback
     assert pager.stats["clean_evict"] == 2
+
+
+# ---------------------------------------------------------------------------
+# exact-page-boundary regression: seq length an integer multiple of page_size
+# ---------------------------------------------------------------------------
+
+def _single_cache(L=2, S=16, Hkv=2, D=4, fill=None):
+    from repro.models.model import Cache
+    rng = np.random.default_rng(0)
+    k = rng.standard_normal((L, 1, S, Hkv, D)).astype(np.float32) \
+        if fill is None else np.full((L, 1, S, Hkv, D), fill, np.float32)
+    v = rng.standard_normal((L, 1, S, Hkv, D)).astype(np.float32)
+    return Cache(kv={"k": jnp.asarray(k), "v": jnp.asarray(v)}, ssm=(),
+                 cross={}, pos=np.full((1,), S, np.int32)), k, v
+
+
+@pytest.mark.parametrize("n_tokens", [8, 16])     # exact multiples of 8
+def test_split_join_exact_page_boundary(n_tokens):
+    """n_tokens == k * page_size must produce exactly k full pages (no
+    empty trailing page, no dropped residue) and round-trip bit-exact."""
+    single, k, v = _single_cache(S=16)
+    residue, pages = split_kv_pages(single, 8, n_tokens)
+    assert len(pages) == n_tokens // 8
+    assert all(pg["k"].shape[2] == 8 for pg in pages)
+    joined = join_kv_pages(residue, pages, 16)
+    np.testing.assert_array_equal(np.asarray(joined.kv["k"])[:, :, :n_tokens],
+                                  k[:, :, :n_tokens])
+    np.testing.assert_array_equal(np.asarray(joined.kv["k"])[:, :, n_tokens:],
+                                  0)
+
+
+def test_split_one_past_boundary_adds_partial_page():
+    single, k, v = _single_cache(S=16)
+    residue, pages = split_kv_pages(single, 8, 9)
+    assert [pg["k"].shape[2] for pg in pages] == [8, 1]
+    joined = join_kv_pages(residue, pages, 16)
+    np.testing.assert_array_equal(np.asarray(joined.kv["k"])[:, :, :9],
+                                  k[:, :, :9])
+
+
+def test_paged_gather_exact_boundary_length():
+    """A sequence whose valid length fills its pages exactly must match
+    the dense kernel (the last page has no masked residue)."""
+    from repro.kernels.decode_attention import (decode_attention,
+                                                paged_decode_attention)
+    rng = np.random.default_rng(1)
+    B, H, Hkv, D, page, per_seq = 2, 4, 2, 32, 16, 2
+    N = B * per_seq
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((N, page, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((N, page, Hkv, D)), jnp.float32)
+    pt = np.arange(N, dtype=np.int32).reshape(B, per_seq)
+    lengths = np.array([32, 16], np.int32)     # == 2 pages / == 1 page
+    out = paged_decode_attention(q, kp, vp, jnp.asarray(pt),
+                                 jnp.asarray(lengths))
+    kp_np, vp_np = np.asarray(kp), np.asarray(vp)
+    for b in range(B):
+        kd = np.concatenate([kp_np[pt[b, j]] for j in range(per_seq)])[None]
+        vd = np.concatenate([vp_np[pt[b, j]] for j in range(per_seq)])[None]
+        ref = decode_attention(q[b:b + 1], jnp.asarray(kd), jnp.asarray(vd),
+                               valid_len=int(lengths[b]), bkv=16)
+        np.testing.assert_allclose(np.asarray(out[b:b + 1]), np.asarray(ref),
+                                   atol=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -289,6 +443,67 @@ def test_engine_watermark_blocks_admission(dense_setup):
     # up front instead of being silently dropped by run()
     with pytest.raises(PagingError):
         eng.submit(np.arange(10), max_new_tokens=4)    # 2 pages + low 3 > 4
+
+
+def test_engine_preempt_resume_at_exact_page_boundary(dense_setup):
+    """Prompts and decode lengths sized so sequences sit exactly on page
+    boundaries when parked: the paged run must still match a dense
+    (non-paged) run token for token."""
+    from repro.serve.engine import Engine
+    cfg, params = dense_setup
+    # page_size 8: prompt 8 = 1 full page, prompt 16 = 2 full pages;
+    # 8 new tokens keep every park/resume point page-aligned.
+    prompts = [np.arange(8) % cfg.vocab_size,
+               np.arange(16) % cfg.vocab_size,
+               np.arange(8) % cfg.vocab_size]
+
+    dense = Engine(cfg, params, max_batch=3, max_len=64,
+                   prefill_buckets=(16,), paging=False)
+    for p in prompts:
+        dense.submit(p, max_new_tokens=8)
+    ref = dense.run()
+
+    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_buckets=(16,),
+                 page_size=8, device_pages=5)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=8)
+    out = eng.run()
+    assert eng.stats["preemptions"] > 0
+    assert out == ref
+    assert eng.page_pool.n_free == eng.page_pool.n_pages
+
+
+def test_engine_rejects_page_size_not_dividing_capacity(dense_setup):
+    from repro.serve.engine import Engine
+    cfg, params = dense_setup
+    with pytest.raises(PagingError):
+        Engine(cfg, params, max_batch=2, max_len=64, page_size=24)
+
+
+def test_engine_paged_offload_matches_dense_offload(dense_setup):
+    """The finished-sequence KVOffloadTier path (the one surviving user
+    of join_kv_pages) must park the same KV the dense engine parks."""
+    from repro.serve.engine import Engine
+    cfg, params = dense_setup
+    prompt = np.arange(7) % cfg.vocab_size
+
+    def run(paging):
+        eng = Engine(cfg, params, max_batch=1, max_len=64,
+                     prefill_buckets=(16,), offload_finished=True,
+                     page_size=8, paging=paging)
+        rid = eng.submit(prompt, max_new_tokens=4)
+        eng.run()
+        return eng.kv_tier.fetch(rid)
+
+    dense_tree, paged_tree = run(False), run(True)
+    dk = np.asarray(dense_tree.kv["k"])
+    pk = np.asarray(paged_tree.kv["k"])
+    # valid KV covers the prompt plus all but the last generated token
+    # (the final token is emitted without a further decode write)
+    tokens = 7 + 4 - 1
+    np.testing.assert_array_equal(pk[:, :, :tokens], dk[:, :, :tokens])
+    np.testing.assert_array_equal(
+        np.asarray(paged_tree.pos), np.asarray(dense_tree.pos))
 
 
 def test_paged_decode_attention_matches_dense():
