@@ -10,6 +10,10 @@ each gets a bench:
   * paged_kv_sweep     — repro.paging pager vs blocking whole-sequence KV
                          fetch across oversubscription ratios (hit rate,
                          us/token; the serving-capacity claim),
+  * mixed_batch_sweep  — chunked continuous batching (mixed prefill+decode
+                         steps) vs serial dense prefill across request
+                         oversubscription: mean/p95 TTFT + decode tok/s
+                         (the admission-bubble claim),
   * amu_runtime        — software-AMU issue/getfin overhead (runtime path),
   * kernels            — per-kernel interpret-mode us_per_call (semantic
     cost on CPU; real perf comes from the dry-run roofline, not this),
@@ -108,6 +112,29 @@ def bench_paged_kv_sweep() -> None:
              f"densify={r['paged_densify_us_per_token']:.2f}us/tok "
              f"densify_speedup={r['speedup_densify']:.2f} "
              f"bulk_wb={r['bulk_writebacks']} demand={r['demand_fetches']}")
+
+
+def bench_mixed_batch_sweep() -> None:
+    """Chunked continuous batching vs serial dense prefill (deterministic
+    virtual clock): a burst of ``oversub * slots * 4`` requests served
+    through mixed prefill+decode steps versus admit-then-stall dense
+    prefill.  The 2x row is the chunk-queue engine's acceptance number:
+    mean time-to-first-token must improve without the decode stream
+    regressing.  Pages are not the constraint here (that is
+    ``paged_kv_sweep``); this isolates the admission bubble."""
+    from repro.paging.sim import simulate_mixed_batching
+    for oversub in (0.5, 1.0, 2.0, 4.0):
+        t0 = time.perf_counter()
+        r = simulate_mixed_batching(oversub)
+        us = (time.perf_counter() - t0) * 1e6
+        _row("mixed_batch_sweep", us,
+             f"oversub={oversub:g} ttft_dense={r['ttft_dense_us']:.0f}us "
+             f"ttft_mixed={r['ttft_mixed_us']:.0f}us "
+             f"ttft_speedup={r['ttft_speedup']:.3f} "
+             f"ttft_p95_mixed={r['ttft_p95_mixed_us']:.0f}us "
+             f"tok_dense={r['tok_per_s_dense']:.0f}/s "
+             f"tok_mixed={r['tok_per_s_mixed']:.0f}/s "
+             f"thr_speedup={r['throughput_speedup']:.3f}")
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +266,7 @@ def main(argv=None) -> None:
     bench_granularity_sweep()
     bench_outstanding_sweep()
     bench_paged_kv_sweep()
+    bench_mixed_batch_sweep()
     bench_amu_runtime(n=2_000 if args.smoke else 20_000)
     if not args.smoke:
         bench_kernels()

@@ -29,9 +29,11 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0))
     # 4 slots x 12 pages would want 48 device pages; give it 12 so the
     # engine must oversubscribe: preempt cold pages, prefetch on resume.
+    # chunk_tokens=8: admission is the chunk queue — prompts prefill in
+    # 8-token chunks fused with running decodes (no admission bubble).
     eng = Engine(cfg, params, max_batch=4, max_len=96,
                  prefill_buckets=(16, 32, 64), offload_finished=True,
-                 page_size=8, device_pages=12)
+                 page_size=8, device_pages=12, chunk_tokens=8)
 
     rng = np.random.default_rng(7)
     n_requests = 10
@@ -46,8 +48,9 @@ def main():
     print(f"[serve] {len(out)} requests -> {total} tokens in "
           f"{eng.stats['steps']} decode steps "
           f"(occupancy {occ:.2f}; 4 slots, mixed depths)")
-    print(f"[serve] prefills {eng.stats['prefills']} "
-          f"(bucketed: {sorted(set(k[0] for k in eng._prefills))})")
+    print(f"[serve] chunked prefill: {eng.stats['chunks']} chunks over "
+          f"{eng.stats['mixed_steps']} mixed steps "
+          f"({eng.stats['prefills']} dense fallbacks)")
     print(f"[serve] page pool: {eng.page_pool.n_pages} pages x "
           f"{eng.page_size} tok, preemptions {eng.stats['preemptions']}, "
           f"resumes {eng.stats['resumes']}")

@@ -34,8 +34,8 @@ from repro.optim.adamw import adamw_init, adamw_update
 
 __all__ = [
     "make_train_step", "make_prefill_step", "make_serve_step",
-    "abstract_params", "abstract_opt_state", "train_inputs",
-    "decode_inputs", "paged_cache_specs",
+    "make_mixed_step", "abstract_params", "abstract_opt_state",
+    "train_inputs", "decode_inputs", "paged_cache_specs",
 ]
 
 
@@ -254,3 +254,58 @@ def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     if cspecs is not None:
         specs["paged_cache"] = cspecs
     return _MeshedStep(fn, mesh), specs
+
+
+def make_mixed_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
+                    donate: bool = True,
+                    act_policy: Optional[acts.ActPolicy] = None,
+                    kernel_impl: str = "auto"):
+    """Build the continuously-batched serve step: one decode token for
+    every running slot **fused with** one paged prompt chunk for up to C
+    admitting slots, in a single jitted, donated, mesh-bound program —
+    ``fn(params, cache, tokens, chunk) -> (logits, chunk_logits,
+    chunk_carry, cache)``.
+
+    The decode half is exactly :func:`make_serve_step`'s paged program
+    (same ``decode_step`` trace, so running slots' tokens are unchanged
+    by the fusion); the chunk half is
+    :func:`~repro.models.model.prefill_chunk`, which scatters the
+    chunk's K/V into its page-table-mapped pool frames and attends the
+    pool-resident prefix.  Fusing them is the serving-level version of
+    the paper's overlap thesis: admission work rides the same step that
+    keeps every running sequence's decode in flight, so a new request
+    never serialises a dense-prefill bubble in front of running decodes.
+
+    The cache is donated (pool frames update in place); the paged-cache
+    pool arrays are mesh-constrained via :func:`paged_cache_specs`, and
+    the chunk's control state (tokens, offsets, page rows) is replicated
+    like the page table — tiny int32 state every shard needs whole, the
+    APR analogue.  ``chunk`` layouts are documented on
+    :func:`~repro.models.model.prefill_chunk`; jit re-specialises per
+    (chunk rows, chunk length) shape, which the engine keeps to a small
+    fixed set.
+    """
+    pshapes = abstract_params(cfg)
+    pspecs = param_specs(mesh, pshapes)
+    pol = _policy_for(act_policy)
+    cspecs = paged_cache_specs(mesh, cfg)
+
+    def step(params, cache, tokens, chunk):
+        params = _constrain_tree(params, pspecs, mesh)
+        kv = dict(cache.kv)
+        for name, spec in cspecs.items():
+            kv[name] = jax.lax.with_sharding_constraint(
+                kv[name], NamedSharding(mesh, spec))
+        cache = cache._replace(kv=kv)
+        chunk = jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P())), chunk)
+        with acts.policy(pol):
+            logits, cache = model_mod.decode_step(params, cfg, cache, tokens,
+                                                  impl=kernel_impl)
+            chunk_logits, cache, carry = model_mod.prefill_chunk(
+                params, cfg, cache, chunk, impl=kernel_impl)
+        return logits, chunk_logits, carry, cache
+
+    fn = jax.jit(step, donate_argnums=(1,) if donate else ())
+    return _MeshedStep(fn, mesh), {"params": pspecs, "paged_cache": cspecs}

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_attention"]
+__all__ = ["flash_attention", "paged_prefill_flash"]
 
 NEG_INF = -1e30
 _LANE = 128
@@ -128,3 +128,133 @@ def flash_attention(
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# paged prefill: flash-attend prompt chunks against page-table-gathered KV
+# ---------------------------------------------------------------------------
+
+
+def _paged_prefill_kernel(pt_ref, off_ref, len_ref, q_ref, k_ref, v_ref,
+                          o_ref, acc, m_s, l_s, *, scale: float, page: int,
+                          window: int, bq: int):
+    b, iq, j = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+    n_pg = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    offset = off_ref[b]
+    kv_valid = offset + len_ref[b]
+    first_q = offset + iq * bq
+    last_q = first_q + bq - 1
+    first_kv = j * page
+
+    # block liveness: this frame holds no position the row's queries may
+    # attend (outside the causal wedge / SWA window, or past the row's
+    # written extent) -> skip the whole tile
+    live = (first_kv < kv_valid) & (first_kv <= last_q)
+    if window:
+        live &= (first_kv + page - 1) > first_q - window
+
+    @pl.when(live)
+    def _():
+        q_pos = first_q + jax.lax.broadcasted_iota(jnp.int32, (bq, page), 0)
+        kv_pos = first_kv + jax.lax.broadcasted_iota(jnp.int32, (bq, page), 1)
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (bq, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)                # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, page)
+        mask = (q_pos >= kv_pos) & (kv_pos < kv_valid)
+        if window:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[:, :1] = l_s[:, :1] * corr + p.sum(-1, keepdims=True)
+        m_s[:, :1] = m_new
+        v = v_ref[0, :, 0].astype(jnp.float32)                # (page, D)
+        acc[...] = acc[...] * corr + jax.lax.dot(p, v)
+
+    @pl.when(j == n_pg - 1)
+    def _():
+        l = jnp.maximum(l_s[:, :1], 1e-30)
+        o_ref[0, 0] = (acc[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "interpret"))
+def paged_prefill_flash(
+    q: jnp.ndarray,            # (C, H, T, D) — one prompt chunk per row
+    k_pages: jnp.ndarray,      # (N, page, Hkv, D) — the device page pool
+    v_pages: jnp.ndarray,
+    page_rows: jnp.ndarray,    # (C, pages_per_seq) int32 physical frame ids
+    offset: jnp.ndarray,       # (C,) int32 absolute position of q[:, :, 0]
+    lengths: jnp.ndarray,      # (C,) int32 valid tokens in each chunk row
+    *,
+    window: int = 0,
+    bq: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Chunked-prefill flash attention reading KV through the page table.
+
+    The paged-KV variant of :func:`flash_attention`: each grid row is one
+    admitting sequence's prompt chunk, and the KV grid dimension streams
+    that sequence's pool *frames* through VMEM — the page-table row is a
+    scalar-prefetch operand whose dereference picks the frame each step
+    DMAs, exactly like ``decode_attention.paged_decode_attention`` but
+    with a (bq, page) score tile instead of one query token.  Per-row
+    ``offset``/``lengths`` (also scalar-prefetched) shift the causal
+    wedge to each row's absolute position, so one call serves chunk rows
+    of different sequences at different prefill depths.  Frames past a
+    row's written extent are skipped by block liveness and never even
+    issue their DMA.
+    """
+    C, H, T, D = q.shape
+    N, page, Hkv, _ = k_pages.shape
+    g = H // Hkv
+    pages_per_seq = page_rows.shape[1]
+    bq = min(bq, T)
+    pad_t = (-T) % bq
+    if pad_t:
+        # pad the chunk axis up to a block multiple; padded queries
+        # produce don't-care rows that are sliced off below (callers
+        # only read positions below each row's valid length anyway)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+        T = T + pad_t
+
+    kernel = functools.partial(_paged_prefill_kernel,
+                               scale=1.0 / math.sqrt(D), page=page,
+                               window=window, bq=bq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(C, H, T // bq, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda b, h, i, j, pt, off, ln: (b, h, i, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, i, j, pt, off, ln, g=g:
+                         (pt[b, j], 0, h // g, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, i, j, pt, off, ln, g=g:
+                         (pt[b, j], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, i, j, pt, off, ln: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, _LANE), jnp.float32),
+            pltpu.VMEM((bq, _LANE), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(page_rows.astype(jnp.int32), offset.astype(jnp.int32),
+      lengths.astype(jnp.int32), q, k_pages, v_pages)
+    return out[:, :, :T - pad_t] if pad_t else out

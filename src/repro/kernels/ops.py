@@ -25,13 +25,16 @@ from repro.kernels.decode_attention import default_interpret
 from repro.kernels.decode_attention import \
     paged_decode_attention as _paged_decode_attn
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_attention import \
+    paged_prefill_flash as _paged_prefill_flash
 from repro.kernels.mamba2 import ssd as _ssd
 from repro.kernels.moe_gather import gather_rows as _gather_rows
 from repro.kernels.rwkv6 import wkv6 as _wkv6
 
 __all__ = ["matmul", "flash_attention", "decode_attention",
-           "paged_decode_attention", "wkv6", "ssd",
-           "gather_rows", "on_tpu", "resolve_impl", "default_interpret"]
+           "paged_decode_attention", "paged_prefill_attention", "wkv6",
+           "ssd", "gather_rows", "on_tpu", "resolve_impl",
+           "default_interpret"]
 
 
 def on_tpu() -> bool:
@@ -95,6 +98,40 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
         return out.reshape(B, H, D).astype(q.dtype)
     return _paged_decode_attn(q, k_pages, v_pages, page_table, lengths,
                               interpret=(impl == "interpret"), **kw)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, page_rows, offset, lengths,
+                            *, window: int = 0, impl: str = "auto", **kw):
+    """Prompt-chunk attention over the paged KV pool (chunked prefill).
+
+    q: (C, T, H, D) — one prompt chunk per row, model layout;
+    k/v_pages: (N, page, Hkv, D) pool layout; page_rows: (C, pages_per_seq)
+    frame ids; offset/lengths: (C,) absolute start + valid tokens per row.
+
+    The XLA path gathers each row's page-table view and runs the exact
+    ``chunked_attention`` expressions dense prefill uses (per-row
+    ``q_offset`` shifts the causal wedge), which is what keeps a chunked
+    prefill's generated tokens equal to an uninterrupted dense prefill's.
+    The pallas/interpret path is the scalar-prefetch flash kernel
+    (``flash_attention.paged_prefill_flash``).
+    """
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        from repro.models.attention import chunked_attention
+        C, T, H, D = q.shape
+        _, page, Hkv, _ = k_pages.shape
+        k = jnp.take(k_pages, page_rows, axis=0)       # (C, pps, page, ...)
+        v = jnp.take(v_pages, page_rows, axis=0)
+        Skv = k.shape[1] * page
+        k = k.reshape(C, Skv, Hkv, D)
+        v = v.reshape(C, Skv, Hkv, D)
+        return chunked_attention(q, k, v, causal=True, window=window,
+                                 q_offset=offset)
+    qT = q.transpose(0, 2, 1, 3)                       # (C, H, T, D)
+    out = _paged_prefill_flash(qT, k_pages, v_pages, page_rows, offset,
+                               lengths, window=window,
+                               interpret=(impl == "interpret"), **kw)
+    return out.transpose(0, 2, 1, 3)
 
 
 def wkv6(r, k, v, w, u, *, impl: str = "auto", chunk: int = 64):

@@ -1,7 +1,14 @@
 """Serving driver: continuous-batching engine over synthetic requests.
 
   PYTHONPATH=src python -m repro.launch.serve \
-      --arch phi4-mini-3.8b --smoke --requests 16 --max-new 12
+      --arch phi4-mini-3.8b --smoke --requests 16 --max-new 12 \
+      --chunk-tokens 16
+
+With ``--chunk-tokens`` admission goes through the chunk queue: prompts
+are prefilled in chunks directly on the paged pool layout, fused with
+every running slot's decode token in one mixed step (no dense-prefill
+bubble).  ``--dense`` / ``--kernel-impl`` A/B the paged decode path
+against the dense per-slot cache and the kernel backends.
 """
 
 from __future__ import annotations
@@ -40,6 +47,13 @@ def main(argv=None):
                     choices=("auto", "pallas", "interpret", "xla"),
                     help="paged-attention backend (auto: Pallas on TPU, "
                          "XLA gather elsewhere)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="chunked paged prefill: prompt chunk size in "
+                         "tokens; 0 = legacy whole-prompt dense prefill "
+                         "at admission")
+    ap.add_argument("--chunk-slots", type=int, default=2,
+                    help="max admitting slots whose chunks fuse into one "
+                         "mixed prefill+decode step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -48,7 +62,9 @@ def main(argv=None):
     eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
                  offload_finished=args.offload_finished,
                  page_size=args.page_size, device_pages=args.device_pages,
-                 paging=not args.dense, kernel_impl=args.kernel_impl)
+                 paging=not args.dense, kernel_impl=args.kernel_impl,
+                 chunk_tokens=args.chunk_tokens or None,
+                 chunk_slots=args.chunk_slots)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -76,6 +92,11 @@ def main(argv=None):
         print(f"[serve] page pool {eng.page_pool.n_pages} x "
               f"{eng.page_size} tok: preemptions {eng.stats['preemptions']}, "
               f"resumes {eng.stats['resumes']}, pager {dict(eng.pager.stats)}")
+    if eng.chunking:
+        print(f"[serve] chunked prefill: {eng.stats['chunks']} chunks of "
+              f"<= {eng.chunk_tokens} tok across "
+              f"{eng.stats['mixed_steps']} mixed steps "
+              f"({eng.stats['prefills']} dense-prefill fallbacks)")
     if args.offload_finished:
         amu = eng.kv_tier.tier.amu
         print(f"[serve] far-tier AMU stats: {dict(amu.stats)}")

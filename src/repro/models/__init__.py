@@ -1,11 +1,13 @@
 """Pure-JAX model zoo: layers, attention, MoE, SSM blocks, composable models."""
 
 from repro.models.model import (
-    init_params, train_loss, prefill, decode_step, init_cache,
+    init_params, train_loss, prefill, prefill_chunk, encode_cross,
+    decode_step, init_cache, init_paged_cache, PagedCache,
     chunked_cross_entropy, count_params, forward, Cache,
 )
 
 __all__ = [
-    "init_params", "train_loss", "prefill", "decode_step", "init_cache",
+    "init_params", "train_loss", "prefill", "prefill_chunk", "encode_cross",
+    "decode_step", "init_cache", "init_paged_cache", "PagedCache",
     "chunked_cross_entropy", "count_params", "forward", "Cache",
 ]

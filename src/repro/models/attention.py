@@ -30,11 +30,26 @@ Params = Dict[str, jnp.ndarray]
 
 __all__ = [
     "attn_init", "attention_block", "decode_attention_block",
-    "paged_decode_attention_block", "one_token_attention",
-    "init_kv_cache", "init_paged_kv_cache", "chunked_attention", "NEG_INF",
+    "paged_decode_attention_block", "paged_prefill_block",
+    "one_token_attention", "init_kv_cache", "init_paged_kv_cache",
+    "chunked_attention", "NEG_INF",
 ]
 
 NEG_INF = -1e30
+
+
+def _gather_qkv_for_rope(q, k, v):
+    """Work around a jax-0.4.37 SPMD miscompile: rope applied to a
+    model-sharded projection comes out scaled by exactly the data-axis
+    size on some mesh shapes (observed at (2, 4); see the ROADMAP open
+    item).  Decode/chunk projections are at most a few tokens per slot,
+    so gathering them to replicated before rope costs noise next to the
+    step's weight traffic.  No-op without an active mesh — single-device
+    graphs (and the dense-vs-paged bit-exactness they anchor) are
+    untouched."""
+    from repro.dist import act_sharding as acts
+    return (acts.constrain(q, P()), acts.constrain(k, P()),
+            acts.constrain(v, P()))
 
 
 # -- parameter init -------------------------------------------------------------
@@ -63,11 +78,17 @@ def chunked_attention(
     *,
     causal: bool = True,
     window: int = 0,           # SWA: attend to [i-window+1, i]
-    q_offset: int = 0,         # absolute position of q[0] (for caches)
+    q_offset=0,                # absolute position of q[0]: int, or (B,) array
     chunk: int = 1024,
     kv_valid_len: Optional[jnp.ndarray] = None,   # mask KV beyond this
 ) -> jnp.ndarray:
     """Numerically-stable blockwise attention, peak memory O(Sq·chunk).
+
+    ``q_offset`` and ``kv_valid_len`` accept per-row ``(B,)`` arrays in
+    addition to scalars — the chunked paged-prefill path mixes prompt
+    chunks of different sequences (each at its own absolute offset) in
+    one batch.  The scalar path traces exactly the same graph as before
+    the per-row variant existed, so dense prefill stays bit-identical.
 
     Two execution modes, selected by :mod:`repro.dist.act_sharding`:
 
@@ -148,7 +169,15 @@ def _chunked_core(q, k, v, *, grouped: bool, causal, window, q_offset,
         qs = q.astype(opd)
         s_eq, pv_eq = "bqhd,bkhd->bqhk", "bqhk,bkhd->bqhd"
         acc_shape, red_shape = (B, Sq, H, D), (B, Sq, H)
-    q_pos = q_offset + jnp.arange(Sq)
+    # per-row offsets / valid lengths get a (B, Sq, chunk) mask; the
+    # scalar path keeps its original (Sq, chunk) mask (and graph)
+    per_row = (getattr(q_offset, "ndim", 0) > 0
+               or getattr(kv_valid_len, "ndim", 0) > 0)
+    if per_row:
+        q_pos = (jnp.asarray(q_offset).reshape(-1, 1)
+                 + jnp.arange(Sq))                       # (B or 1, Sq)
+    else:
+        q_pos = q_offset + jnp.arange(Sq)                # (Sq,)
 
     def body(carry, xs):
         acc, m, l = carry
@@ -156,16 +185,29 @@ def _chunked_core(q, k, v, *, grouped: bool, causal, window, q_offset,
         kv_pos = ci * chunk + jnp.arange(chunk)
         s = jnp.einsum(s_eq, qs, kci.astype(opd),
                        preferred_element_type=jnp.float32) * scale
-        mask = jnp.ones((Sq, chunk), bool)
-        if causal:
-            mask &= q_pos[:, None] >= kv_pos[None, :]
-        if window:
-            mask &= kv_pos[None, :] > q_pos[:, None] - window
-        if kv_valid_len is not None:
-            mask = mask & (kv_pos[None, :] < kv_valid_len)
-        mask = mask & (kv_pos < Skv)[None, :]          # padding chunk tail
-        bmask = (mask[None, :, None, None, :] if grouped
-                 else mask[None, :, None, :])
+        if per_row:
+            mask = jnp.ones((q_pos.shape[0], Sq, chunk), bool)
+            if causal:
+                mask &= q_pos[..., None] >= kv_pos[None, None, :]
+            if window:
+                mask &= kv_pos[None, None, :] > q_pos[..., None] - window
+            if kv_valid_len is not None:
+                vl = jnp.asarray(kv_valid_len).reshape(-1, 1, 1)
+                mask = mask & (kv_pos[None, None, :] < vl)
+            mask = mask & (kv_pos < Skv)[None, None, :]  # padding chunk tail
+            bmask = (mask[:, :, None, None, :] if grouped
+                     else mask[:, :, None, :])
+        else:
+            mask = jnp.ones((Sq, chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            if kv_valid_len is not None:
+                mask = mask & (kv_pos[None, :] < kv_valid_len)
+            mask = mask & (kv_pos < Skv)[None, :]        # padding chunk tail
+            bmask = (mask[None, :, None, None, :] if grouped
+                     else mask[None, :, None, :])
         s = jnp.where(bmask, s, NEG_INF)
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -277,6 +319,7 @@ def decode_attention_block(
     kc, vc = layer_cache
     slots = kc.shape[1]
     q, k_new, v_new = _project_qkv(p, cfg, x, compute_dtype)
+    q, k_new, v_new = _gather_qkv_for_rope(q, k_new, v_new)
     pos = jnp.broadcast_to(pos, (B,))
     posv = pos[:, None]                              # (B, 1)
     if cfg.mrope_sections:
@@ -390,6 +433,7 @@ def paged_decode_attention_block(
     page = kp.shape[1]
     slots = page_table.shape[1] * page           # token capacity per sequence
     q, k_new, v_new = _project_qkv(p, cfg, x, compute_dtype)
+    q, k_new, v_new = _gather_qkv_for_rope(q, k_new, v_new)
     pos = jnp.broadcast_to(pos, (B,))
     posv = pos[:, None]                              # (B, 1)
     if cfg.mrope_sections:
@@ -411,4 +455,72 @@ def paged_decode_attention_block(
     out = ops.paged_decode_attention(
         q[:, 0], kp, vp, page_table, valid, impl=impl)
     out = out.reshape(B, 1, cfg.num_heads * hd).astype(compute_dtype)
+    return dense(p["o"], out, compute_dtype), (kp, vp)
+
+
+# -- chunked paged prefill (prompt chunks computed on the pool layout) -----------
+
+
+def paged_prefill_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # (C, T, d) pre-normed chunk hidden
+    layer_pages: Tuple[jnp.ndarray, jnp.ndarray],  # k,v (N, page, Hkv, D)
+    page_rows: jnp.ndarray,              # (C, pages_per_seq) int32 frame ids
+    offset: jnp.ndarray,                 # (C,) absolute position of x[:, 0]
+    length: jnp.ndarray,                 # (C,) valid tokens in this chunk
+    positions: jnp.ndarray,              # (C, T) or (3, C, T) absolute pos
+    *,
+    compute_dtype=jnp.bfloat16,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One prompt-chunk attention computing directly on the paged layout.
+
+    The prefill counterpart of :func:`paged_decode_attention_block` and
+    the kernel-level heart of chunked paged prefill (the follow-up AMU
+    paper's massive-MLP serving pattern, 2404.11044 §4): each row of
+    ``x`` is one admitting sequence's next prompt chunk, flash-attended
+    against that sequence's pool-resident KV prefix *while its own K/V
+    is scattered straight into the mapped pool frames* — no dense
+    per-sequence KV buffer ever exists, not even during prefill.
+
+    Chunk rows are independent sequences at independent depths:
+    ``offset`` gives each row's absolute start position (RoPE and the
+    causal mask both honour it) and ``length`` its valid token count —
+    tail padding beyond ``length`` writes to the trash frame
+    (``n_frames - 1``, same convention as empty decode slots) and its
+    outputs are discarded by the caller.  The XLA path gathers the
+    page-table view and runs the same ``chunked_attention`` expressions
+    as dense prefill, so a chunked prefill's tokens match an
+    uninterrupted dense prefill's.
+    """
+    from repro.kernels import ops
+
+    C, T, _ = x.shape
+    hd = cfg.head_dim
+    kp, vp = layer_pages
+    page = kp.shape[1]
+    pages_per_seq = page_rows.shape[1]
+    slots = pages_per_seq * page                 # token capacity per sequence
+    trash = kp.shape[0] - 1
+    q, k_new, v_new = _project_qkv(p, cfg, x, compute_dtype)
+    q, k_new, v_new = _gather_qkv_for_rope(q, k_new, v_new)
+    q, k_new = _position_encode(cfg, q, k_new, positions)
+
+    # scatter the chunk's K/V into its mapped pool frames: token t of row
+    # c lands at absolute position offset[c] + t -> (frame, row-in-page)
+    abs_pos = offset[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    in_chunk = jnp.arange(T, dtype=jnp.int32)[None, :] < length[:, None]
+    ok = in_chunk & (abs_pos < slots)
+    page_idx = jnp.clip(abs_pos // page, 0, pages_per_seq - 1)
+    frame = jnp.where(ok, jnp.take_along_axis(page_rows, page_idx, axis=1),
+                      trash)                     # (C, T)
+    row = abs_pos % page
+    kp = kp.at[frame, row].set(k_new.astype(kp.dtype))
+    vp = vp.at[frame, row].set(v_new.astype(vp.dtype))
+
+    out = ops.paged_prefill_attention(
+        q, kp, vp, page_rows, offset, length,
+        window=cfg.window if cfg.attention == "swa" else 0, impl=impl)
+    out = out.reshape(C, T, cfg.num_heads * hd).astype(compute_dtype)
     return dense(p["o"], out, compute_dtype), (kp, vp)

@@ -27,9 +27,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_block, attn_init,
-                                    decode_attention_block, init_kv_cache,
-                                    init_paged_kv_cache,
-                                    paged_decode_attention_block)
+                                    chunked_attention, decode_attention_block,
+                                    init_kv_cache, init_paged_kv_cache,
+                                    paged_decode_attention_block,
+                                    paged_prefill_block)
 from repro.models.layers import (embed, embed_init, rms_norm, rms_norm_init,
                                  swiglu, swiglu_init, unembed)
 from repro.models.moe import moe_block, moe_init
@@ -38,8 +39,8 @@ Params = Dict[str, Any]
 
 __all__ = [
     "init_params", "train_loss", "prefill", "decode_step", "init_cache",
-    "PagedCache", "init_paged_cache", "chunked_cross_entropy",
-    "count_params",
+    "PagedCache", "init_paged_cache", "prefill_chunk", "encode_cross",
+    "chunked_cross_entropy", "count_params",
 ]
 
 
@@ -628,8 +629,15 @@ def _decode_hybrid(params, cfg, x, cache, ks, vs, attn, cdt):
     return x, kn, vn, st_flat
 
 
-def _decode_encdec(params, cfg, x, cache, ks, vs, attn, cdt):
-    enc_out = cache.cross["enc_out"]
+def _decode_encdec(params, cfg, x, cache, ks, vs, attn, cdt, *,
+                   cross=None, cross_valid=None):
+    """Enc-dec decoder stack shared by one-token decode and the chunked
+    paged-prefill path: ``x`` may be (B, 1, d) or a (C, T, d) prompt
+    chunk.  ``cross`` overrides the cache's cross-KV trees (the chunk
+    path gathers per-slot rows) and ``cross_valid`` masks encoder
+    positions past each row's true source length — decode passes
+    neither, so its traced graph is unchanged."""
+    cross = cache.cross if cross is None else cross
 
     def body(carry, xs):
         x = carry
@@ -639,31 +647,37 @@ def _decode_encdec(params, cfg, x, cache, ks, vs, attn, cdt):
                            kl, vl)
         x = x + a
         # cross attention against precomputed cross KV (no rope, not causal)
-        from repro.models.attention import chunked_attention
         from repro.models.layers import dense
-        B = x.shape[0]
+        B, S = x.shape[:2]
         hd = cfg.head_dim
         xq = rms_norm(lp["cross_norm"], x, cfg.norm_eps)
-        q = dense(lp["cross_attn"]["q"], xq, cdt).reshape(B, 1, cfg.num_heads, hd)
-        c = chunked_attention(q, ck, cv, causal=False)
-        c = dense(lp["cross_attn"]["o"], c.reshape(B, 1, cfg.num_heads * hd), cdt)
+        q = dense(lp["cross_attn"]["q"], xq, cdt).reshape(B, S, cfg.num_heads, hd)
+        c = chunked_attention(q, ck, cv, causal=False,
+                              kv_valid_len=cross_valid)
+        c = dense(lp["cross_attn"]["o"], c.reshape(B, S, cfg.num_heads * hd), cdt)
         x = x + c
         x = x + swiglu(lp["mlp"], rms_norm(lp["mlp_norm"], x, cfg.norm_eps), cdt)
         return x, (kn, vn)
 
     x, (kn, vn) = jax.lax.scan(
-        body, x, (params["decoder"], ks, vs,
-                  cache.cross["k"], cache.cross["v"]))
+        body, x, (params["decoder"], ks, vs, cross["k"], cross["v"]))
     return x, kn, vn
 
 
-def prefill(params, cfg: ModelConfig, batch, *, max_len: Optional[int] = None
+def prefill(params, cfg: ModelConfig, batch, *, max_len: Optional[int] = None,
+            last_pos: Optional[jnp.ndarray] = None
             ) -> Tuple[jnp.ndarray, Cache]:
     """Encode the prompt, build the cache, return last-token logits.
 
     For attention families this materialises the KV cache from the full
     forward; for SSM/hybrid families it runs the chunked form with
     ``return_state`` and keeps only the state (O(1) memory in S).
+
+    ``last_pos`` (a per-row ``(B,)`` index, default ``S - 1``) selects
+    which position's logits are returned — the serving engine passes the
+    prompt's true last token so the first sampled token never depends on
+    the padded bucket tail (and so bucketed dense prefill and chunked
+    paged prefill agree on it).
     """
     cdt = _cdtype(cfg)
     tokens = batch["tokens"]
@@ -705,7 +719,12 @@ def prefill(params, cfg: ModelConfig, batch, *, max_len: Optional[int] = None
         enc_out = _encode(params, cfg, batch["src_embeds"], remat="none")
         x, kv, cross = _prefill_encdec(params, cfg, x, positions, enc_out, cdt)
         cache = cache._replace(kv=dict(cache.kv, **kv), cross=cross)
-    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    if last_pos is None:
+        x_last = x[:, -1:]
+    else:
+        idx = jnp.clip(jnp.asarray(last_pos, jnp.int32), 0, S - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    x = rms_norm(params["final_norm"], x_last, cfg.norm_eps)
     table = params["embed"]["table"] if cfg.tie_embeddings else \
         params["lm_head"]["table"]
     logits = unembed({"table": table}, x, logit_scale=cfg.logit_scale,
@@ -819,6 +838,187 @@ def _prefill_hybrid(params, cfg, x, positions, cache, cdt):
     kv = dict(cache.kv, k=kn.astype(cache.kv["k"].dtype),
               v=vn.astype(cache.kv["v"].dtype))
     return x, st_flat, kv
+
+
+# ===========================================================================
+# chunked paged prefill: prompt chunks computed directly on the pool layout
+# ===========================================================================
+
+
+def encode_cross(params, cfg: ModelConfig, src_embeds) -> Dict[str, Any]:
+    """Run the encoder once and project the per-layer cross-attention KV.
+
+    The chunked-prefill admission path for enc-dec: the encoder (and the
+    cross K/V projections) run once when a request is admitted, their
+    rows are installed into the batched cache's ``cross`` tree, and every
+    subsequent prompt chunk / decode token reads them from there.  The
+    projections are exactly the ones dense prefill's cross
+    ``attention_block`` computes, so chunked and dense prefill agree.
+    """
+    cdt = _cdtype(cfg)
+    enc_out = _encode(params, cfg, src_embeds, remat="none")
+    B, Skv, _ = enc_out.shape
+    hd = cfg.head_dim
+
+    def body(carry, lp):
+        from repro.models.layers import dense
+        k = dense(lp["cross_attn"]["k"], enc_out, cdt).reshape(
+            B, Skv, cfg.num_kv_heads, hd)
+        v = dense(lp["cross_attn"]["v"], enc_out, cdt).reshape(
+            B, Skv, cfg.num_kv_heads, hd)
+        return carry, (k, v)
+
+    _, (ck, cv) = jax.lax.scan(body, 0, params["decoder"])
+    return {"k": ck, "v": cv, "enc_out": enc_out}
+
+
+def _chunk_hybrid(params, cfg: ModelConfig, x, carry, ks, vs, attn, cdt):
+    """Chunked-prefill layer stack for the hybrid family: the group
+    structure of :func:`_decode_hybrid` with a *chunked* Mamba2 body that
+    consumes and emits explicit per-layer state (``carry``: a
+    ``MambaState`` with leaves stacked ``(num_layers, C, ...)``), so a
+    prompt can be prefilled across several engine steps with the SSM
+    state carried host-side between chunks."""
+    from repro.models.layers import dense as dense_proj
+    every = cfg.shared_attn_every or cfg.num_layers
+    n_groups = cfg.num_layers // every
+    tail = cfg.num_layers - n_groups * every
+    B, T, _ = x.shape
+    sg = jax.tree_util.tree_map(lambda a: a[:n_groups * every].reshape(
+        (n_groups, every) + a.shape[1:]), carry)
+    shared = params["shared_attn"]
+
+    def mamba_body(x, ys):
+        lp, st = ys
+        st = ssm_mod.MambaState(*st)
+        xn = rms_norm(lp["norm"], x, cfg.norm_eps)
+        z, xbc, dt_raw = ssm_mod._mamba2_project(lp, cfg, xn, cdt)
+        xbc_conv, new_conv = ssm_mod._causal_conv(
+            xbc, lp["conv_w"], lp["conv_b"], conv_state=st.conv)
+        xh, dt, Bs, Cs = ssm_mod._mamba2_ssm_inputs(lp, cfg, xbc_conv, dt_raw)
+        A = jnp.exp(lp["A_log"].astype(jnp.float32))
+        y, S = ssm_mod.ssd_chunked(xh, dt, A, Bs, Cs, lp["D"],
+                                   initial_state=st.S, return_state=True)
+        y = y.reshape(B, T, cfg.d_inner)
+        y = rms_norm(lp["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+        out = x + dense_proj(lp["out_proj"], y.astype(cdt), cdt)
+        st2 = ssm_mod.MambaState(S=S, conv=new_conv.astype(st.conv.dtype))
+        return out, tuple(st2)
+
+    def group_body(carry_x, xs):
+        x = carry_x
+        gp, st_g, kl, vl = xs
+        x, st_new = jax.lax.scan(mamba_body, x, (gp, tuple(st_g)))
+        a, (kn, vn) = attn(shared["attn"],
+                           rms_norm(shared["attn_norm"], x, cfg.norm_eps),
+                           kl, vl)
+        x = x + a
+        x = x + swiglu(shared["mlp"], rms_norm(shared["mlp_norm"], x,
+                                               cfg.norm_eps), cdt)
+        return x, (st_new, kn, vn)
+
+    x, (st_new, kn, vn) = jax.lax.scan(
+        group_body, x, (params["mamba_groups"], tuple(sg), ks, vs))
+    st_new = ssm_mod.MambaState(*st_new)
+    st_flat = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_groups * every,) + a.shape[2:]), st_new)
+    if tail:
+        st_tail = jax.tree_util.tree_map(lambda a: a[n_groups * every:],
+                                         carry)
+        x, st_tail_new = jax.lax.scan(mamba_body, x,
+                                      (params["mamba_tail"], tuple(st_tail)))
+        st_flat = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0),
+            st_flat, ssm_mod.MambaState(*st_tail_new))
+    return x, kn, vn, st_flat
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache: PagedCache,
+                  chunk: Dict[str, Any], *, impl: str = "auto"
+                  ) -> Tuple[jnp.ndarray, PagedCache, Any]:
+    """Run one prompt chunk for up to C admitting slots on the pool layout.
+
+    The compute half of chunked paged prefill (the serving pattern the
+    follow-up AMU paper, 2404.11044, builds its massive-parallelism case
+    on): instead of densely prefilling a whole prompt in one bubble, the
+    engine feeds prompts through in chunks that flash-attend against the
+    sequence's pool-resident prefix while scattering their own K/V into
+    the mapped frames (:func:`~repro.models.attention.
+    paged_prefill_block`) — so prefill and decode share one fused step
+    and dense KV never exists, not even transiently.
+
+    ``chunk`` keys (C = chunk rows, T = chunk token capacity):
+
+    * ``tokens`` (C, T) int32 — prompt chunk token ids, zero-padded,
+    * ``offset`` / ``length`` (C,) int32 — each row's absolute start
+      position and valid token count (``length == 0`` rows are inert:
+      their K/V writes land in the trash frame),
+    * ``page_rows`` (C, pages_per_seq) int32 — pool frame ids covering
+      ``[0, offset + length)`` for each row (trash id beyond),
+    * ``slots`` (C,) int32 — the decode slot each row occupies (used to
+      gather enc-dec cross-KV rows),
+    * ``src_len`` (C,) int32 — enc-dec only: true encoder length,
+    * ``ssm`` — hybrid only: ``MambaState`` carry with leaves stacked
+      ``(num_layers, C, ...)``.
+
+    Returns ``(logits, cache, carry)``: logits at each row's last valid
+    token (the first sampled token when the row just finished its
+    prompt), the cache with the pool frames updated in place, and the
+    state carry to thread into the row's next chunk (hybrid; else None).
+
+    Layer structure is shared with the decode path (the same
+    ``_decode_families`` bodies run with a multi-token ``x`` and the
+    paged-prefill attention callback), which is what keeps chunked
+    prefill + paged decode bit-compatible with a dense run.
+    """
+    cdt = _cdtype(cfg)
+    fam = cfg.family
+    if fam == "ssm":
+        raise ValueError("family 'ssm' has no KV to page")
+    toks = chunk["tokens"]
+    C, T = toks.shape
+    offset = jnp.asarray(chunk["offset"], jnp.int32)
+    length = jnp.asarray(chunk["length"], jnp.int32)
+    page_rows = jnp.asarray(chunk["page_rows"], jnp.int32)
+    x = embed(params["embed"], toks, cdt)
+    pos2 = offset[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    positions = (jnp.broadcast_to(pos2, (3, C, T)) if cfg.mrope_sections
+                 else pos2)
+    kv = cache.kv
+    kp, vp = kv["k_pages"], kv["v_pages"]
+
+    def attn(p, h, kl, vl):
+        return paged_prefill_block(p, cfg, h, (kl, vl), page_rows, offset,
+                                   length, positions, compute_dtype=cdt,
+                                   impl=impl)
+
+    carry_out = None
+    if fam in ("dense", "moe"):
+        x, kn, vn, _ = _decode_families(params, cfg, x, cache, kp, vp,
+                                        attn, cdt)
+    elif fam == "hybrid":
+        x, kn, vn, carry_out = _chunk_hybrid(params, cfg, x, chunk["ssm"],
+                                             kp, vp, attn, cdt)
+    elif fam == "encdec":
+        slots_ix = jnp.asarray(chunk["slots"], jnp.int32)
+        cross = {"k": cache.cross["k"][:, slots_ix],
+                 "v": cache.cross["v"][:, slots_ix]}
+        x, kn, vn = _decode_encdec(params, cfg, x, cache, kp, vp, attn, cdt,
+                                   cross=cross,
+                                   cross_valid=jnp.asarray(chunk["src_len"],
+                                                           jnp.int32))
+    else:
+        raise ValueError(f"prefill_chunk: bad family {fam}")
+
+    idx = jnp.clip(length - 1, 0, T - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    x_last = rms_norm(params["final_norm"], x_last, cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["lm_head"]["table"]
+    logits = unembed({"table": table}, x_last, logit_scale=cfg.logit_scale,
+                     compute_dtype=cdt)[:, 0]
+    new_cache = cache._replace(kv=dict(kv, k_pages=kn, v_pages=vn))
+    return logits.astype(jnp.float32), new_cache, carry_out
 
 
 def _prefill_encdec(params, cfg, x, positions, enc_out, cdt):

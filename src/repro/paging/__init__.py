@@ -12,7 +12,16 @@ one-to-one onto the source paper's architecture:
     eviction, and per-QoS outstanding windows (MACR QoS at issue),
   * :mod:`repro.paging.events` — the §2.3.2 event-driven model as a
     scheduler: decode ticks, ``getfin`` page arrivals, and free-page-
-    watermark admission/preemption decisions.
+    watermark admission/preemption decisions,
+  * :mod:`repro.paging.sim` — deterministic policy simulations feeding
+    the ``paged_kv_sweep`` (pager vs blocking fetch) and
+    ``mixed_batch_sweep`` (chunked continuous batching vs serial dense
+    prefill) benchmarks.
+
+The serving engine (:mod:`repro.serve.engine`) consumes all of it: both
+decode *and* chunked prefill compute directly on the pool layout, so
+the page is the unit of transfer, residency, eviction and compute —
+see ``docs/ARCHITECTURE.md`` for the paper-to-code map.
 """
 
 from repro.paging.events import Event, EventKind, EventLoop, WatermarkPolicy

@@ -59,6 +59,13 @@ class WatermarkPolicy:
     critical
         When free frames fall to/below this, the scheduler should start
         preempting (shedding cold pages) even between admissions.
+
+    The free-SPM-slot counting of the paper's event-driven scheduler
+    (§2.3.2) generalized to a two-threshold policy.  Example::
+
+        policy = WatermarkPolicy(low=2, critical=0)
+        policy.can_admit(pool, pages_needed=4)   # free - 4 >= 2 ?
+        policy.deficit(pool, 4)                  # frames to shed first
     """
 
     low: int = 1
@@ -76,7 +83,16 @@ class WatermarkPolicy:
 
 
 class EventLoop:
-    """FIFO event queue with per-kind handlers, drained to quiescence."""
+    """FIFO event queue with per-kind handlers, drained to quiescence —
+    the paper's §2.3.2 event-driven model as a scheduler skeleton.
+
+    Example (the engine's wiring)::
+
+        loop = EventLoop()
+        loop.on(EventKind.PAGE_ARRIVED, lambda ev: land(ev.payload))
+        loop.post(EventKind.PAGE_ARRIVED, (rid, logical))
+        loop.tick()        # one decode step: post TICK + drain all
+    """
 
     def __init__(self) -> None:
         self._q: Deque[Event] = collections.deque()

@@ -68,15 +68,29 @@ class Frame:
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
-    """Number of pages covering ``n_tokens`` positions."""
+    """Number of pages covering ``n_tokens`` positions.
+
+    >>> pages_for(17, 16)
+    2
+    >>> pages_for(0, 16)
+    0
+    """
     return -(-max(0, n_tokens) // page_size)
 
 
 class PagePool:
     """Fixed pool of device page frames with a free heap.
 
-    The free list is a min-heap so allocation is O(log n) and frame ids
-    are reused lowest-first (deterministic layouts for tests).
+    The near tier of the paper's two-tier model — what SPM is to the
+    AMU core (§2.1), the device HBM page frames are to the serving
+    engine.  The free list is a min-heap so allocation is O(log n) and
+    frame ids are reused lowest-first (deterministic layouts for
+    tests).  Example::
+
+        pool = PagePool(n_pages=8, page_size=16)
+        phys = pool.alloc(owner=rid, logical=0)
+        pool.pin(phys)            # active slots pin their pages
+        pool.unpin(phys); pool.free(phys)
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -171,7 +185,19 @@ class PTE:
 
 
 class PageTable:
-    """Per-sequence logical→physical page maps over one :class:`PagePool`."""
+    """Per-sequence logical→physical page maps over one :class:`PagePool`.
+
+    Each entry is one page's Access-Pattern-Register's worth of state
+    (§2.2): the frame id an APR base address would hold plus the
+    :class:`PageState` residency bit that ``aload``/``astore``/
+    ``getfin`` completions drive.  Example::
+
+        table = PageTable(pool)
+        table.register(rid)
+        table.ensure_capacity(rid, n_tokens=33)   # -> [0, 1, 2] new pages
+        table.entry(rid, 0).state                 # PageState.RESIDENT
+        table.drop(rid)                           # frees every frame
+    """
 
     def __init__(self, pool: PagePool):
         self.pool = pool

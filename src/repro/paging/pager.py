@@ -37,7 +37,18 @@ _PENDING = -2        # rid sentinel: request queued behind its QoS window
 
 
 class QoSWindows:
-    """Per-QoS outstanding-request windows layered over one AMU queue."""
+    """Per-QoS outstanding-request windows layered over one AMU queue.
+
+    The QoS field of the paper's Memory Access Configuration Register
+    (§2.2) enforced at the issue stage: each class gets its own bounded
+    window, so BULK writeback can never occupy every hardware queue
+    entry ahead of a latency-critical fetch.  Example::
+
+        w = QoSWindows({QoS.LATENCY: 16, QoS.BULK: 4})
+        if w.has_room(QoS.BULK):
+            w.take(QoS.BULK)      # ... issue the astore ...
+        w.release(QoS.BULK)       # on getfin completion
+    """
 
     def __init__(self, windows: Dict[QoS, int]):
         for q, w in windows.items():
@@ -62,7 +73,15 @@ class QoSWindows:
 
 class Pager:
     """Demand/prefetch pager: moves pages between pool frames and the
-    far tier through LATENCY aloads and BULK astores."""
+    far tier through LATENCY aloads and BULK astores (§2.2 ISA, §2.3
+    QoS split).  Example — park two pages, bring them back overlapped::
+
+        pager.writeback(rid, 0, payload0)     # BULK astore (dirty)
+        pager.park_clean(rid, 1)              # far copy current: free
+        pager.prefetch_seq(rid, tail_first=True)   # LATENCY aloads
+        for seq, logical in pager.poll():          # getfin drain
+            ...                                    # residency bits set
+    """
 
     def __init__(
         self,

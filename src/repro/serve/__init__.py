@@ -1,1 +1,24 @@
-"""repro.serve"""
+"""repro.serve — continuous-batching inference over the paged KV pool.
+
+Two modules:
+
+  * :mod:`repro.serve.engine` — the serving engine: chunk-queue
+    admission (chunked paged prefill fused with decode in one mixed
+    step), free-page-watermark preemption/resume over
+    :mod:`repro.paging`, and the event-driven scheduler loop (the
+    paper's §2.3.2 model applied to requests),
+  * :mod:`repro.serve.kv_cache` — slot bookkeeping around the batched
+    device cache: the :class:`~repro.serve.kv_cache.SlotPool`, dense
+    slot extract/insert (the ``paging=False`` fallback path), page
+    split/join for far-tier payloads, and the finished-sequence
+    :class:`~repro.serve.kv_cache.KVOffloadTier`.
+
+Minimal use::
+
+    from repro.serve.engine import Engine
+    eng = Engine(cfg, params, max_batch=4, max_len=256, chunk_tokens=32)
+    rid = eng.submit(prompt_tokens, max_new_tokens=16)
+    tokens = eng.run()[rid]
+
+``docs/ARCHITECTURE.md`` maps every piece back to the paper.
+"""

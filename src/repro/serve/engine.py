@@ -24,14 +24,31 @@ Decode computes **directly on the paged layout**: the device cache is a
 page frames, and the serve step's attention reads them through the
 per-slot page table (:func:`~repro.models.attention.
 paged_decode_attention_block` — the Pallas scalar-prefetch gather on
-TPU).  Admission installs page-table rows and scatters the prefilled KV
-pages straight into their frames; preemption parks cold pages without
-ever extracting a dense slot; resume is a page-table patch plus a
-LATENCY prefetch.  The admit/preempt/resume hot path performs **zero
-dense KV re-materialisation** — ``extract_slot``/``insert_slot``
-survive only on the non-paged fallback and the finished-sequence
+TPU).  Preemption parks cold pages without ever extracting a dense
+slot; resume is a page-table patch plus a LATENCY prefetch.  The
+admit/preempt/resume hot path performs **zero dense KV
+re-materialisation** — ``extract_slot``/``insert_slot`` survive only on
+the non-paged fallback and the finished-sequence
 :class:`~repro.serve.kv_cache.KVOffloadTier` path, exactly the
 round-trip the AMU papers argue against eliminating elsewhere.
+
+**Prefill is chunked and continuously batched** (``chunk_tokens``): the
+last dense-KV hold-out — admit-then-scatter whole-prompt prefill — is
+replaced by a *chunk queue*.  Admission installs a slot and page-table
+bookkeeping only; the prompt is then computed in chunks **on the pool
+layout** (:func:`~repro.models.model.prefill_chunk` scatters each
+chunk's K/V straight into its mapped frames while flash-attending the
+pool-resident prefix), fused with every running slot's decode token in
+one jitted mixed step (:func:`~repro.dist.steps.make_mixed_step`).  The
+scheduler picks chunk-vs-decode work off free-page watermarks and the
+pager's LATENCY-window occupancy, and preemption can cancel a
+half-prefilled sequence by parking its completed chunks — the prompt
+remainder re-enters the chunk queue on resume.  A new request therefore
+never serialises a dense-prefill bubble in front of running decodes:
+the request-level massive parallelism the follow-up AMU paper
+(2404.11044) targets.  With ``chunk_tokens=None`` (default) admission
+falls back to the legacy whole-prompt dense prefill; both paths are
+token-exact with a dense non-paged run.
 
 Decode itself is mesh-sharded: the step function comes from
 ``repro.dist.steps.make_serve_step`` (TP-sharded params, paged-cache
@@ -56,9 +73,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.dist.steps import make_serve_step
+from repro.core.amu import QoS
+from repro.dist.steps import make_mixed_step, make_serve_step
 from repro.launch.mesh import make_mesh_compat
-from repro.models.model import (Cache, PagedCache, init_cache,
+from repro.models import ssm as ssm_mod
+from repro.models.model import (Cache, PagedCache, encode_cross, init_cache,
                                 init_paged_cache, prefill)
 from repro.paging import (EventKind, EventLoop, PagePool, PageState,
                           PageTable, Pager, PagingError, WatermarkPolicy,
@@ -72,6 +91,16 @@ __all__ = ["Request", "Engine"]
 
 @dataclass
 class Request:
+    """One submitted generation request and its full lifecycle state.
+
+    A request moves through admit → (chunked prefill) → decode →
+    park/resume (any number of times, from either phase) → finish; see
+    ``docs/ARCHITECTURE.md`` for the lifecycle diagram.  Example::
+
+        rid = engine.submit(np.arange(7), max_new_tokens=4)
+        tokens = engine.run()[rid]
+    """
+
     rid: int
     prompt: np.ndarray                  # (plen,) int32
     max_new_tokens: int = 16
@@ -84,10 +113,17 @@ class Request:
     first_token_t: float = 0.0
     done_t: float = 0.0
     # paging state (set when the request has been preempted):
+    parked: bool = False                # preempted, waiting to resume
     residue: Any = None                 # non-KV aux payload while parked
     clean_pages: int = 0                # leading pages whose far copy is current
     n_preempts: int = 0
     admit_seq: int = -1                 # admission order (preemption priority)
+    # chunked-prefill state (chunk-queue admission path):
+    prefill_pos: int = 0                # prompt tokens already prefilled
+    target_len: int = 0                 # tokens the chunk path must cover
+    chunk_rows: Any = None              # host page-table row while prefilling
+    chunk_ssm: Any = None               # hybrid: SSM carry between chunks
+    src_len: int = 0                    # encdec: true encoder length
 
     @property
     def done(self) -> bool:
@@ -95,6 +131,11 @@ class Request:
             return True
         return bool(self.generated and self.eos_id is not None
                     and self.generated[-1] == self.eos_id)
+
+    @property
+    def mid_prefill(self) -> bool:
+        """True while the prompt is only partially chunk-prefilled."""
+        return self.target_len > 0 and self.prefill_pos < self.target_len
 
 
 # -- jitted pool-frame scatters (module level: one compile per shape) ---------
@@ -137,6 +178,27 @@ def _scatter_one_page(k_pages, v_pages, k_data, v_data, phys):
 
 
 class Engine:
+    """Continuous-batching serving engine on the paged far-memory KV.
+
+    The module docstring describes the design; operationally::
+
+        eng = Engine(cfg, params, max_batch=4, max_len=256,
+                     page_size=16, device_pages=48,   # oversubscribed
+                     chunk_tokens=32)                 # chunked prefill
+        for p in prompts:
+            eng.submit(p, max_new_tokens=16)
+        outputs = eng.run()                           # {rid: tokens}
+
+    Knobs: ``device_pages`` below ``max_batch * pages_per_seq``
+    oversubscribes the pool (watermark admission + preemption, §2.3.2);
+    ``chunk_tokens`` switches admission to the chunk queue (mixed
+    prefill/decode steps); ``paging=False`` is the dense A/B reference;
+    ``kernel_impl`` selects the paged-attention backend
+    (``auto``/``pallas``/``interpret``/``xla``); ``pager_factory``
+    injects a custom :class:`~repro.paging.Pager` (tests use a
+    simulated-latency AMU backend).
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -157,6 +219,8 @@ class Engine:
         paging: Optional[bool] = None,
         kernel_impl: str = "auto",
         step_dt: float = 1e-3,
+        chunk_tokens: Optional[int] = None,
+        chunk_slots: int = 2,
     ):
         self.cfg = cfg
         self.params = params
@@ -231,14 +295,31 @@ class Engine:
         self._decode, self._decode_specs = make_serve_step(
             cfg, self.mesh, shape, donate=True, paged=self.paging,
             kernel_impl=kernel_impl)
-        self._prefills: Dict[int, Any] = {}
+        self._prefills: Dict[Any, Any] = {}
+
+        # -- chunk-queue admission (chunked paged prefill) ------------------
+        # admission installs page-table rows only; prompts are then fed
+        # through the mixed step in chunks that interleave with decode
+        self.chunk_tokens = int(chunk_tokens) if chunk_tokens else 0
+        self.chunk_slots = max(1, int(chunk_slots))
+        self.chunking = bool(self.chunk_tokens) and self.paging
+        self.prefilling: Dict[int, Request] = {}     # slot -> admitting req
+        if self.chunking:
+            self._mixed, self._mixed_specs = make_mixed_step(
+                cfg, self.mesh, shape, donate=True, kernel_impl=kernel_impl)
+            if cfg.family == "hybrid":
+                s = ssm_mod.mamba2_state_init(cfg, 1)
+                self._zero_chunk_ssm = jax.tree_util.tree_map(
+                    lambda a: np.zeros((cfg.num_layers,) + a.shape,
+                                       np.asarray(a).dtype), s)
 
         self.events = EventLoop()
         self.events.on(EventKind.TICK, self._on_tick)
         self.events.on(EventKind.PAGE_ARRIVED, self._on_page_arrived)
         self.events.on(EventKind.COMPLETE, self._on_complete)
         self.stats = {"steps": 0, "prefills": 0, "admitted": 0,
-                      "preemptions": 0, "resumes": 0}
+                      "preemptions": 0, "resumes": 0, "mixed_steps": 0,
+                      "chunks": 0, "prefill_preempts": 0}
 
     # -- public API ----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
@@ -269,15 +350,24 @@ class Engine:
         return rid
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
-        """Event loop until every submitted request completes."""
+        """Event loop until every submitted request completes.
+
+        Example (8 requests through 3 slots, continuous batching)::
+
+            eng = Engine(cfg, params, max_batch=3, max_len=64,
+                         chunk_tokens=8)
+            rids = [eng.submit(p, max_new_tokens=5) for p in prompts]
+            outputs = eng.run()          # {rid: [token, ...]}
+        """
         for _ in range(max_steps):
-            if not self.queue and not self.active and not self._resuming:
+            if not self.queue and not self.active and not self._resuming \
+                    and not self.prefilling:
                 break
             self._admit()
-            if self.active:
+            if self.active or self.prefilling:
                 self._step()
             self.events.tick()
-            if not self.active and self._resuming:
+            if not self.active and not self.prefilling and self._resuming:
                 # nothing decodable: land the in-flight pages, then
                 # demand-fetch the head resume so the loop always
                 # progresses (its misses may evict other resumes' pages)
@@ -285,11 +375,13 @@ class Engine:
                     self.pager.wait_arriving(req.rid)
                 self.pager.wait_seq(next(iter(self._resuming.values())).rid)
                 self._admit()
-            if not self.active and not self._resuming and self.queue:
+            if not self.active and not self.prefilling \
+                    and not self._resuming and self.queue:
                 # everything just finished this step: retry admission
                 # now rather than waiting for the next iteration
                 self._admit()
-                if not self.active and not self._resuming:
+                if not self.active and not self.prefilling \
+                        and not self._resuming:
                     # nothing running and nothing in flight: the state
                     # can never change, so admission is blocked for
                     # good — fail loudly instead of spinning to max_steps
@@ -352,12 +444,16 @@ class Engine:
         if key not in self._prefills:
             cfg = self.cfg
             self._prefills[key] = jax.jit(
-                lambda p, b: prefill(p, cfg, b, max_len=self.max_len))
-        logits, single = self._prefills[key](self.params, batch)
+                lambda p, b, lp: prefill(p, cfg, b, max_len=self.max_len,
+                                         last_pos=lp))
+        # logits come from the prompt's true last token (plen - 1), never
+        # from the padded bucket tail — the first sampled token must not
+        # depend on pad embeddings, and the chunked-prefill path (which
+        # never materialises the pad tail) must agree with this one
+        logits, single = self._prefills[key](
+            self.params, batch, jnp.asarray([plen - 1], jnp.int32))
         self.stats["prefills"] += 1
-        # true position is plen (ignore pad tail), and next token comes
-        # from the logits at plen-1 — recompute it from the last real
-        # token by letting decode handle it: set pos = plen.
+        # true position is plen (ignore pad tail): set pos = plen
         single = single._replace(pos=jnp.full((1,), plen, jnp.int32))
         return logits, single
 
@@ -401,6 +497,39 @@ class Engine:
         aux = {"ssm": single.ssm, "cross": single.cross, "pos": single.pos}
         self.cache = insert_aux_slot(cache, aux, slot, self.max_batch)
 
+    def _install_cross(self, req: Request) -> None:
+        """Enc-dec chunk-queue admission: run the encoder once and park
+        its cross-attention KV in the slot's rows of ``cache.cross`` —
+        every later prompt chunk and decode token reads it from there
+        (the decode path never writes cross state, so the rows survive
+        the whole prefill).  The projections are the exact ones dense
+        prefill computes, so chunked and dense agree bit-for-bit."""
+        plen = len(req.prompt)
+        bucket = self._bucket(plen)
+        se = req.src_embeds
+        if se is None:
+            se = np.zeros((bucket, self.cfg.d_model), np.float32)
+        src = np.zeros((1, bucket, self.cfg.d_model), np.float32)
+        src[0, :se.shape[0]] = se[:bucket]
+        key = ("cross", bucket)
+        if key not in self._prefills:
+            cfg = self.cfg
+            self._prefills[key] = jax.jit(
+                lambda p, s: encode_cross(p, cfg, s))
+        cross = self._prefills[key](self.params, jnp.asarray(src))
+        slot = req.slot
+        new_cross = {}
+        for name, dst in self.cache.cross.items():
+            src_rows = cross[name]
+            # slot axis by leaf name: k/v are (L, B, Ssrc, ...), enc_out
+            # is (B, Ssrc, d) — a shape heuristic misfires when Ssrc
+            # happens to equal max_batch
+            axis = 1 if name in ("k", "v") else 0
+            new_cross[name] = jax.lax.dynamic_update_slice_in_dim(
+                dst, src_rows.astype(dst.dtype), slot, axis=axis)
+        self.cache = self.cache._replace(cross=new_cross)
+        req.src_len = bucket
+
     # -- paging helpers -------------------------------------------------------
     def _make_room(self, need: int, protect: frozenset,
                    preempt: bool = True) -> bool:
@@ -425,26 +554,26 @@ class Engine:
         return True
 
     def _preempt_one(self, protect: frozenset) -> bool:
-        """Park the most recently admitted unprotected active sequence."""
-        victims = [r for r in self.active.values()
-                   if r.rid not in protect]
-        if not victims or len(self.active) <= 1:
+        """Park the most recently admitted unprotected sequence — a
+        running one (:meth:`_park`) or a half-prefilled one whose
+        completed chunks are parked as-is (:meth:`_park_prefilling`)."""
+        victims = [r for r in list(self.active.values())
+                   + list(self.prefilling.values()) if r.rid not in protect]
+        if not victims or len(self.active) + len(self.prefilling) <= 1:
             return False
         victim = max(victims, key=lambda r: r.admit_seq)
-        self._park(victim)
+        if victim.mid_prefill:
+            self._park_prefilling(victim)
+        else:
+            self._park(victim)
         return True
 
-    def _park(self, req: Request) -> None:
-        """Preempt: cold pages → far tier (BULK), hot tail stays cached
-        *in the device pool* (unpinned, LRU-evictable), slot freed,
-        request back to the head of the queue.  The KV never round-trips
-        through a dense slot: cold pages are read frame-by-frame off the
-        pool (the page-granularity astore payload), hot pages do not
-        move at all."""
-        slot = req.slot
+    def _shed_pages(self, req: Request, valid: int) -> None:
+        """Shared parking machinery: keep the hot tail cached in the
+        pool (unpinned, LRU-evictable), move cold pages to the far tier
+        — BULK astore for dirty ones, for free when the far copy is
+        still current (clean-eviction fast path, §2.3 QoS split)."""
         rid = req.rid
-        tokens = int(np.asarray(self.cache.pos)[slot])
-        valid = min(tokens, self.slot_tokens)
         n_pages = pages_for(valid, self.page_size)
         # a frame allocated for the *next* write (pos on a page boundary)
         # holds no content yet — release it; resume growth re-allocates
@@ -465,11 +594,23 @@ class Engine:
                 self.pager.park_clean(rid, logical)  # far copy current
             else:
                 self.pager.writeback(rid, logical, self._read_frame(pte.phys))
-        req.residue = extract_aux_slot(self.cache, slot, self.max_batch)
         # append-only KV: full far-tier pages stay valid forever — except
         # under an SWA ring, where wrap rewrites old pages in place.
         req.clean_pages = 0 if self.cfg.attention == "swa" \
             else min(n_cold, valid // self.page_size)
+
+    def _park(self, req: Request) -> None:
+        """Preempt a running sequence: cold pages → far tier (BULK), hot
+        tail stays cached *in the device pool* (unpinned, LRU-evictable),
+        slot freed, request back to the head of the queue.  The KV never
+        round-trips through a dense slot: cold pages are read
+        frame-by-frame off the pool (the page-granularity astore
+        payload), hot pages do not move at all."""
+        slot = req.slot
+        tokens = int(np.asarray(self.cache.pos)[slot])
+        self._shed_pages(req, min(tokens, self.slot_tokens))
+        req.residue = extract_aux_slot(self.cache, slot, self.max_batch)
+        req.parked = True
         req.n_preempts += 1
         req.slot = None
         self._pt_np[slot] = self.trash_frame
@@ -478,7 +619,27 @@ class Engine:
         self.pool.release(slot)
         self.queue.insert(0, req)
         self.stats["preemptions"] += 1
-        self.events.post(EventKind.PREEMPT, rid)
+        self.events.post(EventKind.PREEMPT, req.rid)
+
+    def _park_prefilling(self, req: Request) -> None:
+        """Cancel a half-prefilled sequence: its *completed* chunks park
+        exactly like a running sequence's pages (hot tail pooled, cold
+        written back), and the prompt remainder simply re-enters the
+        chunk queue on resume — no prefill work is redone.  The non-KV
+        carry (hybrid SSM state between chunks) already lives host-side
+        in ``req.chunk_ssm``, so nothing dense is extracted."""
+        slot = req.slot
+        self._shed_pages(req, req.prefill_pos)
+        req.parked = True
+        req.n_preempts += 1
+        req.slot = None
+        req.chunk_rows = None            # rebuilt from the table on resume
+        del self.prefilling[slot]
+        self.pool.release(slot)
+        self.queue.insert(0, req)
+        self.stats["preemptions"] += 1
+        self.stats["prefill_preempts"] += 1
+        self.events.post(EventKind.PREEMPT, req.rid)
 
     def _start_resume(self, req: Request) -> bool:
         """Begin bringing a parked request back: LATENCY-QoS prefetch of
@@ -499,7 +660,11 @@ class Engine:
         Re-entry is a page-table patch: pin the frames, land any payload
         that is still host-side, point the slot's page-table row at the
         frames and restore the tiny aux state.  The KV itself is already
-        where decode reads it."""
+        where decode reads it.  A request parked *mid-prefill* re-enters
+        the chunk queue instead of the decode batch: its device
+        page-table row stays on the trash frame and its completed-chunk
+        frames go back into ``chunk_rows`` for the next chunk to attend
+        through."""
         for rid, req in list(self._resuming.items()):
             if not self.page_table.resident(rid):
                 # pages evicted again under pressure mid-resume get a
@@ -509,19 +674,28 @@ class Engine:
             if not self.pool.n_free:
                 continue
             slot = self.pool.alloc()
+            rows = np.full((self.pages_per_seq,), self.trash_frame, np.int32)
             for logical in range(self.page_table.n_pages(rid)):
                 pte = self.page_table.entry(rid, logical)
                 self.page_pool.pin(pte.phys)
                 self.page_pool.touch(pte.phys)
                 self._land_frame(pte.phys)
-                self._pt_np[slot, logical] = pte.phys
-            self._pt_dirty = True
-            self.cache = insert_aux_slot(self.cache, req.residue,
-                                         slot, self.max_batch)
+                rows[logical] = pte.phys
             req.slot = slot
-            req.residue = None
+            req.parked = False
             req.admit_seq = next(self._admits)
-            self.active[slot] = req
+            if req.mid_prefill:
+                req.chunk_rows = rows
+                if self.cfg.family == "encdec":
+                    self._install_cross(req)     # cross rows left with the slot
+                self.prefilling[slot] = req
+            else:
+                self._pt_np[slot] = rows
+                self._pt_dirty = True
+                self.cache = insert_aux_slot(self.cache, req.residue,
+                                             slot, self.max_batch)
+                req.residue = None
+                self.active[slot] = req
             del self._resuming[rid]
             self.stats["resumes"] += 1
             self.events.post(EventKind.ADMIT, rid)
@@ -529,13 +703,21 @@ class Engine:
     def _alloc_pinned(self, req: Request, n_tokens: int) -> None:
         """Allocate (pin + mark dirty) frames so ``req`` covers
         ``n_tokens`` positions and point its slot's page-table row at
-        them — active slots own their pages."""
+        them — active slots own their pages.  While a request is still
+        chunk-prefilling, its frames go into the host-side
+        ``chunk_rows`` instead: the *device* row keeps pointing at the
+        trash frame so the fused decode half of the mixed step cannot
+        scribble on a half-written prompt."""
+        mid = req.mid_prefill and req.chunk_rows is not None
         for logical in self.page_table.ensure_capacity(req.rid, n_tokens):
             pte = self.page_table.entry(req.rid, logical)
             self.page_pool.pin(pte.phys)
             self.page_pool.mark_dirty(pte.phys)
-            self._pt_np[req.slot, logical] = pte.phys
-            self._pt_dirty = True
+            if mid:
+                req.chunk_rows[logical] = pte.phys
+            else:
+                self._pt_np[req.slot, logical] = pte.phys
+                self._pt_dirty = True
 
     def _ensure_growth(self) -> None:
         """Before a decode step: every active sequence about to cross a
@@ -558,12 +740,20 @@ class Engine:
             self._alloc_pinned(req, pos + 1)
 
     # -- scheduling ------------------------------------------------------------
+    def _chunkable(self, req: Request) -> bool:
+        """Chunk-queue admission requires the whole prompt to fit the
+        slot's token capacity (an SWA ring that wraps mid-prompt would
+        rewrite pages the chunk path still attends); longer prompts fall
+        back to the legacy dense-prefill admission."""
+        return (self.chunking and len(req.prompt) > 0
+                and len(req.prompt) <= self.slot_tokens)
+
     def _admit(self) -> None:
         if self.paging:
             self._try_finish_resumes()
         while self.queue:
             req = self.queue[0]
-            if req.residue is not None:                   # preempted: resume
+            if req.parked:                                # preempted: resume
                 if req.rid in self._resuming or not self._start_resume(req):
                     break
                 self.queue.pop(0)
@@ -581,6 +771,25 @@ class Engine:
             self.queue.pop(0)
             slot = self.pool.alloc()
             req.slot = slot
+            if self._chunkable(req):
+                # chunk-queue admission: install bookkeeping only — the
+                # prompt is computed chunk-by-chunk by the mixed step,
+                # interleaved with every running slot's decode
+                self.page_table.register(req.rid)
+                req.target_len = len(req.prompt)
+                req.prefill_pos = 0
+                req.chunk_rows = np.full((self.pages_per_seq,),
+                                         self.trash_frame, np.int32)
+                if self.cfg.family == "hybrid":
+                    req.chunk_ssm = jax.tree_util.tree_map(
+                        np.copy, self._zero_chunk_ssm)
+                if self.cfg.family == "encdec":
+                    self._install_cross(req)
+                req.admit_seq = next(self._admits)
+                self.prefilling[slot] = req
+                self.stats["admitted"] += 1
+                self.events.post(EventKind.ADMIT, req.rid)
+                continue
             logits, single = self._prefill_one(req)
             if self.paging:
                 self.page_table.register(req.rid)
@@ -599,10 +808,145 @@ class Engine:
             self.events.post(EventKind.ADMIT, req.rid)
             self._finish_if_done(req)
 
+    # -- chunk-queue scheduling (chunked paged prefill) ------------------------
+    def _select_chunks(self) -> List:
+        """Pick chunk-vs-decode work for this step.
+
+        A chunk for the oldest admitting slots runs fused with the
+        decode step when (a) the LATENCY aload window has room — resume
+        traffic saturating the per-QoS window (§2.2 MACR) means parked
+        pages are mid-flight and chunk compute would only delay their
+        landing — and (b) the chunk's pages fit the pool without
+        preempting anyone (free-page-watermark occupancy; chunk growth,
+        like decode growth, is a continuation and so is exempt from the
+        admission low watermark)."""
+        if not self.prefilling:
+            return []
+        if self._resuming and not self.pager.windows.has_room(QoS.LATENCY):
+            return []
+        picks: List = []
+        t_exact = None
+        exact = self.cfg.family == "hybrid"    # pad tokens corrupt SSM state
+        for req in sorted(self.prefilling.values(),
+                          key=lambda r: r.admit_seq):
+            if len(picks) >= self.chunk_slots:
+                break
+            start = req.prefill_pos
+            end = min(req.target_len, start + self.chunk_tokens)
+            if exact and t_exact is not None and end - start != t_exact:
+                continue                   # exact-shape batch: next step
+            need = self.page_table.pages_needed(req.rid, end)
+            if need and not self._make_room(need, frozenset({req.rid}),
+                                            preempt=False):
+                continue                   # pool tight: decode-only step
+            if exact and t_exact is None:
+                t_exact = end - start      # pin shape only once a row fits
+            self._alloc_pinned(req, end)
+            picks.append((req, start, end))
+        return picks
+
+    def _force_chunk(self) -> List:
+        """Nothing decodable and no chunk fit the pool politely: force
+        the oldest admitting slot's chunk through, preempting (parking
+        another half-prefilled victim) if that is what it takes — the
+        loop must always progress."""
+        req = min(self.prefilling.values(), key=lambda r: r.admit_seq)
+        end = min(req.target_len, req.prefill_pos + self.chunk_tokens)
+        need = self.page_table.pages_needed(req.rid, end)
+        if need and not self._make_room(need, frozenset({req.rid}),
+                                        preempt=True):
+            raise PagingError(
+                f"chunked prefill of request {req.rid} cannot progress: "
+                f"pool of {self.page_pool.n_pages} pages exhausted")
+        self._alloc_pinned(req, end)
+        return [(req, req.prefill_pos, end)]
+
+    def _build_chunk(self, picks) -> Dict[str, Any]:
+        """Assemble the mixed step's chunk operand (C = ``chunk_slots``
+        rows, unused rows inert with length 0 / trash page rows)."""
+        C = self.chunk_slots
+        if self.cfg.family == "hybrid":
+            T = picks[0][2] - picks[0][1]  # exact shapes (no pad tokens)
+        else:
+            T = self.chunk_tokens
+        tokens = np.zeros((C, T), np.int32)
+        offset = np.zeros((C,), np.int32)
+        length = np.zeros((C,), np.int32)
+        slots = np.zeros((C,), np.int32)
+        src_len = np.zeros((C,), np.int32)
+        rows = np.full((C, self.pages_per_seq), self.trash_frame, np.int32)
+        for i, (req, start, end) in enumerate(picks):
+            n = end - start
+            tokens[i, :n] = req.prompt[start:end]
+            offset[i] = start
+            length[i] = n
+            slots[i] = req.slot
+            src_len[i] = req.src_len
+            rows[i] = req.chunk_rows
+        chunk = {"tokens": jnp.asarray(tokens),
+                 "offset": jnp.asarray(offset),
+                 "length": jnp.asarray(length),
+                 "page_rows": jnp.asarray(rows)}
+        if self.cfg.family == "encdec":
+            chunk["slots"] = jnp.asarray(slots)
+            chunk["src_len"] = jnp.asarray(src_len)
+        if self.cfg.family == "hybrid":
+            trees = [r.chunk_ssm for r, _, _ in picks]
+            trees += [self._zero_chunk_ssm] * (C - len(picks))
+            chunk["ssm"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.asarray(np.concatenate(xs, axis=1)), *trees)
+        return chunk
+
+    def _finish_chunks(self, picks, chunk_logits, carry) -> None:
+        """Advance every picked request past its chunk; rows that just
+        covered their prompt's last token graduate to the decode batch
+        (their first sampled token is the chunk's last-valid logits)."""
+        for i, (req, start, end) in enumerate(picks):
+            req.prefill_pos = end
+            if self.cfg.family == "hybrid":
+                req.chunk_ssm = jax.tree_util.tree_map(
+                    lambda a: np.asarray(a[:, i:i + 1]), carry)
+            if end >= req.target_len:
+                self._finalize_prefill(req, chunk_logits[i])
+
+    def _finalize_prefill(self, req: Request, logits_row) -> None:
+        """Graduate a fully-prefilled request into the decode batch: the
+        device page-table row flips from the trash frame to the real
+        frames (one host-mirror write — the KV is already in its pool
+        frames), pos and any SSM carry land in the cache, and the first
+        token comes from the final chunk's logits at the prompt's last
+        valid position — matching the dense path's ``last_pos`` exactly."""
+        slot = req.slot
+        self._pt_np[slot] = req.chunk_rows
+        self._pt_dirty = True
+        pos_row = jnp.asarray([req.target_len], jnp.int32)
+        cache = self.cache
+        new_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, pos_row.astype(cache.pos.dtype), slot, axis=0)
+        ssm = cache.ssm
+        if self.cfg.family == "hybrid":
+            ssm = jax.tree_util.tree_map(
+                lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
+                    dst, jnp.asarray(src).astype(dst.dtype), slot, axis=1),
+                ssm, req.chunk_ssm)
+            req.chunk_ssm = None
+        self.cache = cache._replace(pos=new_pos, ssm=ssm)
+        req.chunk_rows = None
+        del self.prefilling[slot]
+        first = int(np.argmax(np.asarray(logits_row)))
+        req.generated.append(first)
+        req.first_token_t = self.clock()
+        self.active[slot] = req
+        self._finish_if_done(req)
+
     def _step(self) -> None:
         if self.paging:
             self._ensure_growth()
-        if not self.active:
+        picks = self._select_chunks() if self.chunking else []
+        if self.chunking and not picks and not self.active and \
+                self.prefilling and not self._resuming:
+            picks = self._force_chunk()
+        if not self.active and not picks:
             return
         toks = np.zeros((self.max_batch, 1), np.int32)
         for slot, req in self.active.items():
@@ -614,14 +958,24 @@ class Engine:
             self.cache = self.cache._replace(
                 kv=dict(kv, page_table=jnp.asarray(self._pt_np)))
             self._pt_dirty = False
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks))
+        if picks:
+            chunk = self._build_chunk(picks)
+            logits, chunk_logits, carry, self.cache = self._mixed(
+                self.params, self.cache, jnp.asarray(toks), chunk)
+            self.stats["mixed_steps"] += 1
+            self.stats["chunks"] += len(picks)
+        else:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks))
         self.stats["steps"] += 1
-        logits = np.asarray(logits)
-        for slot, req in list(self.active.items()):
-            nxt = int(np.argmax(logits[slot]))
-            req.generated.append(nxt)
-            self._finish_if_done(req)
+        if self.active:
+            logits = np.asarray(logits)
+            for slot, req in list(self.active.items()):
+                nxt = int(np.argmax(logits[slot]))
+                req.generated.append(nxt)
+                self._finish_if_done(req)
+        if picks:
+            self._finish_chunks(picks, np.asarray(chunk_logits), carry)
 
     def _extract_finished(self, req: Request) -> Cache:
         """Reassemble a finished sequence's dense single cache from its

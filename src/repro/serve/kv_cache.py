@@ -1,18 +1,24 @@
 """Serving-side KV management: slot pool, page split/join, far tier.
 
-The device cache is the model's stacked ``Cache`` (L x B_slots x ...).
-This module adds what a serving deployment needs around it:
+On the hot path the engine's device cache is the *paged*
+:class:`~repro.models.model.PagedCache` (pool frames + page tables) and
+the KV never leaves its frames; this module is the bookkeeping around
+it and the surviving dense paths:
 
   * :class:`SlotPool` — fixed decode slots, heap-backed alloc/free,
-  * slot extract/insert — move one sequence's cache state between the
-    batched device cache and a standalone per-sequence tree,
+  * :func:`extract_aux_slot` / :func:`insert_aux_slot` — the *non-KV*
+    park payload (SSM state, cross-attn KV, positions): the only
+    per-sequence state that still moves densely, because it is tiny,
+  * :func:`extract_slot` / :func:`insert_slot` — whole-slot dense
+    moves; alive only on the ``paging=False`` fallback engine and the
+    finished-sequence offload below (never on admit/preempt/resume),
   * :func:`split_kv_pages` / :func:`join_kv_pages` — carve a
     single-sequence cache into ``repro.paging`` page-granularity far-
     tier payloads (and back, bit-exact): the transfer unit the engine's
     pager moves, replacing the seed's one-request-per-whole-sequence
-    pattern the paper argues against,
+    pattern the paper argues against (§1),
   * :class:`KVOffloadTier` — park *finished* sequences' complete KV in
-    host memory (``astore``) and bring it back with LATENCY-QoS
+    host memory (BULK ``astore``) and bring it back with LATENCY-QoS
     ``aload``; live preemption goes through ``repro.paging`` instead.
 """
 
@@ -38,7 +44,15 @@ __all__ = ["SlotPool", "extract_slot", "insert_slot", "extract_aux_slot",
 class SlotPool:
     """Fixed decode slots.  The free list is a min-heap so alloc/release
     are O(log n) (the seed's sort-per-free was O(n log n) per release,
-    O(n² log n) across a drain) and ids hand out lowest-first."""
+    O(n² log n) across a drain) and ids hand out lowest-first.
+
+    Example::
+
+        pool = SlotPool(4)
+        slot = pool.alloc()        # -> 0 (lowest first)
+        pool.release(slot)
+        pool.release(slot)         # raises AMUError (double release)
+    """
 
     def __init__(self, n_slots: int):
         self.free: List[int] = list(range(n_slots))
@@ -195,7 +209,18 @@ def join_kv_pages(residue: Cache, pages: List[Dict[str, np.ndarray]],
 
 
 class KVOffloadTier:
-    """Host-memory parking lot for per-sequence cache states."""
+    """Host-memory parking lot for *finished* sequences' cache states.
+
+    Every transfer is the paper's instruction set (§2.2): ``park`` is a
+    non-blocking BULK ``astore`` per tree leaf, ``prefetch`` begins
+    LATENCY ``aload``s that overlap the current decode step, ``fetch``
+    blocks only on what has not landed yet.  Example::
+
+        tier = KVOffloadTier()
+        tier.park(rid, single_cache)       # astore, returns immediately
+        tier.prefetch(rid)                 # begin aloads (optional)
+        cache = tier.fetch(rid)            # reassembled tree
+    """
 
     def __init__(self, amu: Optional[AMU] = None):
         self.tier = FarMemoryTier(amu or AMU(max_outstanding=32),

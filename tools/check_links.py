@@ -1,0 +1,64 @@
+"""Markdown link check: every relative link in the repo's docs resolves.
+
+Scans the given markdown files (default: README.md, ROADMAP.md and
+everything under docs/) for inline links/images ``[text](target)`` and
+fails if a relative target — optionally with a ``#fragment`` — does not
+exist on disk.  External (``http(s)://``, ``mailto:``) and pure-anchor
+links are skipped; no third-party dependency needed, so the CI docs job
+runs it straight off the checkout.
+
+Usage::
+
+    python tools/check_links.py [file.md ...]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    # fenced code blocks are not links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(__file__).resolve().parent.parent
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = [root / "README.md", root / "ROADMAP.md"]
+        files += sorted((root / "docs").glob("*.md"))
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file missing")
+            continue
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"FAIL: {e}")
+    if not errors:
+        print(f"OK: {len(files)} markdown files, all relative links resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
