@@ -1,15 +1,25 @@
-"""CI gate: diff a fresh BENCH_smoke.json against the committed baseline.
+"""CI gate: diff a fresh BENCH_smoke.json against the committed baselines.
 
-The ``paged_kv_sweep`` rows are fully deterministic (SimBackend virtual
-clock), so any movement is a code change, not noise.  The gate fails
-when the paged policy's decode throughput (1 / ``paged=...us/tok``) at
-any swept oversubscription ratio drops more than ``--threshold``
-(default 10%) below the committed baseline; improvements just print.
+Three deterministic gates (SimBackend virtual clocks and compile-only
+dry-runs — any movement is a code change, not noise):
+
+* ``paged_kv_sweep`` — fails when the paged policy's decode throughput
+  (1 / ``paged=...us/tok``) at any swept oversubscription ratio drops
+  more than ``--threshold`` below the committed baseline,
+* ``prefix_reuse_sweep`` — fails when the TTFT speedup at any swept
+  shared-traffic fraction drops more than ``--threshold`` below the
+  baseline, or when the 50%-shared row falls under the 1.5x acceptance
+  floor,
+* roofline (``--roofline docs/ROOFLINE.md``) — diffs the fresh
+  ``roofline_cell`` rows against the committed roofline table and fails
+  when any cell's bottleneck class flips or its step-time lower bound
+  regresses (grows) more than ``--threshold``.
 
 Usage::
 
     python benchmarks/check_regression.py BENCH_smoke.json \
-        benchmarks/BENCH_baseline.json [--threshold 0.10]
+        benchmarks/BENCH_baseline.json [--threshold 0.10] \
+        [--roofline docs/ROOFLINE.md]
 
 Regenerate the baseline (after an intentional perf change) with::
 
@@ -24,21 +34,145 @@ import json
 import re
 import sys
 from pathlib import Path
-from typing import Dict
+from typing import Dict, Tuple
+
+#: prefix_reuse_sweep acceptance floor: TTFT speedup at 50% shared traffic.
+PREFIX_FLOOR_AT_HALF = 1.5
 
 
-def paged_rows(rows) -> Dict[float, Dict[str, float]]:
-    """oversub -> parsed numeric fields of each paged_kv_sweep row."""
+def _parse_fields(derived: str) -> Dict[str, float]:
+    fields: Dict[str, float] = {}
+    for key, val in re.findall(r"(\w+)=([-\d.]+)", derived):
+        try:
+            fields[key] = float(val)
+        except ValueError:
+            pass
+    return fields
+
+
+def sweep_rows(rows, name: str, axis: str) -> Dict[float, Dict[str, float]]:
+    """axis-value -> parsed numeric fields of each ``name`` row."""
     out: Dict[float, Dict[str, float]] = {}
     for row in rows:
-        if row.get("name") != "paged_kv_sweep":
+        if row.get("name") != name:
             continue
-        fields: Dict[str, float] = {}
-        for key, val in re.findall(r"(\w+)=([-\d.]+)", row.get("derived", "")):
-            fields[key] = float(val)
-        if "oversub" in fields:
-            out[fields["oversub"]] = fields
+        fields = _parse_fields(row.get("derived", ""))
+        if axis in fields:
+            out[fields[axis]] = fields
     return out
+
+
+def check_sweep(cur_rows, base_rows, *, name: str, axis: str, metric: str,
+                threshold: float, higher_is_better: bool = True) -> bool:
+    """Generic per-row regression gate; returns True on failure."""
+    cur = sweep_rows(cur_rows, name, axis)
+    base = sweep_rows(base_rows, name, axis)
+    if not base:
+        print(f"WARN: baseline has no {name} rows (not gated)")
+        return False
+    failed = False
+    for x, b in sorted(base.items()):
+        c = cur.get(x)
+        if c is None:
+            print(f"FAIL: {name} {axis}={x:g} row missing from current run")
+            failed = True
+            continue
+        bv, cv = b[metric], c[metric]
+        change = (cv / bv - 1.0) if higher_is_better else (bv / cv - 1.0)
+        status = "OK"
+        if change < -threshold:
+            status = "FAIL"
+            failed = True
+        print(f"{status}: {name} {axis}={x:g} {metric} "
+              f"{bv:.3f} -> {cv:.3f} ({change:+.1%})")
+    return failed
+
+
+def check_prefix_floor(cur_rows) -> bool:
+    """Absolute acceptance: >= 1.5x TTFT at 50% shared-prefix traffic."""
+    cur = sweep_rows(cur_rows, "prefix_reuse_sweep", "shared")
+    row = cur.get(0.5)
+    if row is None:
+        print("FAIL: prefix_reuse_sweep has no shared=0.5 row")
+        return True
+    speedup = row.get("ttft_speedup", 0.0)
+    ok = speedup >= PREFIX_FLOOR_AT_HALF
+    print(f"{'OK' if ok else 'FAIL'}: prefix_reuse_sweep shared=0.5 "
+          f"ttft_speedup={speedup:.3f} (floor {PREFIX_FLOOR_AT_HALF})")
+    return not ok
+
+
+# -- roofline gate -----------------------------------------------------------
+
+def roofline_table(md_path: Path) -> Dict[Tuple[str, str, str],
+                                          Tuple[str, float]]:
+    """Parse docs/ROOFLINE.md: (arch, shape, mesh) -> (bottleneck, us)."""
+    out: Dict[Tuple[str, str, str], Tuple[str, float]] = {}
+    for line in md_path.read_text().splitlines():
+        cols = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cols) < 9 or cols[0] in ("arch", "---"):
+            continue
+        m = re.match(r"([-\d.]+)\s*ms", cols[7])
+        if m is None:
+            continue
+        out[(cols[0], cols[1], cols[2])] = (cols[3], float(m.group(1)) * 1e3)
+    return out
+
+
+def roofline_cells(rows) -> Dict[Tuple[str, str, str], Tuple[str, float]]:
+    """Parse roofline_cell bench rows: key -> (bottleneck, us)."""
+    out: Dict[Tuple[str, str, str], Tuple[str, float]] = {}
+    for row in rows:
+        if row.get("name") != "roofline_cell":
+            continue
+        parts = row.get("derived", "").split("|")
+        if len(parts) < 4 or parts[3] in ("SKIPPED", "FAILED"):
+            continue
+        m = re.match(r"bottleneck=(\w+)", parts[3])
+        if m is None:
+            continue
+        out[(parts[0], parts[1], parts[2])] = (m.group(1),
+                                               float(row["us_per_call"]))
+    return out
+
+
+def check_roofline(cur_rows, md_path: Path, threshold: float) -> bool:
+    """Fail when a cell's bottleneck class flips or its step lower
+    bound regresses (grows) beyond ``threshold`` vs the committed
+    table.  Cells absent from the fresh run (dryrun artifacts not
+    rebuilt in this job) are not gated; cells absent from the table
+    are new and just print."""
+    table = roofline_table(md_path)
+    cells = roofline_cells(cur_rows)
+    if not table:
+        print(f"FAIL: no roofline rows parsed from {md_path}")
+        return True
+    if not cells:
+        print("WARN: current run has no roofline_cell rows (not gated)")
+        return False
+    failed = False
+    flips = regress = 0
+    for key, (bneck, us) in sorted(cells.items()):
+        ref = table.get(key)
+        if ref is None:
+            print(f"NEW: roofline cell {'|'.join(key)} "
+                  f"bottleneck={bneck} {us:.0f}us")
+            continue
+        ref_bneck, ref_us = ref
+        if bneck != ref_bneck:
+            print(f"FAIL: roofline {'|'.join(key)} bottleneck flipped "
+                  f"{ref_bneck} -> {bneck}")
+            failed = True
+            flips += 1
+        change = us / ref_us - 1.0
+        if change > threshold:
+            print(f"FAIL: roofline {'|'.join(key)} step lower bound "
+                  f"{ref_us:.0f} -> {us:.0f}us ({change:+.1%})")
+            failed = True
+            regress += 1
+    print(f"roofline: {len(cells)} cells checked vs {md_path} "
+          f"({flips} bottleneck flips, {regress} bound regressions)")
+    return failed
 
 
 def main(argv=None) -> int:
@@ -46,37 +180,31 @@ def main(argv=None) -> int:
     ap.add_argument("current", type=Path)
     ap.add_argument("baseline", type=Path)
     ap.add_argument("--threshold", type=float, default=0.10,
-                    help="max fractional throughput regression (default 10%)")
+                    help="max fractional regression (default 10%%)")
+    ap.add_argument("--roofline", type=Path, default=None, metavar="MD",
+                    help="also gate roofline_cell rows against this "
+                         "committed docs/ROOFLINE.md table")
     args = ap.parse_args(argv)
 
-    cur = paged_rows(json.loads(args.current.read_text()))
-    base = paged_rows(json.loads(args.baseline.read_text()))
-    if not base:
-        print("FAIL: baseline has no paged_kv_sweep rows")
-        return 1
+    cur = json.loads(args.current.read_text())
+    base = json.loads(args.baseline.read_text())
 
     failed = False
-    for oversub, b in sorted(base.items()):
-        c = cur.get(oversub)
-        if c is None:
-            print(f"FAIL: oversub={oversub:g} row missing from current run")
-            failed = True
-            continue
-        # throughput = 1 / us-per-token; regression = throughput drop
-        b_tok = b["paged"]
-        c_tok = c["paged"]
-        change = b_tok / c_tok - 1.0          # >0: faster, <0: slower
-        status = "OK"
-        if change < -args.threshold:
-            status = "FAIL"
-            failed = True
-        print(f"{status}: oversub={oversub:g} paged {b_tok:.2f} -> "
-              f"{c_tok:.2f} us/tok ({change:+.1%} throughput), "
-              f"speedup {b.get('speedup', 0):.2f} -> "
-              f"{c.get('speedup', 0):.2f}")
+    if not sweep_rows(base, "paged_kv_sweep", "oversub"):
+        print("FAIL: baseline has no paged_kv_sweep rows")
+        failed = True
+    # throughput = 1 / us-per-token: lower 'paged' is better
+    failed |= check_sweep(cur, base, name="paged_kv_sweep", axis="oversub",
+                          metric="paged", threshold=args.threshold,
+                          higher_is_better=False)
+    failed |= check_sweep(cur, base, name="prefix_reuse_sweep",
+                          axis="shared", metric="ttft_speedup",
+                          threshold=args.threshold)
+    failed |= check_prefix_floor(cur)
+    if args.roofline is not None:
+        failed |= check_roofline(cur, args.roofline, args.threshold)
     if failed:
-        print(f"paged_kv_sweep throughput regressed beyond "
-              f"{args.threshold:.0%} of the committed baseline")
+        print("benchmark gates failed against the committed baselines")
     return 1 if failed else 0
 
 

@@ -6,7 +6,7 @@ shows the engine admitting new requests into slots the moment others
 finish (no drain barrier), KV paged over a device pool smaller than the
 aggregate demand — cold pages park in the far tier via BULK astore and
 come back hot-tail-first via LATENCY aload — with finished sequences'
-whole KV parked in the host far tier through the AMU.
+KV parked page-by-page in the same host far tier through the AMU.
 
 Run:  PYTHONPATH=src python examples/serve_engine.py
 """
@@ -55,7 +55,7 @@ def main():
           f"{eng.page_size} tok, preemptions {eng.stats['preemptions']}, "
           f"resumes {eng.stats['resumes']}")
     print(f"[serve] pager ops: {dict(eng.pager.stats)}")
-    print(f"[serve] far-tier AMU ops: {dict(eng.kv_tier.tier.amu.stats)}")
+    print(f"[serve] far-tier AMU ops: {dict(eng.far_tier.amu.stats)}")
     for rid in sorted(out)[:3]:
         print(f"  request {rid}: {out[rid]}")
     assert len(out) == n_requests

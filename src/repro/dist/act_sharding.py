@@ -42,7 +42,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 __all__ = [
     "ActPolicy", "BASELINE", "OPTIMIZED", "policy", "current",
     "residual_layout", "residual_spec", "attn_plan", "constrain",
-    "dp_spec_prefix",
+    "dp_spec_prefix", "model_axis_size",
 ]
 
 
@@ -115,6 +115,12 @@ def _mesh_axis_sizes() -> Dict[str, int]:
     """Axis name -> size of the active mesh ({} when single-device)."""
     m = _current_mesh()
     return dict(m.shape) if m is not None else {}
+
+
+def model_axis_size() -> int:
+    """Size of the active policy's model axis on the current mesh (1
+    when no mesh is active or the axis is absent)."""
+    return _mesh_axis_sizes().get(current().model_axis, 1)
 
 
 def dp_spec_prefix():

@@ -77,6 +77,12 @@ def paged_cache_specs(mesh, cfg: ModelConfig) -> Dict[str, P]:
     head count divides the axis; otherwise the pool replicates (the
     page table and positions always do — they are tiny int32 control
     state every shard needs whole, like the paper's APRs).
+
+    Cross-request prefix sharing does not change these specs: a shared
+    frame is the same ``N``-axis row read by several slots' page-table
+    rows, and the frame axis is never sharded — only the KV-head axis
+    inside a frame is.  Sharing interacts with *donation* instead; see
+    the audit note on :func:`make_serve_step`.
     """
     model_size = mesh.shape.get("model", 1)
     pages = (P(None, None, None, "model", None)
@@ -231,7 +237,17 @@ def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     :func:`paged_cache_specs` so the sharded serve step reads frames
     without a resharding collective.  ``kernel_impl`` selects the
     paged-attention backend (``auto``: the Pallas gather kernel on TPU,
-    the XLA gather elsewhere)."""
+    the XLA gather elsewhere).
+
+    Donation audit (prefix sharing): the cache is donated, so the pool
+    frames update *in place* — with refcounted shared frames this is
+    safe only because no live schedule ever routes a write at a frame
+    with more than one mapping: decode scatters at ``pos``, which lies
+    strictly past every shared (full, interned) page; empty slots write
+    the trash frame; and the engine's COW guard
+    (``Engine._ensure_private``) remaps before any write that would
+    violate this.  Reads of a shared frame from several slots in one
+    step are unordered but read-only — no aliasing hazard."""
     pshapes = abstract_params(cfg)
     pspecs = param_specs(mesh, pshapes)
     pol = _policy_for(act_policy)
@@ -284,6 +300,14 @@ def make_mixed_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     :func:`~repro.models.model.prefill_chunk`; jit re-specialises per
     (chunk rows, chunk length) shape, which the engine keeps to a small
     fixed set.
+
+    Donation audit (prefix sharing): chunk rows may point at shared
+    (prefix-cache) frames for the resident prefix — those are gathered
+    read-only; the chunk's own K/V scatter lands at
+    ``[offset, offset + length)``, which starts past the shared pages
+    by construction (``prefill_pos`` skips them), so the in-place
+    update never writes a multi-mapped frame.  See
+    :func:`make_serve_step` for the decode half of the audit.
     """
     pshapes = abstract_params(cfg)
     pspecs = param_specs(mesh, pshapes)

@@ -54,6 +54,16 @@ def main(argv=None):
     ap.add_argument("--chunk-slots", type=int, default=2,
                     help="max admitting slots whose chunks fuse into one "
                          "mixed prefill+decode step")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed cross-request prefix sharing: "
+                         "full prompt pages are interned by rolling hash "
+                         "and later requests skip prefill chunks whose "
+                         "pages hit (requires --chunk-tokens; dense/moe "
+                         "global-attention families)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical prefix tokens to "
+                         "every synthetic prompt (system-prompt traffic "
+                         "model, makes --prefix-cache visible)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -64,13 +74,16 @@ def main(argv=None):
                  page_size=args.page_size, device_pages=args.device_pages,
                  paging=not args.dense, kernel_impl=args.kernel_impl,
                  chunk_tokens=args.chunk_tokens or None,
-                 chunk_slots=args.chunk_slots)
+                 chunk_slots=args.chunk_slots,
+                 prefix_cache=args.prefix_cache)
 
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
     t0 = time.time()
     for i in range(args.requests):
         plen = int(rng.integers(4, min(32, args.max_len // 2)))
-        prompt = rng.integers(0, cfg.vocab_size, plen)
+        prompt = np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size, plen)])
         kwargs = {}
         if cfg.family == "encdec":
             kwargs["src_embeds"] = rng.standard_normal(
@@ -97,9 +110,13 @@ def main(argv=None):
               f"<= {eng.chunk_tokens} tok across "
               f"{eng.stats['mixed_steps']} mixed steps "
               f"({eng.stats['prefills']} dense-prefill fallbacks)")
+    if eng.prefix is not None:
+        print(f"[serve] prefix cache: {eng.stats['prefix_hits']} page hits "
+              f"({eng.stats['prefix_far_hits']} far), "
+              f"{eng.stats['prefix_tokens_saved']} prefill tokens saved, "
+              f"{eng.prefix.stats['interned']} pages interned")
     if args.offload_finished:
-        amu = eng.kv_tier.tier.amu
-        print(f"[serve] far-tier AMU stats: {dict(amu.stats)}")
+        print(f"[serve] far-tier AMU stats: {dict(eng.far_tier.amu.stats)}")
     return out
 
 

@@ -41,15 +41,41 @@ NEG_INF = -1e30
 def _gather_qkv_for_rope(q, k, v):
     """Work around a jax-0.4.37 SPMD miscompile: rope applied to a
     model-sharded projection comes out scaled by exactly the data-axis
-    size on some mesh shapes (observed at (2, 4); see the ROADMAP open
-    item).  Decode/chunk projections are at most a few tokens per slot,
-    so gathering them to replicated before rope costs noise next to the
-    step's weight traffic.  No-op without an active mesh — single-device
-    graphs (and the dense-vs-paged bit-exactness they anchor) are
-    untouched."""
+    size on some mesh shapes (observed at (2, 4); see the ROADMAP
+    record).  Decode/chunk projections are at most a few tokens per
+    slot, so gathering them to replicated before rope costs noise next
+    to the step's weight traffic.  No-op without an active mesh —
+    single-device graphs (and the dense-vs-paged bit-exactness they
+    anchor) are untouched."""
     from repro.dist import act_sharding as acts
     return (acts.constrain(q, P()), acts.constrain(k, P()),
             acts.constrain(v, P()))
+
+
+def _pin_qkv_for_rope(q, k, v, seq_len: int):
+    """The full-sequence (prefill / train) variant of the same SPMD
+    workaround.  Replicating a whole 32k-token projection per layer —
+    what the decode path does — would be a real cost here, so instead
+    q/k/v are *pinned to an explicit layout* through rope: the layout
+    :func:`chunked_attention`'s plan would pick anyway (head-sharded
+    over the model axis, or sequence-sharded under a Megatron-SP
+    residual), falling back to heads-over-model when no plan is active
+    (GSPMD pads a non-dividing head count).  The explicit annotation is
+    what stops the partitioner from mis-placing the rope subgraph; no
+    data moves that attention would not have moved anyway.  No-op
+    without a mesh or without a model axis."""
+    from repro.dist import act_sharding as acts
+    if acts.model_axis_size() <= 1:
+        return q, k, v
+    pol = acts.current()
+    dp = acts.dp_spec_prefix()
+    plan = acts.attn_plan(q.shape[2], k.shape[2], seq_len)
+    if plan is not None and plan[0] == "seq":
+        spec = P(dp, plan[1], None, None)
+    else:
+        spec = P(dp, None, pol.model_axis, None)
+    return (acts.constrain(q, spec), acts.constrain(k, spec),
+            acts.constrain(v, spec))
 
 
 # -- parameter init -------------------------------------------------------------
@@ -268,6 +294,7 @@ def attention_block(
     hd = cfg.head_dim
     if kv is None:
         q, k, v = _project_qkv(p, cfg, x, compute_dtype)
+        q, k, v = _pin_qkv_for_rope(q, k, v, S)
         q, k = _position_encode(cfg, q, k, positions)
     else:  # cross attention: k/v from encoder output, no rope on cross path
         q = dense(p["q"], x, compute_dtype).reshape(B, S, cfg.num_heads, hd)

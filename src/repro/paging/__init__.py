@@ -13,10 +13,15 @@ one-to-one onto the source paper's architecture:
   * :mod:`repro.paging.events` — the §2.3.2 event-driven model as a
     scheduler: decode ticks, ``getfin`` page arrivals, and free-page-
     watermark admission/preemption decisions,
+  * :mod:`repro.paging.prefix_cache` — content-addressed cross-request
+    prefix sharing: full prompt pages interned by rolling token-id
+    hash, mapped into new requests' page tables as refcounted/COW
+    shared frames (device hit) or LATENCY far-tier fetches (far hit),
   * :mod:`repro.paging.sim` — deterministic policy simulations feeding
-    the ``paged_kv_sweep`` (pager vs blocking fetch) and
+    the ``paged_kv_sweep`` (pager vs blocking fetch),
     ``mixed_batch_sweep`` (chunked continuous batching vs serial dense
-    prefill) benchmarks.
+    prefill) and ``prefix_reuse_sweep`` (prefix sharing vs recompute)
+    benchmarks.
 
 The serving engine (:mod:`repro.serve.engine`) consumes all of it: both
 decode *and* chunked prefill compute directly on the pool layout, so
@@ -28,9 +33,11 @@ from repro.paging.events import Event, EventKind, EventLoop, WatermarkPolicy
 from repro.paging.page_table import (NOT_MAPPED, Frame, PagePool, PageState,
                                      PageTable, PagingError, pages_for)
 from repro.paging.pager import Pager, QoSWindows
+from repro.paging.prefix_cache import PREFIX_SEQ, PrefixCache, page_hashes
 
 __all__ = [
     "Event", "EventKind", "EventLoop", "WatermarkPolicy",
     "NOT_MAPPED", "Frame", "PagePool", "PageState", "PageTable",
     "PagingError", "pages_for", "Pager", "QoSWindows",
+    "PREFIX_SEQ", "PrefixCache", "page_hashes",
 ]

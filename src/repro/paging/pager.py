@@ -1,7 +1,9 @@
 """AMU-backed demand/prefetch pager over the device page pool.
 
 The pager is the traffic engine between the pool (near tier) and the
-far tier, expressed entirely as the paper's instruction set against
+host far tier — a :class:`repro.core.offload.FarMemoryTier`, the single
+storage backend every cold page (preempted, evicted or finished) lives
+in — expressed entirely as the paper's instruction set against
 :class:`repro.core.amu.AMU`:
 
   * **prefetch** — LATENCY-QoS ``aload`` of the next-needed pages,
@@ -28,6 +30,7 @@ from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
 
 from repro.core.amu import (AMU, AMUError, AccessConfig, FAILURE_CODE, QoS,
                             RequestState, SimBackend)
+from repro.core.offload import FarMemoryTier
 from repro.paging.page_table import (NOT_MAPPED, PagePool, PageState,
                                      PageTable, PagingError)
 
@@ -94,6 +97,7 @@ class Pager:
         bulk_window: int = 4,
         granularity: Optional[int] = None,
         read_frame: Optional[Callable[[int], Any]] = None,
+        tier: Optional[FarMemoryTier] = None,
     ):
         self.pool = pool
         self.table = table
@@ -109,7 +113,13 @@ class Pager:
         self.evict_config = AccessConfig(granularity_bytes=g, qos=QoS.BULK)
         self.windows = QoSWindows({QoS.LATENCY: latency_window,
                                    QoS.BULK: bulk_window})
-        self._far: Dict[Tuple[Hashable, int], Any] = {}    # far-tier home copies
+        # THE far tier: home copies of every cold page (and, for the
+        # serving engine, finished-sequence KV + aux residues) live in
+        # one FarMemoryTier sharing this pager's AMU.  The pager issues
+        # its own windowed aloads/astores against the tier's storage;
+        # completions consumed by either party on the shared queue are
+        # forwarded to the other (see poll / _finish / _reap_failed).
+        self.tier = tier if tier is not None else FarMemoryTier(self.amu)
         self._inflight: Dict[int, Tuple[str, Hashable, int]] = {}
         self._page_rid: Dict[Tuple[Hashable, int], int] = {}
         self._pending: Dict[QoS, Deque[Tuple[str, Hashable, int,
@@ -120,11 +130,16 @@ class Pager:
         self.stats = collections.Counter()
 
     # -- write path: park / writeback ---------------------------------------
-    def writeback(self, seq: Hashable, logical: int, data: Any) -> None:
+    def writeback(self, seq: Hashable, logical: int, data: Any,
+                  tokens: int = -1) -> None:
         """Park one RESIDENT page: the far tier becomes its home (BULK
-        astore models the transfer), and its device frame is freed."""
+        astore models the transfer), and this mapping's device frame is
+        released.  ``tokens`` tags how many positions of the page were
+        valid when stored, so a later park can tell a current far copy
+        from a stale one (clean-eviction fast path)."""
         self.table.mark_parked(seq, logical)
-        self._far[(seq, logical)] = data
+        self.tier.put((seq, logical), data, nbytes=self.page_nbytes,
+                      tokens=tokens)
         self.stats["writeback"] += 1
         self._issue(QoS.BULK, "astore", seq, logical,
                     lambda: self.amu.astore(data, nbytes=self.page_nbytes,
@@ -133,7 +148,7 @@ class Pager:
     def park_clean(self, seq: Hashable, logical: int) -> None:
         """Park a page whose far-tier home copy is already current —
         no astore traffic (the clean-eviction fast path)."""
-        if (seq, logical) not in self._far:
+        if (seq, logical) not in self.tier:
             raise PagingError(
                 f"page ({seq!r}, {logical}) has no far-tier copy; "
                 "use writeback for dirty pages")
@@ -148,29 +163,52 @@ class Pager:
             raise PagingError(
                 f"evict of non-resident page ({seq!r}, {logical})")
         frame = self.pool.frames[pte.phys]
-        if frame.dirty or (seq, logical) not in self._far:
+        if frame.dirty or (seq, logical) not in self.tier:
             data = frame.data
             if data is None and self.read_frame is not None:
                 data = self.read_frame(pte.phys)
-            self.writeback(seq, logical, data)
+            # carry the frame's valid-token tag into the far entry so a
+            # later park of the same content still hits the clean fast
+            # path (an untagged writeback would poison it forever)
+            self.writeback(seq, logical, data, tokens=frame.tokens)
         else:
             self.park_clean(seq, logical)
         self.stats["evictions"] += 1
 
     def evict_lru(self, n: int) -> int:
         """Evict up to ``n`` unpinned RESIDENT frames, least-recently-used
-        first (ARRIVING frames have a fetch in flight and are skipped).
-        Returns how many were actually evicted."""
+        first (ARRIVING frames have a fetch in flight and are skipped;
+        so are frames mapped by more than one sequence — evicting one
+        sharer's mapping cannot free the frame).  Returns how many were
+        actually evicted."""
         done = 0
         for phys in self.pool.lru_victims(self.pool.n_pages):
             if done >= n:
                 break
             f = self.pool.frames[phys]
-            if self.table.entry(f.owner, f.logical).state \
+            if f.refs > 1 or not f.users:
+                continue
+            seq, logical = next(iter(f.users))
+            if self.table.entry(seq, logical).state \
                     is not PageState.RESIDENT:
                 continue
-            self.evict(f.owner, f.logical)
+            self.evict(seq, logical)
             done += 1
+        return done
+
+    def balance(self, low_free: int) -> int:
+        """The capacity-pressure loop: evict LRU frames until at least
+        ``low_free`` frames are free (§2.3.2 free-watermark policy made
+        proactive — cold RESIDENT pages flow to the far tier *before*
+        growth/admission hits an empty free heap, so the astores overlap
+        decode instead of serialising in front of it).  Returns how many
+        frames were evicted."""
+        deficit = low_free - self.pool.n_free
+        if deficit <= 0:
+            return 0
+        done = self.evict_lru(deficit)
+        if done:
+            self.stats["watermark_evictions"] += done
         return done
 
     # -- read path: prefetch / demand fetch ---------------------------------
@@ -184,7 +222,7 @@ class Pager:
             self.stats["prefetch_no_frame"] += 1
             return False
         self.table.mark_arriving(seq, logical)
-        src = self._far[(seq, logical)]
+        src = self.tier.home((seq, logical))
         self.stats["prefetch"] += 1
         self._issue(QoS.LATENCY, "aload", seq, logical,
                     lambda: self.amu.aload(src, nbytes=self.page_nbytes,
@@ -229,10 +267,14 @@ class Pager:
         return arrived
 
     def _reap_failed(self) -> None:
-        """Clean up every tracked request the AMU marked FAILED."""
+        """Clean up every tracked request the AMU marked FAILED (and let
+        the shared far tier reap its own failed fetches — one completion
+        queue, two consumers)."""
         for rid in list(self._inflight):
             if self.amu.request(rid).state is RequestState.FAILED:
                 self._fail_one(rid)
+        if self.tier.amu is self.amu:
+            self.tier._reap_failed()
         self._pump()
 
     def _fail_one(self, rid: int) -> None:
@@ -297,19 +339,24 @@ class Pager:
         for logical in range(self.table.n_pages(seq)):
             self.wait_page(seq, logical)
 
-    # -- far-tier access ------------------------------------------------------
+    # -- far-tier access (delegates to the shared FarMemoryTier) -------------
     def far_copy(self, seq: Hashable, logical: int) -> Any:
-        return self._far[(seq, logical)]
+        return self.tier.home((seq, logical))
 
     def has_far(self, seq: Hashable, logical: int) -> bool:
-        return (seq, logical) in self._far
+        return (seq, logical) in self.tier
 
-    def store_far(self, seq: Hashable, logical: int, data: Any) -> None:
-        self._far[(seq, logical)] = data
+    def far_tokens(self, seq: Hashable, logical: int) -> int:
+        """Valid-token tag of the far copy (-1: none or untagged)."""
+        return self.tier.tokens_of((seq, logical))
+
+    def store_far(self, seq: Hashable, logical: int, data: Any,
+                  tokens: int = -1) -> None:
+        self.tier.put((seq, logical), data, nbytes=self.page_nbytes,
+                      tokens=tokens)
 
     def drop_far(self, seq: Hashable) -> None:
-        for key in [k for k in self._far if k[0] == seq]:
-            del self._far[key]
+        self.tier.discard_seq(seq)
         for key in [k for k in self._page_rid if k[0] == seq]:
             del self._page_rid[key]
 
@@ -382,7 +429,11 @@ class Pager:
         """Bookkeeping for one consumed completion id."""
         entry = self._inflight.pop(rid, None)
         if entry is None:
-            return None                       # foreign request on a shared AMU
+            # foreign request on the shared AMU: forward it to the far
+            # tier so its fetch bookkeeping sees the completion too
+            if self.tier.amu is self.amu:
+                self.tier.complete_rid(rid, self.amu.request(rid).payload)
+            return None
         kind, seq, logical = entry
         self.windows.release(self._qos_of(kind))
         self._pump()
@@ -396,8 +447,9 @@ class Pager:
             return None
         if pte.state is PageState.ARRIVING:
             frame = self.pool.frames[pte.phys]
-            frame.data = self._far[(seq, logical)]
+            frame.data = self.tier.home((seq, logical))
             frame.dirty = False
+            frame.tokens = self.tier.tokens_of((seq, logical))
             self.table.mark_resident(seq, logical)
             self.pool.touch(pte.phys)
             self.stats["arrived"] += 1

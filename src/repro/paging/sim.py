@@ -25,7 +25,8 @@ from repro.paging.events import EventKind, EventLoop
 from repro.paging.page_table import PagePool, PageState, PageTable
 from repro.paging.pager import Pager
 
-__all__ = ["simulate_paged_serving", "simulate_mixed_batching"]
+__all__ = ["simulate_paged_serving", "simulate_mixed_batching",
+           "simulate_prefix_reuse"]
 
 
 def simulate_paged_serving(
@@ -272,4 +273,155 @@ def simulate_mixed_batching(
         "tok_per_s_mixed": mixed["decode_tok_per_s"],
         "throughput_speedup": (mixed["decode_tok_per_s"]
                                / dense["decode_tok_per_s"]),
+    }
+
+
+def simulate_prefix_reuse(
+    shared_frac: float,
+    *,
+    oversubscription: float = 2.0,
+    max_batch: int = 4,
+    prefix_tokens: int = 240,
+    tail_tokens: int = 16,
+    new_tokens: int = 32,
+    page_size: int = 16,
+    chunk_tokens: int = 16,
+    chunk_slots: int = 2,
+    low_watermark: int = 1,
+    t_decode_step: float = 20e-6,
+    t_prefill_token: float = 2.5e-6,
+    t_page_fetch: float = 15e-6,
+) -> Dict[str, float]:
+    """Cross-request prefix sharing vs recompute-everything, deterministic.
+
+    Models system-prompt traffic at ``oversubscription`` x request load:
+    ``shared_frac`` of the burst's requests carry an identical
+    ``prefix_tokens``-long prefix ahead of a unique tail (defaults: a
+    240-token system prompt over a 16-token user turn — the
+    thousands-of-users-one-template regime prefix caching targets,
+    with prompt chunks compute-dense next to the memory-bound decode
+    step).  Both engines
+    are the chunk-queue engine of :func:`simulate_mixed_batching`; the
+    *sharing* engine additionally runs the
+    :mod:`repro.paging.prefix_cache` policy:
+
+    * the first shared request to finish its prefix chunks *interns*
+      the full prefix pages,
+    * every later shared request maps those pages instead of computing
+      them — only the boundary page (the hash covers full pages and the
+      first token must still produce logits) and the unique tail pay
+      prefill FLOPs,
+    * under pool pressure the interned pages are evicted to the far
+      tier (clean, for free — the intern writes the far home); a hit
+      then pays one overlapped LATENCY page-fetch round
+      (``t_page_fetch``, all pages under one window) before its first
+      chunk instead of the chunks themselves.
+
+    This is the serving-level aggregation claim of the follow-up AMU
+    paper (2404.11044): far memory plus massive outstanding aloads
+    turns recomputation into cheap overlappable transfers.  Returns
+    mean/p95 TTFT for both engines, the TTFT speedup, and the fraction
+    of prefill FLOPs the sharing engine skipped.
+    """
+    n_seqs = max(1, int(round(oversubscription * max_batch * 4)))
+    n_shared = int(round(shared_frac * n_seqs))
+    prompt_tokens = prefix_tokens + tail_tokens
+    pages_per_seq = -(-(prompt_tokens + new_tokens) // page_size)
+    pool_pages = max_batch * pages_per_seq + low_watermark
+    # full pages only, and the last prompt token always recomputes
+    hit_tokens = min(((prefix_tokens - 1) // page_size) * page_size,
+                     ((prompt_tokens - 1) // page_size) * page_size)
+    hit_pages = hit_tokens // page_size
+
+    def run(sharing: bool) -> Dict[str, float]:
+        now = 0.0
+        free_pages = pool_pages
+        queue = list(range(n_seqs))          # seq < n_shared: shared prefix
+        running: Dict[int, int] = {}         # seq -> decoded tokens
+        prefilling: Dict[int, int] = {}      # seq -> prefilled tokens
+        ready_at: Dict[int, float] = {}      # far-hit fetch completion time
+        held: Dict[int, int] = {}
+        ttft = [0.0] * n_seqs
+        done = 0
+        interned = False
+        prefill_tokens_done = 0
+        far_hit_admissions = 0
+        while done < n_seqs:
+            while queue and (len(running) + len(prefilling)) < max_batch:
+                need = -(-prompt_tokens // page_size)
+                if free_pages - need < low_watermark:
+                    break
+                seq = queue.pop(0)
+                shared = seq < n_shared
+                start = 0
+                if sharing and shared and interned and hit_pages:
+                    start = hit_tokens
+                    # interned pages resident only while the pool has
+                    # slack; at real oversubscription they live in the
+                    # far tier and the hit pays one overlapped fetch
+                    if free_pages - need < hit_pages + low_watermark:
+                        ready_at[seq] = now + t_page_fetch
+                        far_hit_admissions += 1
+                free_pages -= need
+                held[seq] = need
+                prefilling[seq] = start
+            if not running and not prefilling:
+                break
+            chunk_work = 0
+            for seq in sorted(prefilling)[:chunk_slots]:
+                if ready_at.get(seq, 0.0) > now:
+                    continue                 # pages still arriving
+                take = min(chunk_tokens, prompt_tokens - prefilling[seq])
+                prefilling[seq] += take
+                chunk_work += take
+            step = max(t_decode_step if running else 0.0,
+                       chunk_work * t_prefill_token)
+            step = step or t_decode_step
+            now += step
+            prefill_tokens_done += chunk_work
+            for seq in sorted(prefilling):
+                if prefilling[seq] >= prompt_tokens:
+                    del prefilling[seq]
+                    ready_at.pop(seq, None)
+                    ttft[seq] = now
+                    running[seq] = 1
+                    if seq < n_shared:
+                        interned = True
+            for seq in sorted(running):
+                need = (-(-(prompt_tokens + running[seq] + 1) // page_size)
+                        - held[seq])
+                if need > 0 and free_pages >= need:
+                    free_pages -= need
+                    held[seq] += need
+                running[seq] += 1
+                if running[seq] >= new_tokens:
+                    free_pages += held.pop(seq)
+                    del running[seq]
+                    done += 1
+        ttft_sorted = sorted(ttft)
+        return {
+            "ttft_mean": sum(ttft) / n_seqs,
+            "ttft_p95": ttft_sorted[min(n_seqs - 1, int(0.95 * n_seqs))],
+            "wall": now,
+            "prefill_tokens": prefill_tokens_done,
+            "far_hits": far_hit_admissions,
+        }
+
+    plain = run(sharing=False)
+    shared = run(sharing=True)
+    return {
+        "shared_frac": shared_frac,
+        "oversubscription": oversubscription,
+        "hit_tokens": hit_tokens,
+        "ttft_plain_us": plain["ttft_mean"] * 1e6,
+        "ttft_shared_us": shared["ttft_mean"] * 1e6,
+        "ttft_p95_plain_us": plain["ttft_p95"] * 1e6,
+        "ttft_p95_shared_us": shared["ttft_p95"] * 1e6,
+        "ttft_speedup": plain["ttft_mean"] / max(shared["ttft_mean"], 1e-30),
+        "prefill_tokens_plain": plain["prefill_tokens"],
+        "prefill_tokens_shared": shared["prefill_tokens"],
+        "prefill_flops_saved_frac": (
+            1.0 - shared["prefill_tokens"] / max(1, plain["prefill_tokens"])),
+        "far_hits": shared["far_hits"],
+        "wall_speedup": plain["wall"] / max(shared["wall"], 1e-30),
     }

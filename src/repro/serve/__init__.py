@@ -9,9 +9,11 @@ Two modules:
     paper's §2.3.2 model applied to requests),
   * :mod:`repro.serve.kv_cache` — slot bookkeeping around the batched
     device cache: the :class:`~repro.serve.kv_cache.SlotPool`, dense
-    slot extract/insert (the ``paging=False`` fallback path), page
-    split/join for far-tier payloads, and the finished-sequence
-    :class:`~repro.serve.kv_cache.KVOffloadTier`.
+    slot extract/insert (the ``paging=False`` fallback path), and page
+    split/join for far-tier payloads.  Finished-sequence offload is
+    engine-level now: pages park through the pager into the single
+    :class:`~repro.core.offload.FarMemoryTier` and
+    ``Engine.fetch_finished`` reassembles them.
 
 Minimal use::
 

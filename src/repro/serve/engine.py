@@ -28,9 +28,32 @@ TPU).  Preemption parks cold pages without ever extracting a dense
 slot; resume is a page-table patch plus a LATENCY prefetch.  The
 admit/preempt/resume hot path performs **zero dense KV
 re-materialisation** — ``extract_slot``/``insert_slot`` survive only on
-the non-paged fallback and the finished-sequence
-:class:`~repro.serve.kv_cache.KVOffloadTier` path, exactly the
-round-trip the AMU papers argue against eliminating elsewhere.
+the non-paged fallback, exactly the round-trip the AMU papers argue
+against eliminating elsewhere.
+
+**The storage layer is an explicit two-tier hierarchy**: the device
+page pool (near tier) over ONE host
+:class:`~repro.core.offload.FarMemoryTier` behind the pager.  Every
+cold page is a page-granularity resident of that tier — preempted
+pages via BULK writeback (or for free when the far copy's valid-token
+tag is current), watermark-evicted pages via the pager's LRU
+``balance`` loop that runs every tick the free-frame count sits under
+the low watermark, and *finished* sequences' KV via the same shed
+path (``offload_finished``; ``fetch_finished`` reassembles with
+overlapped LATENCY aloads, discarding entries only after every
+transfer verifiably landed).  There is no sequence-granularity side
+store.
+
+**Cross-request prefix sharing** (``prefix_cache=True``) sits on top:
+full prompt pages are content-addressed by a rolling token-id hash
+(:mod:`repro.paging.prefix_cache`) and interned at prefill
+graduation; a later request whose prompt starts with the same tokens
+maps its page-table rows onto the shared frames — refcounted + COW on
+a device hit, one LATENCY page fetch on a far-tier hit — and its
+prefill simply starts past them (``prefill_pos``), so a system prompt
+shared by thousands of users costs one prefill.  Only the partial
+boundary page and the unseen tail are computed; outputs stay
+token-exact with the dense engine.
 
 **Prefill is chunked and continuously batched** (``chunk_tokens``): the
 last dense-KV hold-out — admit-then-scatter whole-prompt prefill — is
@@ -79,11 +102,11 @@ from repro.launch.mesh import make_mesh_compat
 from repro.models import ssm as ssm_mod
 from repro.models.model import (Cache, PagedCache, encode_cross, init_cache,
                                 init_paged_cache, prefill)
-from repro.paging import (EventKind, EventLoop, PagePool, PageState,
-                          PageTable, Pager, PagingError, WatermarkPolicy,
-                          pages_for)
-from repro.serve.kv_cache import (KVOffloadTier, SlotPool, extract_aux_slot,
-                                  extract_slot, insert_aux_slot, insert_slot,
+from repro.paging import (NOT_MAPPED, EventKind, EventLoop, PagePool,
+                          PageState, PageTable, Pager, PagingError,
+                          PrefixCache, WatermarkPolicy, pages_for)
+from repro.serve.kv_cache import (SlotPool, extract_aux_slot,
+                                  insert_aux_slot, insert_slot,
                                   join_kv_pages)
 
 __all__ = ["Request", "Engine"]
@@ -115,7 +138,6 @@ class Request:
     # paging state (set when the request has been preempted):
     parked: bool = False                # preempted, waiting to resume
     residue: Any = None                 # non-KV aux payload while parked
-    clean_pages: int = 0                # leading pages whose far copy is current
     n_preempts: int = 0
     admit_seq: int = -1                 # admission order (preemption priority)
     # chunked-prefill state (chunk-queue admission path):
@@ -177,6 +199,15 @@ def _scatter_one_page(k_pages, v_pages, k_data, v_data, phys):
     return k_pages, v_pages
 
 
+@partial(jax.jit, donate_argnums=(0, 1))
+def _copy_frame(k_pages, v_pages, src, dst):
+    """Device-side page copy (COW break: a sharer about to write a
+    prefix-shared frame gets a private duplicate first)."""
+    k_pages = k_pages.at[:, dst].set(k_pages[:, src])
+    v_pages = v_pages.at[:, dst].set(v_pages[:, src])
+    return k_pages, v_pages
+
+
 class Engine:
     """Continuous-batching serving engine on the paged far-memory KV.
 
@@ -192,8 +223,12 @@ class Engine:
     Knobs: ``device_pages`` below ``max_batch * pages_per_seq``
     oversubscribes the pool (watermark admission + preemption, §2.3.2);
     ``chunk_tokens`` switches admission to the chunk queue (mixed
-    prefill/decode steps); ``paging=False`` is the dense A/B reference;
-    ``kernel_impl`` selects the paged-attention backend
+    prefill/decode steps); ``prefix_cache=True`` adds cross-request
+    prefix sharing on top of it (content-addressed prompt pages;
+    dense/moe global-attention families); ``offload_finished`` parks
+    finished sequences' pages in the far tier for later
+    :meth:`fetch_finished` reuse; ``paging=False`` is the dense A/B
+    reference; ``kernel_impl`` selects the paged-attention backend
     (``auto``/``pallas``/``interpret``/``xla``); ``pager_factory``
     injects a custom :class:`~repro.paging.Pager` (tests use a
     simulated-latency AMU backend).
@@ -221,6 +256,7 @@ class Engine:
         step_dt: float = 1e-3,
         chunk_tokens: Optional[int] = None,
         chunk_slots: int = 2,
+        prefix_cache: bool = False,
     ):
         self.cfg = cfg
         self.params = params
@@ -234,7 +270,7 @@ class Engine:
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}     # slot -> request
         self.finished: Dict[int, Request] = {}
-        self.kv_tier = KVOffloadTier() if offload_finished else None
+        self.offload_finished = offload_finished
         self._ids = itertools.count()
         self._admits = itertools.count()
 
@@ -271,6 +307,11 @@ class Engine:
                                    page_nbytes=page_nbytes)
             if self.pager.read_frame is None:    # keep a factory's hook
                 self.pager.read_frame = self._read_frame
+            # THE far tier: one FarMemoryTier behind the pager holds
+            # every cold page — preempted, watermark-evicted, finished —
+            # plus finished sequences' aux residues and the prefix
+            # cache's shared page homes
+            self.far_tier = self.pager.tier
             # device frames: pool frames + one trash frame at the end
             self.trash_frame = n_pages
             self.cache: Any = init_paged_cache(
@@ -282,7 +323,12 @@ class Engine:
         else:
             self.slot_tokens = 0
             self.page_pool = self.page_table = self.pager = None
+            self.far_tier = None
             self.cache = init_cache(cfg, max_batch, max_len)
+        if offload_finished and not self.paging:
+            raise PagingError(
+                "offload_finished requires the paged engine: finished KV "
+                "is parked page-by-page through the pager's far tier")
         self.policy = watermark or WatermarkPolicy(low=0, critical=0)
 
         # -- mesh-sharded decode step (dist.steps, not a raw jit) ----------
@@ -313,13 +359,39 @@ class Engine:
                     lambda a: np.zeros((cfg.num_layers,) + a.shape,
                                        np.asarray(a).dtype), s)
 
+        # -- cross-request prefix sharing (content-addressed prompt pages)
+        # full prompt pages are interned by rolling token-id hash at
+        # prefill graduation; later requests map their page-table rows
+        # onto the shared frames (device hit) or fetch a private copy
+        # with a LATENCY aload (far hit) and skip those prefill chunks.
+        # Supported where the shared KV is position- and content-exact
+        # for every sharer: global-attention dense/moe (append-only KV,
+        # absolute rope; SWA ring wrap rewrites pages in place, and
+        # hybrid/encdec carry non-KV per-request prefix state).
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            if not self.chunking:
+                raise PagingError(
+                    "prefix_cache requires chunked paged admission "
+                    "(chunk_tokens > 0 on the paged engine)")
+            if cfg.family not in ("dense", "moe") or \
+                    cfg.attention == "swa":
+                raise PagingError(
+                    "prefix_cache supports global-attention dense/moe "
+                    f"families; got family={cfg.family!r} "
+                    f"attention={cfg.attention!r}")
+            self.prefix = PrefixCache(self.page_pool, self.page_table,
+                                      self.pager, page_size)
+
         self.events = EventLoop()
         self.events.on(EventKind.TICK, self._on_tick)
         self.events.on(EventKind.PAGE_ARRIVED, self._on_page_arrived)
         self.events.on(EventKind.COMPLETE, self._on_complete)
         self.stats = {"steps": 0, "prefills": 0, "admitted": 0,
                       "preemptions": 0, "resumes": 0, "mixed_steps": 0,
-                      "chunks": 0, "prefill_preempts": 0}
+                      "chunks": 0, "prefill_preempts": 0,
+                      "prefix_hits": 0, "prefix_tokens_saved": 0,
+                      "prefix_far_hits": 0}
 
     # -- public API ----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
@@ -398,6 +470,13 @@ class Engine:
             return
         for seq, logical in self.pager.advance(self.step_dt):
             self.events.post(EventKind.PAGE_ARRIVED, (seq, logical))
+        # capacity pressure: when free frames sit under the low
+        # watermark, push cold RESIDENT pages (parked hot tails, idle
+        # prefix-cache frames) to the far tier *now*, so the BULK
+        # astores overlap decode instead of serialising inside the next
+        # admission's _make_room
+        if self.policy.low:
+            self.pager.balance(self.policy.low)
 
     def _on_page_arrived(self, ev) -> None:
         seq, logical = ev.payload
@@ -410,7 +489,10 @@ class Engine:
         rid = ev.payload
         if self.paging and rid in self.page_table.sequences():
             self.page_table.drop(rid)
-            self.pager.drop_far(rid)
+            if not self.offload_finished:
+                # offloaded sequences keep their far-tier pages: that IS
+                # the finished-KV store fetch_finished reads back
+                self.pager.drop_far(rid)
 
     # -- internals ------------------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -568,36 +650,49 @@ class Engine:
             self._park(victim)
         return True
 
-    def _shed_pages(self, req: Request, valid: int) -> None:
+    def _shed_pages(self, req: Request, valid: int,
+                    hot_pages: Optional[int] = None) -> None:
         """Shared parking machinery: keep the hot tail cached in the
         pool (unpinned, LRU-evictable), move cold pages to the far tier
         — BULK astore for dirty ones, for free when the far copy is
-        still current (clean-eviction fast path, §2.3 QoS split)."""
+        still current (clean-eviction fast path, §2.3 QoS split).
+
+        A far copy is *current* when its stored valid-token tag equals
+        the page's live token count (append-only KV never rewrites a
+        position, so equal coverage means equal content) — this is what
+        lets previously-parked pages, prefix-shared pages and re-fetched
+        pages all park for free, while a page that grew since its last
+        writeback pays a fresh astore.  SWA rings rewrite pages in place
+        on wrap, so they always write back.  Shared frames are released,
+        not freed: the prefix cache (or another sharer) keeps them.
+        """
         rid = req.rid
         n_pages = pages_for(valid, self.page_size)
         # a frame allocated for the *next* write (pos on a page boundary)
         # holds no content yet — release it; resume growth re-allocates
         self.page_table.truncate(rid, n_pages)
-        n_hot = min(self.hot_tail_pages, n_pages)
+        n_hot = min(self.hot_tail_pages if hot_pages is None else hot_pages,
+                    n_pages)
         n_cold = n_pages - n_hot
         for logical in range(n_pages - 1, -1, -1):   # tail first: hot
             pte = self.page_table.entry(rid, logical)
-            self.page_pool.unpin(pte.phys)
+            if pte.state is PageState.PARKED:
+                continue                 # already far (and current, by
+            self.page_table.unpin_page(rid, logical)  # the park invariant)
+            cur = min(self.page_size, valid - logical * self.page_size)
+            clean = (self.cfg.attention != "swa"
+                     and self.pager.far_tokens(rid, logical) == cur)
             if logical >= n_cold:                    # hot tail: stays pooled
                 frame = self.page_pool.frames[pte.phys]
                 frame.data = None                    # content is in the pool
-                frame.dirty = not (logical < req.clean_pages
-                                   and self.pager.has_far(rid, logical))
+                frame.dirty = not clean
+                frame.tokens = cur   # LRU eviction keeps the freshness tag
                 self.page_pool.touch(pte.phys)
-            elif (logical < req.clean_pages
-                  and self.pager.has_far(rid, logical)):
+            elif clean:
                 self.pager.park_clean(rid, logical)  # far copy current
             else:
-                self.pager.writeback(rid, logical, self._read_frame(pte.phys))
-        # append-only KV: full far-tier pages stay valid forever — except
-        # under an SWA ring, where wrap rewrites old pages in place.
-        req.clean_pages = 0 if self.cfg.attention == "swa" \
-            else min(n_cold, valid // self.page_size)
+                self.pager.writeback(rid, logical,
+                                     self._read_frame(pte.phys), tokens=cur)
 
     def _park(self, req: Request) -> None:
         """Preempt a running sequence: cold pages → far tier (BULK), hot
@@ -677,12 +772,16 @@ class Engine:
             rows = np.full((self.pages_per_seq,), self.trash_frame, np.int32)
             for logical in range(self.page_table.n_pages(rid)):
                 pte = self.page_table.entry(rid, logical)
-                self.page_pool.pin(pte.phys)
+                self.page_table.pin_page(rid, logical)
                 self.page_pool.touch(pte.phys)
                 self._land_frame(pte.phys)
                 rows[logical] = pte.phys
             req.slot = slot
             req.parked = False
+            # a request admitted straight onto far-tier prefix pages
+            # arrives here having never run: that is an admission, not a
+            # resume (preemption/resume stats must stay balanced)
+            first_admit = req.admit_seq < 0
             req.admit_seq = next(self._admits)
             if req.mid_prefill:
                 req.chunk_rows = rows
@@ -690,6 +789,11 @@ class Engine:
                     self._install_cross(req)     # cross rows left with the slot
                 self.prefilling[slot] = req
             else:
+                self._ensure_private_tail(req)
+                rows = np.full((self.pages_per_seq,), self.trash_frame,
+                               np.int32)
+                for logical in range(self.page_table.n_pages(rid)):
+                    rows[logical] = self.page_table.entry(rid, logical).phys
                 self._pt_np[slot] = rows
                 self._pt_dirty = True
                 self.cache = insert_aux_slot(self.cache, req.residue,
@@ -697,7 +801,7 @@ class Engine:
                 req.residue = None
                 self.active[slot] = req
             del self._resuming[rid]
-            self.stats["resumes"] += 1
+            self.stats["admitted" if first_admit else "resumes"] += 1
             self.events.post(EventKind.ADMIT, rid)
 
     def _alloc_pinned(self, req: Request, n_tokens: int) -> None:
@@ -711,13 +815,49 @@ class Engine:
         mid = req.mid_prefill and req.chunk_rows is not None
         for logical in self.page_table.ensure_capacity(req.rid, n_tokens):
             pte = self.page_table.entry(req.rid, logical)
-            self.page_pool.pin(pte.phys)
+            self.page_table.pin_page(req.rid, logical)
             self.page_pool.mark_dirty(pte.phys)
             if mid:
                 req.chunk_rows[logical] = pte.phys
             else:
                 self._pt_np[req.slot, logical] = pte.phys
                 self._pt_dirty = True
+
+    def _ensure_private(self, req: Request, logical: int) -> None:
+        """COW break: if the frame backing ``(req, logical)`` is a
+        prefix-shared (copy-on-write) frame this step is about to write,
+        remap the page onto a private duplicate first.  Unreachable on
+        the supported sharing families by construction — only *full*
+        prompt pages are shared and decode appends strictly after them —
+        but the guard keeps the donated in-place pool scatters safe
+        against any future schedule that routes a write at a shared
+        frame."""
+        pte = self.page_table.entry(req.rid, logical)
+        if pte.phys == NOT_MAPPED:
+            return
+        frame = self.page_pool.frames[pte.phys]
+        if not frame.cow or frame.refs <= 1:
+            return
+        old, new = self.page_table.remap_private(req.rid, logical)
+        if new == old:
+            return
+        kv = self.cache.kv
+        kp, vp = _copy_frame(kv["k_pages"], kv["v_pages"],
+                             jnp.asarray(old, jnp.int32),
+                             jnp.asarray(new, jnp.int32))
+        self.cache = self.cache._replace(kv=dict(kv, k_pages=kp, v_pages=vp))
+        if req.mid_prefill and req.chunk_rows is not None:
+            req.chunk_rows[logical] = new
+        elif req.slot is not None:
+            self._pt_np[req.slot, logical] = new
+            self._pt_dirty = True
+
+    def _ensure_private_tail(self, req: Request) -> None:
+        """Guard the page decode writes next (the sequence's last mapped
+        page) against COW sharing before the slot goes active."""
+        n = self.page_table.n_pages(req.rid)
+        if n:
+            self._ensure_private(req, n - 1)
 
     def _ensure_growth(self) -> None:
         """Before a decode step: every active sequence about to cross a
@@ -730,6 +870,9 @@ class Engine:
             pos = int(pos_np[req.slot])
             if pos >= self.slot_tokens:
                 continue                    # SWA ring wrapped: no growth
+            wp = pos // self.page_size      # page this step's token writes
+            if wp < self.page_table.n_pages(req.rid):
+                self._ensure_private(req, wp)
             need = self.page_table.pages_needed(req.rid, pos + 1)
             if not need:
                 continue
@@ -748,6 +891,41 @@ class Engine:
         return (self.chunking and len(req.prompt) > 0
                 and len(req.prompt) <= self.slot_tokens)
 
+    def _admit_prefix(self, req: Request, hits: List[int]) -> bool:
+        """Map prefix-cache hits onto the request's fresh page-table row.
+
+        Device-resident hits are refcount-shared in place (zero traffic,
+        zero compute); hits whose shared page lives only in the far tier
+        make the request start *parked* — it rides the ordinary resume
+        machinery (LATENCY prefetch of a private copy, including the
+        resume-while-ARRIVING paths) before its first chunk.  Either
+        way ``prefill_pos`` starts past the shared prefix, so those
+        chunks are simply never queued.  Returns True on the far route.
+        """
+        self.page_table.register(req.rid)
+        req.target_len = len(req.prompt)
+        far = False
+        for l in hits:
+            key = self.prefix.far_key(l)
+            if self.prefix.entry_state(l) is PageState.RESIDENT:
+                phys = self.prefix.entry_phys(l)
+                logical = self.page_table.append_shared(req.rid, phys)
+                self.page_pool.touch(phys)
+            else:
+                far = True
+                logical = self.page_table.append_parked(req.rid)
+                self.stats["prefix_far_hits"] += 1
+            # far alias (no copy: same host payload) so this mapping can
+            # always park clean and a far hit fetches through the pager
+            self.pager.store_far(req.rid, logical, self.far_tier.home(key),
+                                 tokens=self.page_size)
+        req.prefill_pos = len(hits) * self.page_size
+        self.stats["prefix_hits"] += len(hits)
+        self.stats["prefix_tokens_saved"] += req.prefill_pos
+        if far:
+            req.parked = True
+        return far
+
     def _admit(self) -> None:
         if self.paging:
             self._try_finish_resumes()
@@ -761,13 +939,25 @@ class Engine:
                 continue
             if not self.pool.n_free:
                 break
+            hits: List[int] = []
             if self.paging:
                 need = pages_for(min(len(req.prompt), self.slot_tokens),
                                  self.page_size)
+                if self.prefix is not None and self._chunkable(req) \
+                        and req.rid not in self.page_table.sequences():
+                    hits = self.prefix.match(req.prompt)
+                    # device-resident hits take no new frames
+                    need -= sum(
+                        1 for l in hits
+                        if self.prefix.entry_state(l) is PageState.RESIDENT)
                 if not self.policy.can_admit(self.page_pool, need) and \
                         not self._make_room(need + self.policy.low,
                                             frozenset(), preempt=False):
                     break
+            if hits and self._admit_prefix(req, hits):
+                # far-tier hits: request left at the queue head, parked;
+                # the next iteration routes it through _start_resume
+                continue
             self.queue.pop(0)
             slot = self.pool.alloc()
             req.slot = slot
@@ -775,11 +965,17 @@ class Engine:
                 # chunk-queue admission: install bookkeeping only — the
                 # prompt is computed chunk-by-chunk by the mixed step,
                 # interleaved with every running slot's decode
-                self.page_table.register(req.rid)
+                if req.rid not in self.page_table.sequences():
+                    self.page_table.register(req.rid)
                 req.target_len = len(req.prompt)
-                req.prefill_pos = 0
                 req.chunk_rows = np.full((self.pages_per_seq,),
                                          self.trash_frame, np.int32)
+                # prefix hits already mapped: pin them for the slot and
+                # point the chunk row at the shared frames
+                for logical in range(self.page_table.n_pages(req.rid)):
+                    self.page_table.pin_page(req.rid, logical)
+                    req.chunk_rows[logical] = \
+                        self.page_table.entry(req.rid, logical).phys
                 if self.cfg.family == "hybrid":
                     req.chunk_ssm = jax.tree_util.tree_map(
                         np.copy, self._zero_chunk_ssm)
@@ -933,6 +1129,11 @@ class Engine:
         self.cache = cache._replace(pos=new_pos, ssm=ssm)
         req.chunk_rows = None
         del self.prefilling[slot]
+        if self.prefix is not None:
+            # donate the prompt's full pages to the prefix cache: future
+            # requests with the same prefix share these frames instead
+            # of re-running their chunks
+            self.prefix.intern(req.prompt, req.rid, self._read_frame)
         first = int(np.argmax(np.asarray(logits_row)))
         req.generated.append(first)
         req.first_token_t = self.clock()
@@ -977,28 +1178,56 @@ class Engine:
         if picks:
             self._finish_chunks(picks, np.asarray(chunk_logits), carry)
 
-    def _extract_finished(self, req: Request) -> Cache:
-        """Reassemble a finished sequence's dense single cache from its
-        pool pages for the :class:`KVOffloadTier` — the one place a
-        dense per-sequence KV is still materialised, off the hot path."""
+    def _offload_finished(self, req: Request) -> None:
+        """Park a finished sequence page-by-page into THE far tier — the
+        same BULK writeback / clean-park machinery preemption uses, no
+        sequence-granularity side store.  The tiny aux residue (SSM
+        state, cross KV, positions) and the page count ride along as one
+        more far-tier entry; :meth:`fetch_finished` reassembles."""
         slot = req.slot
-        kv = self.cache.kv
-        L, _, page, Hkv, D = kv["k_pages"].shape
+        rid = req.rid
         tokens = min(int(np.asarray(self.cache.pos)[slot]), self.slot_tokens)
         aux = extract_aux_slot(self.cache, slot, self.max_batch)
+        self.far_tier.offload(
+            (rid, "aux"),
+            {"aux": aux, "tokens": tokens,
+             "pages": pages_for(tokens, self.page_size)})
+        # every page goes far (hot_pages=0): the sequence is leaving the
+        # device; shared prefix pages park for free via their aliases
+        self._shed_pages(req, tokens, hot_pages=0)
+
+    def fetch_finished(self, rid: int) -> Cache:
+        """Reassemble a finished, offloaded request's dense single-
+        sequence cache from its far-tier pages (LATENCY aloads, all
+        issued before the first wait so the transfers overlap).
+
+        Fault-safe: entries are discarded only after *every* transfer
+        has verifiably landed — a fault mid-fetch raises, but the far
+        copies survive and a retry re-issues the lost aloads (the PR 3
+        pager fault discipline applied to the reuse path)."""
+        if not self.offload_finished:
+            raise PagingError("engine was not built with offload_finished")
+        tier = self.far_tier
+        meta = tier.get((rid, "aux"))
+        n_pages, tokens = meta["pages"], meta["tokens"]
+        keys = [(rid, logical) for logical in range(n_pages)]
+        for key in keys:
+            tier.prefetch(key)                  # overlap all page fetches
+        kv = self.cache.kv
+        L, _, page, Hkv, D = kv["k_pages"].shape
         pages = []
-        for logical in range(self.page_table.n_pages(req.rid)):
-            pte = self.page_table.entry(req.rid, logical)
-            if pte.state is PageState.RESIDENT:
-                data = self.page_pool.frames[pte.phys].data \
-                    or self._read_frame(pte.phys)
-            else:                         # parked mid-flight: far copy
-                data = self.pager.far_copy(req.rid, logical)
-            take = min(page, tokens - logical * page)
+        for logical, key in enumerate(keys):
+            data = tier.get(key)                # raises on fault; nothing
+            take = min(page, tokens - logical * page)   # discarded yet
             if take <= 0:
                 break
-            pages.append({"k": data["k"][:, None, :take],
-                          "v": data["v"][:, None, :take]})
+            pages.append({"k": np.asarray(data["k"])[:, None, :take],
+                          "v": np.asarray(data["v"])[:, None, :take]})
+        # all transfers verified complete: now the entries may go
+        for key in keys:
+            tier.discard(key)
+        tier.discard((rid, "aux"))
+        aux = meta["aux"]
         kdt = np.dtype(kv["k_pages"].dtype)
         residue = Cache(
             kv={"k": np.zeros((L, 1, 0, Hkv, D), kdt),
@@ -1015,10 +1244,8 @@ class Engine:
         if slot is not None and slot in self.active:
             del self.active[slot]
         if slot is not None:
-            if self.kv_tier is not None:
-                single = (self._extract_finished(req) if self.paging else
-                          extract_slot(self.cache, slot, self.max_batch))
-                self.kv_tier.park(req.rid, single)
+            if self.offload_finished:
+                self._offload_finished(req)
             if self.paging:
                 self._pt_np[slot] = self.trash_frame
                 self._pt_dirty = True

@@ -1,4 +1,4 @@
-"""Serving-side KV management: slot pool, page split/join, far tier.
+"""Serving-side KV management: slot pool, page split/join helpers.
 
 On the hot path the engine's device cache is the *paged*
 :class:`~repro.models.model.PagedCache` (pool frames + page tables) and
@@ -10,16 +10,20 @@ it and the surviving dense paths:
     park payload (SSM state, cross-attn KV, positions): the only
     per-sequence state that still moves densely, because it is tiny,
   * :func:`extract_slot` / :func:`insert_slot` — whole-slot dense
-    moves; alive only on the ``paging=False`` fallback engine and the
-    finished-sequence offload below (never on admit/preempt/resume),
+    moves; alive only on the ``paging=False`` fallback engine (never on
+    admit/preempt/resume),
   * :func:`split_kv_pages` / :func:`join_kv_pages` — carve a
     single-sequence cache into ``repro.paging`` page-granularity far-
     tier payloads (and back, bit-exact): the transfer unit the engine's
     pager moves, replacing the seed's one-request-per-whole-sequence
-    pattern the paper argues against (§1),
-  * :class:`KVOffloadTier` — park *finished* sequences' complete KV in
-    host memory (BULK ``astore``) and bring it back with LATENCY-QoS
-    ``aload``; live preemption goes through ``repro.paging`` instead.
+    pattern the paper argues against (§1).
+
+Finished-sequence offload lives in the engine itself now: finished KV
+parks page-by-page through the pager into THE single
+:class:`~repro.core.offload.FarMemoryTier` (the sequence-granularity
+``KVOffloadTier`` side store this module used to carry is gone), and
+``Engine.fetch_finished`` reassembles it with overlapped LATENCY
+aloads.
 """
 
 from __future__ import annotations
@@ -31,14 +35,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.amu import AMU, AMUError, AccessConfig, QoS
-from repro.core.offload import FarMemoryTier
+from repro.core.amu import AMUError
 from repro.models.model import Cache
 from repro.paging.page_table import pages_for
 
 __all__ = ["SlotPool", "extract_slot", "insert_slot", "extract_aux_slot",
-           "insert_aux_slot", "KVOffloadTier", "split_kv_pages",
-           "join_kv_pages"]
+           "insert_aux_slot", "split_kv_pages", "join_kv_pages"]
 
 
 class SlotPool:
@@ -206,51 +208,3 @@ def join_kv_pages(residue: Cache, pages: List[Dict[str, np.ndarray]],
         v[:, :, off:off + n] = pg["v"]
         off += n
     return residue._replace(kv=dict(residue.kv, k=k, v=v))
-
-
-class KVOffloadTier:
-    """Host-memory parking lot for *finished* sequences' cache states.
-
-    Every transfer is the paper's instruction set (§2.2): ``park`` is a
-    non-blocking BULK ``astore`` per tree leaf, ``prefetch`` begins
-    LATENCY ``aload``s that overlap the current decode step, ``fetch``
-    blocks only on what has not landed yet.  Example::
-
-        tier = KVOffloadTier()
-        tier.park(rid, single_cache)       # astore, returns immediately
-        tier.prefetch(rid)                 # begin aloads (optional)
-        cache = tier.fetch(rid)            # reassembled tree
-    """
-
-    def __init__(self, amu: Optional[AMU] = None):
-        self.tier = FarMemoryTier(amu or AMU(max_outstanding=32),
-                                  fetch_qos=QoS.LATENCY)
-        self.parked: Dict[Hashable, Any] = {}
-
-    def park(self, key: Hashable, single_cache) -> None:
-        """astore a sequence's cache to the far tier (non-blocking)."""
-        host = jax.tree_util.tree_map(np.asarray, single_cache)
-        self.parked[key] = jax.tree_util.tree_structure(host)
-        for i, leaf in enumerate(jax.tree_util.tree_leaves(host)):
-            self.tier.offload((key, i), leaf)
-
-    def prefetch(self, key: Hashable) -> None:
-        """Begin aload of every leaf (call when the scheduler plans to
-        resume ``key`` — latency hides behind the current decode step)."""
-        i = 0
-        while (key, i) in dict.fromkeys(self.tier.keys()):
-            self.tier.prefetch((key, i))
-            i += 1
-
-    def fetch(self, key: Hashable):
-        """Blocking: reassemble the parked cache tree."""
-        treedef = self.parked.pop(key)
-        leaves = []
-        i = 0
-        while True:
-            try:
-                leaves.append(self.tier.get((key, i)))
-            except KeyError:
-                break
-            i += 1
-        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -90,6 +90,40 @@ def mode_serve_step():
           f"pos={int(cache.pos[0])} shape={l3.shape[0]}x{l3.shape[1]}")
 
 
+def mode_prefill_equality():
+    """Full-sequence prefill on a (2, 4) mesh must match single-device
+    prefill — the regression guard for the jax-0.4.37 SPMD rope
+    miscompile on the prefill/train path (attention._pin_qkv_for_rope):
+    without the explicit layout pin, layer-0 k comes back scaled by
+    exactly the data-axis size (2x) on this mesh shape."""
+    from repro.configs import get_smoke
+    from repro.configs.base import ShapeConfig
+    from repro.dist.steps import make_prefill_step
+    from repro.models.model import init_params, prefill
+
+    cfg = get_smoke("phi4-mini-3.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = np.arange(16, dtype=np.int32)[None, :] % cfg.vocab_size
+    batch = {"tokens": jnp.asarray(np.repeat(toks, 2, axis=0))}
+    logits_ref, cache_ref = jax.jit(
+        lambda p, b: prefill(p, cfg, b, max_len=32))(params, batch)
+    kref = np.asarray(cache_ref.kv["k"])
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    pf, _ = make_prefill_step(cfg, mesh, ShapeConfig("p", 16, 2, "prefill"),
+                              max_len=32)
+    logits, cache = pf(params, batch)
+    k = np.asarray(cache.kv["k"])
+    # the miscompile scales k by the data-axis size; bf16 layer compute
+    # leaves only rounding-level differences when correct
+    ratio = float(np.abs(k).sum() / np.abs(kref).sum())
+    logits_ok = bool(np.allclose(np.asarray(logits), np.asarray(logits_ref),
+                                 atol=2e-2))
+    k_ok = bool(np.abs(k - kref).max() < 0.1)
+    print(f"RESULT prefill_eq ratio={ratio:.3f} logits_ok={logits_ok} "
+          f"k_ok={k_ok}")
+
+
 def mode_engine():
     """Serving engine with its decode step mesh-sharded over (2, 4):
     the Engine builds its step via dist.steps.make_serve_step, so params
@@ -194,4 +228,5 @@ def mode_multipod_specs():
 if __name__ == "__main__":
     {"train": mode_train_step, "serve": mode_serve_step,
      "engine": mode_engine, "elastic": mode_elastic,
-     "specs": mode_multipod_specs}[sys.argv[1]]()
+     "specs": mode_multipod_specs,
+     "prefill_eq": mode_prefill_equality}[sys.argv[1]]()

@@ -39,6 +39,16 @@ def test_sharded_prefill_and_serve_step():
     assert "pos=66" in line               # 64 prefill + 2 decode steps
 
 
+def test_sharded_prefill_matches_single_device():
+    """(2, 4)-mesh full-sequence prefill equality vs single device: the
+    regression guard for the rope-over-sharded-projection SPMD
+    miscompile on the prefill/train path (ROADMAP record; decode and
+    chunked prefill have their own guard in test_mixed_step)."""
+    line = _run("prefill_eq")
+    assert "logits_ok=True" in line
+    assert "k_ok=True" in line
+
+
 def test_engine_decode_mesh_sharded():
     """Engine wired onto dist.steps.make_serve_step: TP-sharded params,
     continuous batching and the paged KV pool all on a (2, 4) mesh."""

@@ -1,0 +1,336 @@
+"""Two-tier KV hierarchy + prefix sharing tests.
+
+The PR-5 acceptance surface: every cold page — preempted, watermark-
+evicted, finished or prefix-shared — lives in ONE
+:class:`~repro.core.offload.FarMemoryTier` behind the pager, and the
+engine stays token-exact with the dense reference across arbitrary
+interleavings of evict / park / finish / resume / prefix-hit, including
+AMU faults mid-resume and prefix hits taken while the shared pages are
+still ARRIVING.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.core.amu import AMU, AMUError, SimBackend
+from repro.core.offload import FarMemoryTier
+from repro.models import init_params
+from repro.paging import (PREFIX_SEQ, PagePool, PageState, PageTable, Pager,
+                          PagingError, PrefixCache, WatermarkPolicy,
+                          page_hashes, pages_for)
+from repro.serve.engine import Engine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("phi4-mini-3.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, {}
+
+
+def _slow_pager_factory(base_latency):
+    def factory(pool, table, *, page_nbytes):
+        amu = AMU(backend=SimBackend(base_latency=base_latency,
+                                     bandwidth=10e9),
+                  max_outstanding=64)
+        return Pager(pool, table, amu, page_nbytes=page_nbytes)
+    return factory
+
+
+def _flaky_pager_factory(base_latency, fail):
+    """Pager whose SimBackend faults at issue while ``fail['on']``."""
+    def latency_fn(req):
+        if fail["on"]:
+            raise RuntimeError("injected far-memory fault")
+        return base_latency
+
+    def factory(pool, table, *, page_nbytes):
+        amu = AMU(backend=SimBackend(base_latency=base_latency,
+                                     bandwidth=10e9, latency_fn=latency_fn),
+                  max_outstanding=64)
+        return Pager(pool, table, amu, page_nbytes=page_nbytes)
+    return factory
+
+
+def _dense_reference(cfg, params, cache, requests):
+    key = tuple((tuple(int(t) for t in p), n) for p, n in requests)
+    if key not in cache:
+        eng = Engine(cfg, params, max_batch=3, max_len=64,
+                     prefill_buckets=(32,), paging=False)
+        for prompt, new in requests:
+            eng.submit(prompt, max_new_tokens=new)
+        cache[key] = eng.run()
+    return cache[key]
+
+
+# ---------------------------------------------------------------------------
+# FarMemoryTier: single backend, fault-safe fetch
+# ---------------------------------------------------------------------------
+
+def test_far_tier_get_survives_fault_and_retries():
+    """A failed aload must not lose the home copy: get raises, the entry
+    stays fetchable, and a retry after the fault clears succeeds (the
+    old sequence-granularity offload lost the tree irrecoverably)."""
+    fail = {"on": True}
+
+    def latency_fn(req):
+        if fail["on"]:
+            raise RuntimeError("injected fault")
+        return 1e-6
+
+    amu = AMU(backend=SimBackend(base_latency=1e-6, bandwidth=10e9,
+                                 latency_fn=latency_fn))
+    tier = FarMemoryTier(amu)
+    payload = np.arange(7)
+    tier.put("page", payload, nbytes=payload.nbytes)
+    with pytest.raises(AMUError):
+        tier.get("page")
+    assert "page" in tier                   # home copy survived the fault
+    fail["on"] = False
+    np.testing.assert_array_equal(tier.get("page"), payload)
+
+
+def test_engine_single_far_tier_backend(setup):
+    """The pager's parked pages and finished-sequence KV share ONE
+    FarMemoryTier (the KVOffloadTier duplicate storage path is gone)."""
+    cfg, params, _ = setup
+    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(16,),
+                 page_size=8, device_pages=5, offload_finished=True)
+    assert eng.far_tier is eng.pager.tier
+    assert eng.far_tier.amu is eng.pager.amu
+    rid = eng.submit(np.arange(7) % cfg.vocab_size, max_new_tokens=4)
+    eng.submit(np.arange(9) % cfg.vocab_size, max_new_tokens=4)
+    eng.run()
+    # finished pages and the aux residue live in the one tier
+    assert (rid, 0) in eng.far_tier and (rid, "aux") in eng.far_tier
+    import repro.serve.kv_cache as kvc
+    assert not hasattr(kvc, "KVOffloadTier")
+
+
+def test_fetch_finished_fault_keeps_entries(setup):
+    """The old KVOffloadTier.fetch popped its bookkeeping before the
+    transfers were verified — a fault lost the KV forever.  The far-tier
+    path must raise on the fault, keep every entry, and succeed on
+    retry."""
+    cfg, params, _ = setup
+    fail = {"on": False}
+    eng = Engine(cfg, params, max_batch=1, max_len=64, prefill_buckets=(16,),
+                 page_size=8, offload_finished=True,
+                 pager_factory=_flaky_pager_factory(1e-6, fail))
+    rid = eng.submit(np.arange(12) % cfg.vocab_size, max_new_tokens=4)
+    eng.run()
+    fail["on"] = True
+    with pytest.raises(AMUError):
+        eng.fetch_finished(rid)
+    assert (rid, "aux") in eng.far_tier     # nothing was discarded
+    assert (rid, 0) in eng.far_tier
+    fail["on"] = False
+    tree = eng.fetch_finished(rid)          # retry reassembles
+    assert np.asarray(tree.kv["k"]).shape[2] == eng.slot_tokens
+    assert (rid, "aux") not in eng.far_tier
+
+
+# ---------------------------------------------------------------------------
+# watermark-driven eviction loop (capacity pressure without preemption)
+# ---------------------------------------------------------------------------
+
+def test_watermark_eviction_loop_frees_frames(setup):
+    """With a low watermark set, cold RESIDENT frames (parked hot tails,
+    idle prefix-cache frames) are pushed to the far tier proactively —
+    the pager's balance() loop — instead of only on preemption."""
+    cfg, params, _ = setup
+    pre = np.arange(8) % cfg.vocab_size
+    prompts = [np.concatenate([pre, (np.arange(4) + 3 * i) % cfg.vocab_size])
+               for i in range(4)]
+    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(16,),
+                 page_size=4, device_pages=8, chunk_tokens=4,
+                 prefix_cache=True, watermark=WatermarkPolicy(low=2))
+    for p in prompts:
+        eng.submit(p, max_new_tokens=5)
+    out = eng.run()
+    assert len(out) == 4
+    assert eng.pager.stats.get("watermark_evictions", 0) > 0
+    # evicted cache pages were clean (far home written at intern time)
+    assert eng.pager.stats["clean_evict"] > 0
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: unit level
+# ---------------------------------------------------------------------------
+
+def test_page_hashes_roll_over_prefix():
+    a = page_hashes(np.arange(16, dtype=np.int32), 4)
+    b = page_hashes(np.arange(20, dtype=np.int32), 4)
+    assert len(a) == 4 and b[:4] == a
+    c = page_hashes(np.concatenate([[9], np.arange(1, 16)]).astype(np.int32), 4)
+    assert c[0] != a[0] and c[1] != a[1]    # chained: one token flips all
+
+
+def test_prefix_cache_caps_hits_before_last_token():
+    """A full-prompt hit must leave at least the final token to compute
+    (the first sampled token needs logits at plen - 1)."""
+    pool = PagePool(8, 4)
+    table = PageTable(pool)
+    pager = Pager(pool, table, page_nbytes=1 << 10)
+    cache = PrefixCache(pool, table, pager, page_size=4)
+    prompt = np.arange(8, dtype=np.int32)
+    table.register("donor")
+    table.ensure_capacity("donor", 8)
+    cache.intern(prompt, "donor", lambda phys: {"k": None, "v": None})
+    assert cache.stats["interned"] == 2
+    # same 8-token prompt: only page 0 is usable (page 1 holds token 7)
+    assert len(cache.match(prompt)) == 1
+    # longer prompt with the same prefix: both pages usable
+    assert len(cache.match(np.arange(12, dtype=np.int32))) == 2
+    # different first token: no hits (rolling hash covers the prefix)
+    other = np.concatenate([[5], np.arange(1, 12)]).astype(np.int32)
+    assert cache.match(other) == []
+
+
+def test_cow_break_remaps_shared_frame():
+    """remap_private gives a writer a private frame and keeps the other
+    users of a COW frame intact."""
+    pool = PagePool(8, 4)
+    table = PageTable(pool)
+    table.register("a")
+    table.register("b")
+    phys = table.ensure_capacity("a", 4) and table.entry("a", 0).phys
+    table.append_shared("b", phys)
+    pool.mark_cow(phys)
+    table.pin_page("b", 0)
+    assert pool.frames[phys].refs == 2
+    old, new = table.remap_private("b", 0)
+    assert old == phys and new != phys
+    assert pool.frames[phys].refs == 1      # a keeps the original
+    assert pool.frames[new].refs == 1 and pool.frames[new].pins == 1
+    assert table.entry("b", 0).phys == new
+    assert table.entry("a", 0).phys == phys
+    # sole-owned frames are a no-op
+    assert table.remap_private("a", 0) == (phys, phys)
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: engine end-to-end
+# ---------------------------------------------------------------------------
+
+def test_prefix_hits_skip_chunks_and_match_dense(setup):
+    """Requests sharing a system prompt skip its chunks (device hits)
+    yet generate exactly the dense engine's tokens."""
+    cfg, params, ref_cache = setup
+    pre = np.arange(12) % cfg.vocab_size
+    requests = [(np.concatenate([pre, (np.arange(4) + 7 * i)
+                                 % cfg.vocab_size]), 5) for i in range(6)]
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+
+    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(32,),
+                 page_size=4, chunk_tokens=4, prefix_cache=True)
+    for p, n in requests:
+        eng.submit(p, max_new_tokens=n)
+    out = eng.run()
+    assert out == ref
+    assert eng.stats["prefix_hits"] > 0
+    assert eng.stats["prefix_tokens_saved"] >= 12   # >= one full prefix
+    assert eng.prefix.stats["interned"] > 0
+
+
+def test_prefix_far_hit_while_arriving_matches_dense(setup):
+    """Prefix hits under a pool too small to keep the cache resident:
+    the shared pages are fetched from the far tier with multi-tick
+    latency, so later hits land while pages are still ARRIVING — the
+    resume-while-ARRIVING path applied to admission."""
+    cfg, params, ref_cache = setup
+    pre = np.arange(12) % cfg.vocab_size
+    requests = [(np.concatenate([pre, (np.arange(4) + 7 * i)
+                                 % cfg.vocab_size]), 5) for i in range(6)]
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+
+    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(32,),
+                 page_size=4, chunk_tokens=4, prefix_cache=True,
+                 device_pages=9, hot_tail_pages=0,
+                 pager_factory=_slow_pager_factory(2.5e-3))
+    for p, n in requests:
+        eng.submit(p, max_new_tokens=n)
+    out = eng.run()
+    assert out == ref
+    assert eng.stats["prefix_far_hits"] > 0         # far tier served hits
+    assert eng.pager.stats["arrived"] > 0           # via LATENCY aloads
+
+
+def test_prefix_far_hit_fault_mid_admission_recovers(setup):
+    """An AMU fault while a prefix far-hit's pages are being fetched
+    must not lose the request: the pager reverts ARRIVING → PARKED,
+    the retry refetches, and tokens still match dense."""
+    cfg, params, ref_cache = setup
+    pre = np.arange(12) % cfg.vocab_size
+    requests = [(np.concatenate([pre, (np.arange(4) + 7 * i)
+                                 % cfg.vocab_size]), 5) for i in range(4)]
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+
+    fail = {"on": False}
+    eng = Engine(cfg, params, max_batch=1, max_len=64, prefill_buckets=(32,),
+                 page_size=4, chunk_tokens=4, prefix_cache=True,
+                 device_pages=7, hot_tail_pages=0,
+                 pager_factory=_flaky_pager_factory(1e-4, fail))
+    rids = [eng.submit(p, max_new_tokens=n) for p, n in requests]
+    # run a few steps, then fault the link for a stretch of the run
+    eng.run(max_steps=4)
+    fail["on"] = True
+    eng.run(max_steps=6)
+    fail["on"] = False
+    out = eng.run()
+    assert out == ref
+    assert eng.stats["prefix_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the property: random interleavings stay token-exact
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       page_size=st.sampled_from([4, 8]),
+       spare_pages=st.integers(0, 4),
+       hot_tail=st.integers(0, 1),
+       low=st.integers(0, 2),
+       latency=st.floats(1e-5, 3e-3),
+       shared_prefix=st.integers(0, 12))
+def test_property_two_tier_engine_matches_dense(setup, seed, page_size,
+                                                spare_pages, hot_tail, low,
+                                                latency, shared_prefix):
+    """Random evict/park/finish/resume/prefix-hit interleavings: tight
+    pools force preemption + watermark eviction, slow pagers stretch
+    ARRIVING windows across steps, shared prefixes mix device and far
+    hits — output must equal the dense engine token-for-token."""
+    cfg, params, ref_cache = setup
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, shared_prefix).astype(np.int32)
+    n_req = int(rng.integers(3, 6))
+    requests = []
+    for _ in range(n_req):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(1, 13))).astype(np.int32)
+        prompt = np.concatenate([pre, tail]) if rng.random() < 0.6 else tail
+        requests.append((prompt[:28], int(rng.integers(2, 11))))
+
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+
+    need = max(pages_for(min(len(p) + n, 64), page_size)
+               for p, n in requests)
+    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_buckets=(32,),
+                 page_size=page_size, device_pages=need + spare_pages + low,
+                 hot_tail_pages=hot_tail, chunk_tokens=4,
+                 prefix_cache=True, watermark=WatermarkPolicy(low=low),
+                 pager_factory=_slow_pager_factory(latency))
+    for prompt, new in requests:
+        eng.submit(prompt, max_new_tokens=new)
+    out = eng.run()
+
+    assert out == ref
+    assert eng.stats["resumes"] == eng.stats["preemptions"]
+    # page accounting: only the prefix cache may retain frames
+    cache_pages = len(eng.page_table.logical_pages(
+        PREFIX_SEQ, PageState.RESIDENT))
+    assert eng.page_pool.n_used == cache_pages

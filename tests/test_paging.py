@@ -481,21 +481,32 @@ def test_engine_rejects_page_size_not_dividing_capacity(dense_setup):
 
 
 def test_engine_paged_offload_matches_dense_offload(dense_setup):
-    """The finished-sequence KVOffloadTier path (the one surviving user
-    of join_kv_pages) must park the same KV the dense engine parks."""
+    """Finished-sequence offload parks pages into THE far tier through
+    the pager (single FarMemoryTier backend — no sequence-granularity
+    side store); fetch_finished must reassemble exactly the KV a dense
+    (non-paged) engine ends up with in its cache slot."""
     from repro.serve.engine import Engine
+    from repro.serve.kv_cache import extract_slot
     cfg, params = dense_setup
     prompt = np.arange(7) % cfg.vocab_size
 
-    def run(paging):
-        eng = Engine(cfg, params, max_batch=1, max_len=64,
-                     prefill_buckets=(16,), offload_finished=True,
-                     page_size=8, paging=paging)
-        rid = eng.submit(prompt, max_new_tokens=4)
-        eng.run()
-        return eng.kv_tier.fetch(rid)
+    dense = Engine(cfg, params, max_batch=1, max_len=64,
+                   prefill_buckets=(16,), paging=False)
+    dense.submit(prompt, max_new_tokens=4)
+    dense.run()
+    dense_tree = extract_slot(dense.cache, 0, 1)
 
-    dense_tree, paged_tree = run(False), run(True)
+    eng = Engine(cfg, params, max_batch=1, max_len=64,
+                 prefill_buckets=(16,), offload_finished=True,
+                 page_size=8)
+    rid = eng.submit(prompt, max_new_tokens=4)
+    eng.run()
+    # the park traffic rode BULK astores on the shared AMU
+    assert eng.far_tier.amu.stats["astore"] > 0
+    assert (rid, "aux") in eng.far_tier
+    paged_tree = eng.fetch_finished(rid)
+    # fetch is consuming: a second reassembly has nothing to read
+    assert (rid, "aux") not in eng.far_tier
     dk = np.asarray(dense_tree.kv["k"])
     pk = np.asarray(paged_tree.kv["k"])
     # valid KV covers the prompt plus all but the last generated token
