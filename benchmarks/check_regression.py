@@ -10,6 +10,11 @@ dry-runs — any movement is a code change, not noise):
   shared-traffic fraction drops more than ``--threshold`` below the
   baseline, or when the 50%-shared row falls under the 1.5x acceptance
   floor,
+* ``slo_goodput_sweep`` — fails when the SLO-aware scheduler's
+  interactive-goodput ratio over watermark-FIFO drops more than
+  ``--threshold`` below the baseline at any swept oversubscription, or
+  when the 4x-oversubscription row falls under the 1.2x acceptance
+  floor,
 * roofline (``--roofline docs/ROOFLINE.md``) — diffs the fresh
   ``roofline_cell`` rows against the committed roofline table and fails
   when any cell's bottleneck class flips or its step-time lower bound
@@ -38,6 +43,10 @@ from typing import Dict, Tuple
 
 #: prefix_reuse_sweep acceptance floor: TTFT speedup at 50% shared traffic.
 PREFIX_FLOOR_AT_HALF = 1.5
+
+#: slo_goodput_sweep acceptance floor: interactive goodput of the
+#: SLO-aware scheduler over watermark-FIFO at 4x oversubscription.
+SLO_FLOOR_AT_4X = 1.2
 
 
 def _parse_fields(derived: str) -> Dict[str, float]:
@@ -99,6 +108,20 @@ def check_prefix_floor(cur_rows) -> bool:
     ok = speedup >= PREFIX_FLOOR_AT_HALF
     print(f"{'OK' if ok else 'FAIL'}: prefix_reuse_sweep shared=0.5 "
           f"ttft_speedup={speedup:.3f} (floor {PREFIX_FLOOR_AT_HALF})")
+    return not ok
+
+
+def check_slo_floor(cur_rows) -> bool:
+    """Absolute acceptance: >= 1.2x interactive goodput at 4x load."""
+    cur = sweep_rows(cur_rows, "slo_goodput_sweep", "oversub")
+    row = cur.get(4.0)
+    if row is None:
+        print("FAIL: slo_goodput_sweep has no oversub=4 row")
+        return True
+    ratio = row.get("goodput_ratio", 0.0)
+    ok = ratio >= SLO_FLOOR_AT_4X
+    print(f"{'OK' if ok else 'FAIL'}: slo_goodput_sweep oversub=4 "
+          f"goodput_ratio={ratio:.3f} (floor {SLO_FLOOR_AT_4X})")
     return not ok
 
 
@@ -201,6 +224,10 @@ def main(argv=None) -> int:
                           axis="shared", metric="ttft_speedup",
                           threshold=args.threshold)
     failed |= check_prefix_floor(cur)
+    failed |= check_sweep(cur, base, name="slo_goodput_sweep",
+                          axis="oversub", metric="goodput_ratio",
+                          threshold=args.threshold)
+    failed |= check_slo_floor(cur)
     if args.roofline is not None:
         failed |= check_roofline(cur, args.roofline, args.threshold)
     if failed:

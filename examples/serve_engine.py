@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import init_params
-from repro.serve.engine import Engine
+from repro.serve import (ChunkingConfig, Engine, EngineConfig,
+                         PagingConfig)
 
 
 def main():
@@ -31,9 +32,11 @@ def main():
     # engine must oversubscribe: preempt cold pages, prefetch on resume.
     # chunk_tokens=8: admission is the chunk queue — prompts prefill in
     # 8-token chunks fused with running decodes (no admission bubble).
-    eng = Engine(cfg, params, max_batch=4, max_len=96,
-                 prefill_buckets=(16, 32, 64), offload_finished=True,
-                 page_size=8, device_pages=12, chunk_tokens=8)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_len=96, prefill_buckets=(16, 32, 64),
+        paging=PagingConfig(page_size=8, device_pages=12,
+                            offload_finished=True),
+        chunking=ChunkingConfig(chunk_tokens=8)))
 
     rng = np.random.default_rng(7)
     n_requests = 10

@@ -281,8 +281,11 @@ class AMU:
 
     # -- issue path (aload / astore) ---------------------------------------
     def _issue(self, kind: str, nbytes: int, payload: Any,
-               config: Optional[AccessConfig]) -> int:
+               config: Optional[AccessConfig],
+               qos: Optional[QoS] = None) -> int:
         cfg = config or self.default_config
+        if qos is not None and qos != cfg.qos:
+            cfg = replace(cfg, qos=QoS(qos))
         if nbytes <= 0:
             raise AMUError(f"{kind}: nbytes must be positive, got {nbytes}")
         if self.outstanding >= self.max_outstanding:
@@ -301,21 +304,26 @@ class AMU:
 
     def aload(self, src: Any = None, nbytes: int = 0,
               config: Optional[AccessConfig] = None,
-              memory_kind: Optional[str] = "device") -> int:
+              memory_kind: Optional[str] = "device",
+              qos: Optional[QoS] = None) -> int:
         """Issue an asynchronous load (far memory → SPM/near tier).
 
         Returns the request id immediately (or FAILURE_CODE under the
-        FAIL policy when all outstanding slots are busy).
+        FAIL policy when all outstanding slots are busy).  ``qos``
+        overrides only the QoS class of the effective config — the
+        paper's per-instruction MACR override without callers having to
+        rebuild a whole :class:`AccessConfig`.
         """
         nbytes = nbytes or _nbytes_of(src)
-        return self._issue("aload", nbytes, (src, memory_kind), config)
+        return self._issue("aload", nbytes, (src, memory_kind), config, qos)
 
     def astore(self, src: Any = None, nbytes: int = 0,
                config: Optional[AccessConfig] = None,
-               memory_kind: Optional[str] = "pinned_host") -> int:
+               memory_kind: Optional[str] = "pinned_host",
+               qos: Optional[QoS] = None) -> int:
         """Issue an asynchronous store (SPM/near tier → far memory)."""
         nbytes = nbytes or _nbytes_of(src)
-        return self._issue("astore", nbytes, (src, memory_kind), config)
+        return self._issue("astore", nbytes, (src, memory_kind), config, qos)
 
     def _pump(self) -> None:
         """Move queued requests into flight and harvest completions."""

@@ -4,11 +4,21 @@
       --arch phi4-mini-3.8b --smoke --requests 16 --max-new 12 \
       --chunk-tokens 16
 
-With ``--chunk-tokens`` admission goes through the chunk queue: prompts
-are prefilled in chunks directly on the paged pool layout, fused with
-every running slot's decode token in one mixed step (no dense-prefill
-bubble).  ``--dense`` / ``--kernel-impl`` A/B the paged decode path
-against the dense per-slot cache and the kernel backends.
+Every ``--`` engine flag below is auto-generated from the
+:class:`repro.serve.config.EngineConfig` dataclass fields (one flag per
+knob, help text included), so the CLI cannot drift from the config API.
+Driver-level extras:
+
+  * ``--workload`` replaces the uniform synthetic requests with the
+    production traffic model (:mod:`repro.serve.workload`): bursty
+    diurnal arrivals, lognormal prompts, Zipf outputs, and an
+    interactive/batch tier split with per-request TTFT/TPOT SLOs,
+  * ``--slo`` is shorthand for ``--policy slo`` — goodput scheduling
+    (EDF chunk order, batch shedding, deadline-aware preemption onto
+    the pager's QoS windows); combine with ``--workload`` to see the
+    per-tier attainment report,
+  * ``--dense`` / ``--kernel-impl`` A/B the paged decode path against
+    the dense per-slot cache and the kernel backends.
 """
 
 from __future__ import annotations
@@ -21,7 +31,9 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke
 from repro.models.model import init_params
+from repro.serve.config import add_config_args, config_from_args
 from repro.serve.engine import Engine
+from repro.serve.workload import WorkloadSpec, generate
 
 
 def main(argv=None):
@@ -29,66 +41,68 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--offload-finished", action="store_true",
-                    help="park finished KV in the host far tier (AMU)")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="KV page granularity in token positions")
-    ap.add_argument("--device-pages", type=int, default=None,
-                    help="device page pool size; below max_batch * "
-                         "pages_per_seq the engine oversubscribes and "
-                         "preempts (default: no oversubscription)")
+    ap.add_argument("--max-new", type=int, default=12,
+                    help="new tokens per request (uniform mode)")
     ap.add_argument("--dense", action="store_true",
                     help="force the dense per-slot KV cache (A/B "
                          "reference for the paged decode path)")
-    ap.add_argument("--kernel-impl", default="auto",
-                    choices=("auto", "pallas", "interpret", "xla"),
-                    help="paged-attention backend (auto: Pallas on TPU, "
-                         "XLA gather elsewhere)")
-    ap.add_argument("--chunk-tokens", type=int, default=0,
-                    help="chunked paged prefill: prompt chunk size in "
-                         "tokens; 0 = legacy whole-prompt dense prefill "
-                         "at admission")
-    ap.add_argument("--chunk-slots", type=int, default=2,
-                    help="max admitting slots whose chunks fuse into one "
-                         "mixed prefill+decode step")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="content-addressed cross-request prefix sharing: "
-                         "full prompt pages are interned by rolling hash "
-                         "and later requests skip prefill chunks whose "
-                         "pages hit (requires --chunk-tokens; dense/moe "
-                         "global-attention families)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many identical prefix tokens to "
                          "every synthetic prompt (system-prompt traffic "
                          "model, makes --prefix-cache visible)")
+    ap.add_argument("--workload", action="store_true",
+                    help="draw requests from the production traffic "
+                         "model (bursty/diurnal arrivals, heavy-tailed "
+                         "lengths, interactive/batch tiers with SLOs)")
+    ap.add_argument("--workload-rate", type=float, default=200.0,
+                    help="mean arrival rate for --workload "
+                         "(requests per virtual second)")
+    ap.add_argument("--slo", action="store_true",
+                    help="shorthand for --policy slo (goodput "
+                         "scheduling; pairs with --workload)")
     ap.add_argument("--seed", type=int, default=0)
+    add_config_args(ap)     # one --flag per EngineConfig field
     args = ap.parse_args(argv)
+
+    overrides = {}
+    if args.dense:
+        overrides["paging_enabled"] = False
+    if args.slo:
+        overrides["scheduler_policy"] = "slo"
+    econf = config_from_args(args, **overrides)
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=args.max_len,
-                 offload_finished=args.offload_finished,
-                 page_size=args.page_size, device_pages=args.device_pages,
-                 paging=not args.dense, kernel_impl=args.kernel_impl,
-                 chunk_tokens=args.chunk_tokens or None,
-                 chunk_slots=args.chunk_slots,
-                 prefix_cache=args.prefix_cache)
+    eng = Engine(cfg, params, econf)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
     t0 = time.time()
-    for i in range(args.requests):
-        plen = int(rng.integers(4, min(32, args.max_len // 2)))
-        prompt = np.concatenate(
-            [shared, rng.integers(0, cfg.vocab_size, plen)])
-        kwargs = {}
-        if cfg.family == "encdec":
-            kwargs["src_embeds"] = rng.standard_normal(
-                (plen, cfg.d_model)).astype(np.float32)
-        eng.submit(prompt, max_new_tokens=args.max_new, **kwargs)
+    if args.workload:
+        spec = WorkloadSpec(rate=args.workload_rate,
+                            max_prompt=max(4, econf.max_len // 2))
+        for wr in generate(args.requests, spec, seed=args.seed):
+            plen = min(wr.prompt_len, econf.max_len - wr.output_len - 1)
+            prompt = np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, max(1, plen))])
+            kwargs = {}
+            if cfg.family == "encdec":
+                kwargs["src_embeds"] = rng.standard_normal(
+                    (len(prompt), cfg.d_model)).astype(np.float32)
+            eng.submit(prompt, max_new_tokens=wr.output_len,
+                       tier=wr.tier, ttft_slo=wr.ttft_slo,
+                       tpot_slo=wr.tpot_slo, arrival_t=wr.arrival_t,
+                       **kwargs)
+    else:
+        for i in range(args.requests):
+            plen = int(rng.integers(4, min(32, econf.max_len // 2)))
+            prompt = np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, plen)])
+            kwargs = {}
+            if cfg.family == "encdec":
+                kwargs["src_embeds"] = rng.standard_normal(
+                    (plen, cfg.d_model)).astype(np.float32)
+            eng.submit(prompt, max_new_tokens=args.max_new, **kwargs)
     out = eng.run()
     wall = time.time() - t0
 
@@ -98,7 +112,7 @@ def main(argv=None):
     print(f"[serve] {len(out)} requests, {total_new} tokens in {wall:.2f}s "
           f"({total_new / wall:.1f} tok/s)")
     print(f"[serve] decode steps {eng.stats['steps']} "
-          f"(batch occupancy {total_new / max(1, eng.stats['steps'] * args.max_batch):.2f})")
+          f"(batch occupancy {total_new / max(1, eng.stats['steps'] * econf.max_batch):.2f})")
     print(f"[serve] mean TTFT {np.mean(ttft)*1e3:.0f} ms, "
           f"mean latency {np.mean(lat)*1e3:.0f} ms")
     if eng.paging:
@@ -115,8 +129,19 @@ def main(argv=None):
               f"({eng.stats['prefix_far_hits']} far), "
               f"{eng.stats['prefix_tokens_saved']} prefill tokens saved, "
               f"{eng.prefix.stats['interned']} pages interned")
-    if args.offload_finished:
+    if econf.paging.offload_finished:
         print(f"[serve] far-tier AMU stats: {dict(eng.far_tier.amu.stats)}")
+    if args.workload or args.slo:
+        rep = eng.slo_report()
+        for tier in ("interactive", "batch"):
+            tr = rep[tier]
+            print(f"[serve] {tier}: {tr['n']} reqs, "
+                  f"attainment {tr['attainment']:.2f}, "
+                  f"goodput {tr['goodput']:.1f} tok/s (virtual), "
+                  f"ttft p95 {tr['ttft_p95']*1e3:.1f} ms")
+        print(f"[serve] scheduler: policy={econf.scheduler.policy} "
+              f"shed={eng.stats['shed_admissions']} "
+              f"deadline_misses={eng.stats['deadline_misses']}")
     return out
 
 

@@ -29,14 +29,15 @@ the page is the unit of transfer, residency, eviction and compute —
 see ``docs/ARCHITECTURE.md`` for the paper-to-code map.
 """
 
-from repro.paging.events import Event, EventKind, EventLoop, WatermarkPolicy
+from repro.paging.events import (DeadlineQueue, Event, EventKind, EventLoop,
+                                 WatermarkPolicy)
 from repro.paging.page_table import (NOT_MAPPED, Frame, PagePool, PageState,
                                      PageTable, PagingError, pages_for)
 from repro.paging.pager import Pager, QoSWindows
 from repro.paging.prefix_cache import PREFIX_SEQ, PrefixCache, page_hashes
 
 __all__ = [
-    "Event", "EventKind", "EventLoop", "WatermarkPolicy",
+    "DeadlineQueue", "Event", "EventKind", "EventLoop", "WatermarkPolicy",
     "NOT_MAPPED", "Frame", "PagePool", "PageState", "PageTable",
     "PagingError", "pages_for", "Pager", "QoSWindows",
     "PREFIX_SEQ", "PrefixCache", "page_hashes",

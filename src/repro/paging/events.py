@@ -26,12 +26,15 @@ from __future__ import annotations
 
 import collections
 import enum
+import heapq
+import itertools
 from dataclasses import dataclass
-from typing import Any, Callable, Deque, Dict, List
+from typing import Any, Callable, Deque, Dict, List, Tuple
 
 from repro.paging.page_table import PagePool, PagingError
 
-__all__ = ["EventKind", "Event", "EventLoop", "WatermarkPolicy"]
+__all__ = ["EventKind", "Event", "EventLoop", "WatermarkPolicy",
+           "DeadlineQueue"]
 
 
 class EventKind(enum.Enum):
@@ -40,6 +43,7 @@ class EventKind(enum.Enum):
     ADMIT = "admit"                  # admission decision for a request
     PREEMPT = "preempt"              # a victim must shed pages
     COMPLETE = "complete"            # a sequence finished
+    DEADLINE = "deadline"            # a request's SLO deadline passed
 
 
 @dataclass
@@ -80,6 +84,44 @@ class WatermarkPolicy:
     def deficit(self, pool: PagePool, pages_needed: int) -> int:
         """Frames that must be freed before ``pages_needed`` fits."""
         return max(0, pages_needed + self.low - pool.n_free)
+
+
+class DeadlineQueue:
+    """Min-heap of (time, payload) deadlines on the engine's virtual
+    clock.  Each tick the SLO scheduler pops everything due and posts a
+    ``DEADLINE`` event per entry — the timer half of the event-driven
+    model (§2.3.2), where passing time (a blown TTFT deadline) is as
+    much a scheduling event as an arriving page.
+
+    Example::
+
+        dq = DeadlineQueue()
+        dq.schedule(0.050, rid)            # TTFT deadline at t=50ms
+        for t, rid in dq.pop_due(clock()):
+            loop.post(EventKind.DEADLINE, (t, rid))
+    """
+
+    def __init__(self) -> None:
+        self._heap: List[Tuple[float, int, Any]] = []
+        self._seq = itertools.count()      # FIFO among equal deadlines
+
+    def schedule(self, t: float, payload: Any = None) -> None:
+        heapq.heappush(self._heap, (float(t), next(self._seq), payload))
+
+    def pop_due(self, now: float) -> List[Tuple[float, Any]]:
+        """All (deadline, payload) entries with deadline <= ``now``."""
+        due: List[Tuple[float, Any]] = []
+        while self._heap and self._heap[0][0] <= now:
+            t, _, payload = heapq.heappop(self._heap)
+            due.append((t, payload))
+        return due
+
+    def peek(self) -> float:
+        """Earliest scheduled deadline (inf when empty)."""
+        return self._heap[0][0] if self._heap else float("inf")
+
+    def __len__(self) -> int:
+        return len(self._heap)
 
 
 class EventLoop:

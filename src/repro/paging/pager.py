@@ -94,6 +94,7 @@ class Pager:
         *,
         page_nbytes: int = 1 << 16,
         latency_window: int = 16,
+        standard_window: int = 8,
         bulk_window: int = 4,
         granularity: Optional[int] = None,
         read_frame: Optional[Callable[[int], Any]] = None,
@@ -106,12 +107,14 @@ class Pager:
         # than per-frame host copies, ``Frame.data`` is None and this is
         # how eviction obtains the writeback payload.
         self.read_frame = read_frame
-        self.amu = amu or AMU(max_outstanding=latency_window + bulk_window)
+        self.amu = amu or AMU(max_outstanding=latency_window
+                              + standard_window + bulk_window)
         self.page_nbytes = int(page_nbytes)
         g = granularity or self.page_nbytes
         self.fetch_config = AccessConfig(granularity_bytes=g, qos=QoS.LATENCY)
         self.evict_config = AccessConfig(granularity_bytes=g, qos=QoS.BULK)
         self.windows = QoSWindows({QoS.LATENCY: latency_window,
+                                   QoS.STANDARD: standard_window,
                                    QoS.BULK: bulk_window})
         # THE far tier: home copies of every cold page (and, for the
         # serving engine, finished-sequence KV + aux residues) live in
@@ -120,30 +123,39 @@ class Pager:
         # completions consumed by either party on the shared queue are
         # forwarded to the other (see poll / _finish / _reap_failed).
         self.tier = tier if tier is not None else FarMemoryTier(self.amu)
-        self._inflight: Dict[int, Tuple[str, Hashable, int]] = {}
+        # in-flight request -> (kind, seq, logical, qos): the QoS class
+        # travels *with* the request instead of being re-derived from
+        # the kind string, so per-request overrides (the scheduler's
+        # tier -> QoS mapping) release the right window on completion
+        self._inflight: Dict[int, Tuple[str, Hashable, int, QoS]] = {}
         self._page_rid: Dict[Tuple[Hashable, int], int] = {}
         self._pending: Dict[QoS, Deque[Tuple[str, Hashable, int,
                                              Callable[[], int]]]] = {
             QoS.LATENCY: collections.deque(),
+            QoS.STANDARD: collections.deque(),
             QoS.BULK: collections.deque(),
         }
         self.stats = collections.Counter()
 
     # -- write path: park / writeback ---------------------------------------
     def writeback(self, seq: Hashable, logical: int, data: Any,
-                  tokens: int = -1) -> None:
-        """Park one RESIDENT page: the far tier becomes its home (BULK
-        astore models the transfer), and this mapping's device frame is
-        released.  ``tokens`` tags how many positions of the page were
-        valid when stored, so a later park can tell a current far copy
-        from a stale one (clean-eviction fast path)."""
+                  tokens: int = -1, qos: Optional[QoS] = None) -> None:
+        """Park one RESIDENT page: the far tier becomes its home (an
+        astore models the transfer — BULK by default, overridable per
+        call for e.g. an interactive-tier preemption whose pages should
+        not queue behind batch-tier parks), and this mapping's device
+        frame is released.  ``tokens`` tags how many positions of the
+        page were valid when stored, so a later park can tell a current
+        far copy from a stale one (clean-eviction fast path)."""
+        qos = QoS.BULK if qos is None else QoS(qos)
         self.table.mark_parked(seq, logical)
         self.tier.put((seq, logical), data, nbytes=self.page_nbytes,
                       tokens=tokens)
         self.stats["writeback"] += 1
-        self._issue(QoS.BULK, "astore", seq, logical,
+        self._issue(qos, "astore", seq, logical,
                     lambda: self.amu.astore(data, nbytes=self.page_nbytes,
-                                            config=self.evict_config))
+                                            config=self.evict_config,
+                                            qos=qos))
 
     def park_clean(self, seq: Hashable, logical: int) -> None:
         """Park a page whose far-tier home copy is already current —
@@ -155,9 +167,10 @@ class Pager:
         self.table.mark_parked(seq, logical)
         self.stats["clean_evict"] += 1
 
-    def evict(self, seq: Hashable, logical: int) -> None:
-        """Evict one resident page: BULK writeback when its frame is
-        dirty, frame free only when clean."""
+    def evict(self, seq: Hashable, logical: int,
+              qos: Optional[QoS] = None) -> None:
+        """Evict one resident page: writeback (BULK unless overridden)
+        when its frame is dirty, frame free only when clean."""
         pte = self.table.entry(seq, logical)
         if pte.state is not PageState.RESIDENT:
             raise PagingError(
@@ -170,7 +183,7 @@ class Pager:
             # carry the frame's valid-token tag into the far entry so a
             # later park of the same content still hits the clean fast
             # path (an untagged writeback would poison it forever)
-            self.writeback(seq, logical, data, tokens=frame.tokens)
+            self.writeback(seq, logical, data, tokens=frame.tokens, qos=qos)
         else:
             self.park_clean(seq, logical)
         self.stats["evictions"] += 1
@@ -212,9 +225,13 @@ class Pager:
         return done
 
     # -- read path: prefetch / demand fetch ---------------------------------
-    def prefetch(self, seq: Hashable, logical: int) -> bool:
-        """Begin a LATENCY aload of one PARKED page (non-blocking).
+    def prefetch(self, seq: Hashable, logical: int,
+                 qos: Optional[QoS] = None) -> bool:
+        """Begin an aload of one PARKED page (non-blocking; LATENCY by
+        default — the scheduler demotes batch-tier resumes to STANDARD
+        so they cannot crowd interactive fetches out of the window).
         Returns False when the page is already resident or in flight."""
+        qos = QoS.LATENCY if qos is None else QoS(qos)
         pte = self.table.entry(seq, logical)
         if pte.state in (PageState.RESIDENT, PageState.ARRIVING):
             return False
@@ -224,12 +241,14 @@ class Pager:
         self.table.mark_arriving(seq, logical)
         src = self.tier.home((seq, logical))
         self.stats["prefetch"] += 1
-        self._issue(QoS.LATENCY, "aload", seq, logical,
+        self._issue(qos, "aload", seq, logical,
                     lambda: self.amu.aload(src, nbytes=self.page_nbytes,
-                                           config=self.fetch_config))
+                                           config=self.fetch_config,
+                                           qos=qos))
         return True
 
-    def prefetch_seq(self, seq: Hashable, *, tail_first: bool = True) -> int:
+    def prefetch_seq(self, seq: Hashable, *, tail_first: bool = True,
+                     qos: Optional[QoS] = None) -> int:
         """Prefetch every parked page of ``seq``; with ``tail_first`` the
         hot tail (most recent positions) is issued — and so arrives —
         first, which is the order a rescheduled decode touches them."""
@@ -238,7 +257,7 @@ class Pager:
             parked = parked[::-1]
         n = 0
         for logical in parked:
-            n += bool(self.prefetch(seq, logical))
+            n += bool(self.prefetch(seq, logical, qos=qos))
         return n
 
     def poll(self) -> List[Tuple[Hashable, int]]:
@@ -282,8 +301,8 @@ class Pager:
         slot and, for an aload, free the reserved frame and mark the
         page PARKED again (the far copy is still intact, so a later
         prefetch simply retries)."""
-        kind, seq, logical = self._inflight.pop(rid)
-        self.windows.release(self._qos_of(kind))
+        kind, seq, logical, qos = self._inflight.pop(rid)
+        self.windows.release(qos)
         self.stats[f"{kind}_failed"] += 1
         if kind != "aload":
             return
@@ -373,26 +392,28 @@ class Pager:
         if self.windows.has_room(qos):
             self.windows.take(qos)
             rid = submit()
-            self._track(rid, kind, seq, logical)
+            self._track(rid, kind, seq, logical, qos)
         else:
             self.stats["window_queued"] += 1
             if kind == "aload":
                 self._page_rid[(seq, logical)] = _PENDING
             self._pending[qos].append((kind, seq, logical, submit))
 
-    def _track(self, rid: int, kind: str, seq: Hashable, logical: int) -> None:
-        self._inflight[rid] = (kind, seq, logical)
+    def _track(self, rid: int, kind: str, seq: Hashable, logical: int,
+               qos: QoS) -> None:
+        self._inflight[rid] = (kind, seq, logical, qos)
         if kind == "aload":
             self._page_rid[(seq, logical)] = rid
 
     def _pump(self) -> None:
-        for qos in (QoS.LATENCY, QoS.BULK):       # latency class drains first
+        # latency class drains first, bulk last (§2.2 QoS-ordered issue)
+        for qos in (QoS.LATENCY, QoS.STANDARD, QoS.BULK):
             dq = self._pending[qos]
             while dq and self.windows.has_room(qos):
                 kind, seq, logical, submit = dq.popleft()
                 self.windows.take(qos)
                 rid = submit()
-                self._track(rid, kind, seq, logical)
+                self._track(rid, kind, seq, logical, qos)
 
     def _force_issue(self, seq: Hashable, logical: int) -> None:
         for qos, dq in self._pending.items():
@@ -403,7 +424,7 @@ class Pager:
                         self._drain_one(qos)
                     self.windows.take(qos)
                     rid = submit()
-                    self._track(rid, kind, seq, logical)
+                    self._track(rid, kind, seq, logical, qos)
                     return
         raise PagingError(f"page ({seq!r}, {logical}) not pending")
 
@@ -412,8 +433,8 @@ class Pager:
         A drained request that *failed* is reaped like any other fault —
         window released, ARRIVING page reverted — never treated as a
         successful arrival."""
-        for rid, (kind, _, _) in list(self._inflight.items()):
-            if self._qos_of(kind) is qos:
+        for rid, (kind, _, _, q) in list(self._inflight.items()):
+            if q is qos:
                 req = self.amu.wait(rid)
                 if req.error is not None:
                     self._fail_one(rid)
@@ -421,9 +442,6 @@ class Pager:
                     self._finish(rid)
                 return
         raise PagingError(f"QoS window {qos.name} full with nothing in flight")
-
-    def _qos_of(self, kind: str) -> QoS:
-        return QoS.LATENCY if kind == "aload" else QoS.BULK
 
     def _finish(self, rid: int) -> Optional[Tuple[Hashable, int]]:
         """Bookkeeping for one consumed completion id."""
@@ -434,8 +452,8 @@ class Pager:
             if self.tier.amu is self.amu:
                 self.tier.complete_rid(rid, self.amu.request(rid).payload)
             return None
-        kind, seq, logical = entry
-        self.windows.release(self._qos_of(kind))
+        kind, seq, logical, qos = entry
+        self.windows.release(qos)
         self._pump()
         if kind != "aload":
             return None

@@ -1,12 +1,26 @@
 """repro.serve — continuous-batching inference over the paged KV pool.
 
-Two modules:
+Four modules:
 
+  * :mod:`repro.serve.config` — the grouped, frozen
+    :class:`~repro.serve.config.EngineConfig` construction API
+    (:class:`~repro.serve.config.PagingConfig` /
+    :class:`~repro.serve.config.ChunkingConfig` /
+    :class:`~repro.serve.config.SchedulerConfig`), the
+    :class:`~repro.serve.config.Tier` priority enum and the injected
+    :class:`~repro.serve.config.VirtualClock` every request timestamp
+    goes through,
   * :mod:`repro.serve.engine` — the serving engine: chunk-queue
     admission (chunked paged prefill fused with decode in one mixed
     step), free-page-watermark preemption/resume over
-    :mod:`repro.paging`, and the event-driven scheduler loop (the
-    paper's §2.3.2 model applied to requests),
+    :mod:`repro.paging`, the event-driven scheduler loop (the paper's
+    §2.3.2 model applied to requests) and the pluggable
+    :class:`~repro.serve.engine.SchedulerPolicy` layer (``watermark``
+    utilisation scheduling vs ``slo`` goodput scheduling that maps
+    priority tiers onto the pager's QoS windows),
+  * :mod:`repro.serve.workload` — the production traffic model (bursty
+    diurnal arrivals, lognormal/Zipf lengths, interactive-vs-batch
+    tiers with per-request TTFT/TPOT SLOs),
   * :mod:`repro.serve.kv_cache` — slot bookkeeping around the batched
     device cache: the :class:`~repro.serve.kv_cache.SlotPool`, dense
     slot extract/insert (the ``paging=False`` fallback path), and page
@@ -17,10 +31,21 @@ Two modules:
 
 Minimal use::
 
-    from repro.serve.engine import Engine
-    eng = Engine(cfg, params, max_batch=4, max_len=256, chunk_tokens=32)
+    from repro.serve import Engine, EngineConfig, ChunkingConfig
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_len=256,
+        chunking=ChunkingConfig(chunk_tokens=32)))
     rid = eng.submit(prompt_tokens, max_new_tokens=16)
     tokens = eng.run()[rid]
 
 ``docs/ARCHITECTURE.md`` maps every piece back to the paper.
 """
+
+from repro.serve.config import (ChunkingConfig, EngineConfig, PagingConfig,
+                                SchedulerConfig, Tier, VirtualClock)
+from repro.serve.engine import Engine, Request, SchedulerPolicy
+
+__all__ = [
+    "Engine", "Request", "SchedulerPolicy", "EngineConfig", "PagingConfig",
+    "ChunkingConfig", "SchedulerConfig", "Tier", "VirtualClock",
+]

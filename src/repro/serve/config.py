@@ -1,0 +1,334 @@
+"""Engine configuration — the grouped, frozen construction API.
+
+``Engine.__init__`` grew one keyword argument per PR until the flat
+signature hit 18 knobs with the SLO scheduler about to push it past 25.
+This module is the redesign: one frozen :class:`EngineConfig` dataclass
+with grouped sub-configs —
+
+  * :class:`PagingConfig`    — the device page pool + far tier knobs,
+  * :class:`ChunkingConfig`  — chunk-queue admission + prefix sharing,
+  * :class:`SchedulerConfig` — scheduling policy, virtual clock, and the
+    per-request SLO defaults the SLO-aware scheduler consumes,
+
+— and the machinery that keeps every consumer in lockstep with it:
+
+  * ``Engine(cfg, params, EngineConfig(...))`` is the construction path;
+    the old flat kwargs are accepted for one release through
+    :func:`engine_config_from_kwargs` (DeprecationWarning + translate),
+  * ``launch/serve`` *auto-generates* its ``--`` flags from these
+    dataclass fields (:func:`add_config_args` /
+    :func:`config_from_args`), so the CLI cannot drift from the API,
+  * :class:`VirtualClock` is the one injected time source every request
+    timestamp goes through — admission, first token, per-token,
+    completion — so SLO measurement is deterministic in tests and sims
+    (the engine advances it by ``step_dt`` per tick in lockstep with
+    the pager's simulated AMU backend).
+
+Example::
+
+    from repro.serve import Engine, EngineConfig, PagingConfig
+
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_len=256,
+        paging=PagingConfig(page_size=16, device_pages=48),
+        chunking=ChunkingConfig(chunk_tokens=32),
+        scheduler=SchedulerConfig(policy="slo", ttft_slo=0.05)))
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import enum
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+from repro.paging import WatermarkPolicy
+
+__all__ = [
+    "Tier", "VirtualClock", "PagingConfig", "ChunkingConfig",
+    "SchedulerConfig", "EngineConfig", "engine_config_from_kwargs",
+    "add_config_args", "config_from_args",
+]
+
+
+class Tier(enum.IntEnum):
+    """Request priority tier — the production traffic split the SLO
+    scheduler maps onto the paper's QoS classes (interactive traffic
+    rides LATENCY-QoS far-memory fetches, batch rides BULK/STANDARD)."""
+
+    INTERACTIVE = 0     # tight TTFT/TPOT SLOs; chat-style traffic
+    BATCH = 1           # loose SLOs; shed first under overload
+
+
+class VirtualClock:
+    """Deterministic injected clock: ``now`` advances only via
+    :meth:`advance`.  The engine advances it by ``step_dt`` per event
+    tick, in lockstep with the pager's simulated AMU backend, so every
+    request timestamp (arrival, first token, per-token, completion)
+    lives on one reproducible time axis.  Pass ``time.monotonic`` as
+    ``SchedulerConfig.clock`` to get wall-clock telemetry instead."""
+
+    def __init__(self, start: float = 0.0) -> None:
+        self.now = float(start)
+
+    def advance(self, dt: float) -> float:
+        self.now += dt
+        return self.now
+
+    def __call__(self) -> float:
+        return self.now
+
+
+def _f(default, help_: str, *, cli: bool = True, choices=None, **kw):
+    """Field with CLI metadata (help string, generation opt-out)."""
+    md = {"help": help_, "cli": cli}
+    if choices is not None:
+        md["choices"] = choices
+    if isinstance(default, (list, dict, set)):
+        return field(default_factory=lambda: default, metadata=md)
+    return field(default=default, metadata=md, **kw)
+
+
+@dataclass(frozen=True)
+class PagingConfig:
+    """Device page pool + far tier: the near/far KV hierarchy knobs."""
+
+    enabled: Optional[bool] = _f(
+        None, "paged KV (None: auto — paged when the family has "
+        "attention KV); False forces the dense per-slot cache", cli=False)
+    page_size: int = _f(16, "KV page granularity in token positions")
+    device_pages: Optional[int] = _f(
+        None, "device page pool size; below max_batch * pages_per_seq "
+        "the engine oversubscribes and preempts")
+    hot_tail_pages: int = _f(
+        1, "pages of a preempted sequence's hot tail kept pooled")
+    offload_finished: bool = _f(
+        False, "park finished KV in the host far tier (AMU)")
+    watermark: Optional[WatermarkPolicy] = _f(
+        None, "free-page watermark policy object", cli=False)
+    pager_factory: Optional[Callable] = _f(
+        None, "custom Pager factory (tests: simulated-latency AMU)",
+        cli=False)
+
+
+@dataclass(frozen=True)
+class ChunkingConfig:
+    """Chunk-queue admission (chunked paged prefill) + prefix sharing."""
+
+    chunk_tokens: Optional[int] = _f(
+        None, "chunked paged prefill: prompt chunk size in tokens; "
+        "unset = legacy whole-prompt dense prefill at admission")
+    chunk_slots: int = _f(
+        2, "max admitting slots whose chunks fuse into one mixed "
+        "prefill+decode step")
+    prefix_cache: bool = _f(
+        False, "content-addressed cross-request prefix sharing "
+        "(requires chunk_tokens; dense/moe global-attention families)")
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Scheduling policy + the SLO knobs the goodput scheduler consumes.
+
+    ``policy="watermark"`` is the PR-4 scheduler: FIFO admission,
+    newest-admitted-first preemption, admit-order chunk selection —
+    utilization-maximizing, SLO-blind.  ``policy="slo"`` makes every
+    one of those decisions deadline-aware: admission sheds batch-tier
+    load first, preemption evicts the slot whose SLO is already blown
+    or furthest from its deadline, chunk selection runs earliest
+    TTFT deadline first, and the priority tier maps onto the pager's
+    QoS windows (interactive fetches ride LATENCY, batch parks ride
+    BULK) — §2.2 MACR QoS applied at request granularity."""
+
+    policy: str = _f("watermark", "scheduling policy",
+                     choices=("watermark", "slo"))
+    step_dt: float = _f(
+        1e-3, "virtual seconds one engine tick advances the clock "
+        "(and the pager's simulated AMU backend)")
+    ttft_slo: Optional[float] = _f(
+        None, "default time-to-first-token SLO (virtual s) stamped on "
+        "requests submitted without one")
+    tpot_slo: Optional[float] = _f(
+        None, "default time-per-output-token SLO (virtual s) stamped "
+        "on requests submitted without one")
+    batch_headroom: int = _f(
+        2, "extra free pages (beyond the low watermark) a BATCH-tier "
+        "admission must leave — the load-shedding margin")
+    clock: Optional[Callable[[], float]] = _f(
+        None, "injected clock; None = engine-owned VirtualClock "
+        "advanced step_dt per tick (deterministic telemetry)", cli=False)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Everything ``Engine.__init__`` takes besides the model + params."""
+
+    max_batch: int = _f(4, "decode slots (fixed compiled batch)")
+    max_len: int = _f(256, "per-sequence token capacity")
+    prefill_buckets: Tuple[int, ...] = _f(
+        (32, 64, 128, 256), "dense-prefill padding buckets "
+        "(comma-separated on the CLI)")
+    greedy: bool = _f(True, "greedy sampling", cli=False)
+    kernel_impl: str = _f(
+        "auto", "paged-attention backend",
+        choices=("auto", "pallas", "interpret", "xla"))
+    mesh: Any = _f(None, "jax device mesh for the sharded step",
+                   cli=False)
+    paging: PagingConfig = field(default_factory=PagingConfig,
+                                 metadata={"cli": True})
+    chunking: ChunkingConfig = field(default_factory=ChunkingConfig,
+                                     metadata={"cli": True})
+    scheduler: SchedulerConfig = field(default_factory=SchedulerConfig,
+                                       metadata={"cli": True})
+
+
+# -- legacy flat-kwarg shim ---------------------------------------------------
+
+#: old Engine.__init__ kwarg -> (sub-config attr | None, field name)
+_LEGACY_MAP = {
+    "max_batch": (None, "max_batch"),
+    "max_len": (None, "max_len"),
+    "prefill_buckets": (None, "prefill_buckets"),
+    "greedy": (None, "greedy"),
+    "mesh": (None, "mesh"),
+    "kernel_impl": (None, "kernel_impl"),
+    "paging": ("paging", "enabled"),
+    "page_size": ("paging", "page_size"),
+    "device_pages": ("paging", "device_pages"),
+    "hot_tail_pages": ("paging", "hot_tail_pages"),
+    "offload_finished": ("paging", "offload_finished"),
+    "watermark": ("paging", "watermark"),
+    "pager_factory": ("paging", "pager_factory"),
+    "chunk_tokens": ("chunking", "chunk_tokens"),
+    "chunk_slots": ("chunking", "chunk_slots"),
+    "prefix_cache": ("chunking", "prefix_cache"),
+    "step_dt": ("scheduler", "step_dt"),
+    "clock": ("scheduler", "clock"),
+}
+
+
+def engine_config_from_kwargs(base: Optional[EngineConfig] = None,
+                              **kwargs) -> EngineConfig:
+    """Translate the pre-EngineConfig flat kwargs (one DeprecationWarning
+    per construction); unknown names raise TypeError like any bad kwarg."""
+    unknown = set(kwargs) - set(_LEGACY_MAP)
+    if unknown:
+        raise TypeError(
+            f"Engine() got unexpected keyword arguments {sorted(unknown)}; "
+            "see repro.serve.config.EngineConfig for the supported fields")
+    warnings.warn(
+        "flat Engine(**kwargs) construction is deprecated; build an "
+        "EngineConfig (repro.serve.config) instead: "
+        "Engine(cfg, params, EngineConfig(...))",
+        DeprecationWarning, stacklevel=3)
+    cfg = base or EngineConfig()
+    top: dict = {}
+    subs: dict = {"paging": {}, "chunking": {}, "scheduler": {}}
+    for name, value in kwargs.items():
+        group, fname = _LEGACY_MAP[name]
+        if group is None:
+            top[fname] = value
+        else:
+            subs[group][fname] = value
+    for group, vals in subs.items():
+        if vals:
+            top[group] = dataclasses.replace(getattr(cfg, group), **vals)
+    return dataclasses.replace(cfg, **top)
+
+
+# -- CLI auto-generation ------------------------------------------------------
+# launch/serve builds its --flags from the dataclass fields above, so a
+# new knob lands on the CLI (with its help string) the moment it lands
+# in the config — the API and the CLI cannot drift.
+
+_GROUPS = ("paging", "chunking", "scheduler")
+
+
+def _cli_fields(dc_type):
+    for fld in dataclasses.fields(dc_type):
+        md = fld.metadata
+        if not md.get("cli", False):
+            continue
+        if fld.name in _GROUPS:
+            continue
+        yield fld
+
+
+def _scalar_type(fld):
+    """CLI parse type for a field (Optional[X] unwraps to X)."""
+    t = fld.type
+    for base in ("int", "float", "str", "bool"):
+        if t == base or t.startswith(f"Optional[{base}]"):
+            return {"int": int, "float": float,
+                    "str": str, "bool": bool}[base]
+    if "Tuple[int" in t:
+        return lambda s: tuple(int(x) for x in s.split(","))
+    raise TypeError(f"field {fld.name}: no CLI mapping for type {t!r}")
+
+
+def _default_of(fld):
+    if fld.default is not dataclasses.MISSING:
+        return fld.default
+    return fld.default_factory()       # pragma: no cover - no such field
+
+
+def add_config_args(parser: argparse.ArgumentParser) -> None:
+    """Add one ``--flag`` per CLI-visible :class:`EngineConfig` field
+    (top level + every sub-config; names are unique by construction)."""
+    seen = set()
+    for dc in (EngineConfig, PagingConfig, ChunkingConfig,
+               SchedulerConfig):
+        for fld in _cli_fields(dc):
+            if fld.name in seen:
+                raise TypeError(
+                    f"duplicate CLI field name {fld.name!r} across "
+                    "EngineConfig sub-configs")
+            seen.add(fld.name)
+            flag = "--" + fld.name.replace("_", "-")
+            typ = _scalar_type(fld)
+            default = _default_of(fld)
+            help_ = fld.metadata.get("help", "")
+            if typ is bool:
+                parser.add_argument(flag, action="store_true",
+                                    default=bool(default), help=help_)
+            elif "Tuple" in fld.type:
+                parser.add_argument(
+                    flag, type=typ,
+                    default=default, metavar="N,N,...",
+                    help=help_ + f" (default {','.join(map(str, default))})")
+            else:
+                kw = {}
+                if fld.metadata.get("choices"):
+                    kw["choices"] = fld.metadata["choices"]
+                parser.add_argument(flag, type=typ, default=default,
+                                    help=help_ +
+                                    (f" (default {default})"
+                                     if default is not None else ""),
+                                    **kw)
+
+
+def config_from_args(args: argparse.Namespace, **overrides) -> EngineConfig:
+    """Rebuild the nested :class:`EngineConfig` from parsed auto-generated
+    flags; ``overrides`` paths like ``paging_enabled=False`` win last."""
+    def build(dc_type):
+        vals = {}
+        for fld in _cli_fields(dc_type):
+            if hasattr(args, fld.name):
+                vals[fld.name] = getattr(args, fld.name)
+        return vals
+
+    paging = PagingConfig(**build(PagingConfig))
+    chunking = ChunkingConfig(**build(ChunkingConfig))
+    scheduler = SchedulerConfig(**build(SchedulerConfig))
+    cfg = EngineConfig(paging=paging, chunking=chunking,
+                       scheduler=scheduler, **build(EngineConfig))
+    for path, value in overrides.items():
+        group, _, fname = path.partition("_")
+        if group in _GROUPS and fname:
+            sub = dataclasses.replace(getattr(cfg, group), **{fname: value})
+            cfg = dataclasses.replace(cfg, **{group: sub})
+        else:
+            cfg = dataclasses.replace(cfg, **{path: value})
+    return cfg

@@ -86,10 +86,9 @@ standard fixed-shape trade on TPU, made safe at page granularity.
 from __future__ import annotations
 
 import itertools
-import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -102,14 +101,16 @@ from repro.launch.mesh import make_mesh_compat
 from repro.models import ssm as ssm_mod
 from repro.models.model import (Cache, PagedCache, encode_cross, init_cache,
                                 init_paged_cache, prefill)
-from repro.paging import (NOT_MAPPED, EventKind, EventLoop, PagePool,
-                          PageState, PageTable, Pager, PagingError,
+from repro.paging import (NOT_MAPPED, DeadlineQueue, EventKind, EventLoop,
+                          PagePool, PageState, PageTable, Pager, PagingError,
                           PrefixCache, WatermarkPolicy, pages_for)
+from repro.serve.config import (EngineConfig, Tier, VirtualClock,
+                                engine_config_from_kwargs)
 from repro.serve.kv_cache import (SlotPool, extract_aux_slot,
                                   insert_aux_slot, insert_slot,
                                   join_kv_pages)
 
-__all__ = ["Request", "Engine"]
+__all__ = ["Request", "Engine", "SchedulerPolicy", "SLOScheduler"]
 
 
 @dataclass
@@ -129,12 +130,18 @@ class Request:
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     src_embeds: Optional[np.ndarray] = None   # encdec frontend stub
+    # SLO contract (production traffic model; see repro.serve.workload):
+    tier: Tier = Tier.INTERACTIVE
+    ttft_slo: Optional[float] = None    # time-to-first-token budget
+    tpot_slo: Optional[float] = None    # mean time-per-output-token budget
+    arrival_t: float = 0.0              # when the request enters the system
     # filled by the engine:
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None
     submitted_t: float = 0.0
     first_token_t: float = 0.0
     done_t: float = 0.0
+    token_ts: List[float] = field(default_factory=list)  # one per token
     # paging state (set when the request has been preempted):
     parked: bool = False                # preempted, waiting to resume
     residue: Any = None                 # non-KV aux payload while parked
@@ -158,6 +165,31 @@ class Request:
     def mid_prefill(self) -> bool:
         """True while the prompt is only partially chunk-prefilled."""
         return self.target_len > 0 and self.prefill_pos < self.target_len
+
+    # -- SLO telemetry (all timestamps on the engine's one clock) ----------
+    @property
+    def ttft(self) -> float:
+        """Time to first token (inf until one exists)."""
+        if not self.token_ts:
+            return float("inf")
+        return self.token_ts[0] - self.arrival_t
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first (0 for 1 token)."""
+        if len(self.token_ts) < 2:
+            return 0.0
+        return ((self.token_ts[-1] - self.token_ts[0])
+                / (len(self.token_ts) - 1))
+
+    def slo_attained(self) -> bool:
+        """Did this request meet every SLO it carries?  A request with
+        no SLOs trivially attains (batch completion traffic)."""
+        if self.ttft_slo is not None and self.ttft > self.ttft_slo:
+            return False
+        if self.tpot_slo is not None and self.tpot > self.tpot_slo:
+            return False
+        return True
 
 
 # -- jitted pool-frame scatters (module level: one compile per shape) ---------
@@ -208,82 +240,232 @@ def _copy_frame(k_pages, v_pages, src, dst):
     return k_pages, v_pages
 
 
+class SchedulerPolicy:
+    """The scheduling-policy layer: every discretionary decision the
+    engine makes — queue order, extra admission gating, victim choice,
+    chunk order, and the QoS class each request's far-memory traffic
+    rides — comes through one of these objects (``engine.sched``).
+
+    This base class IS the watermark scheduler (``policy="watermark"``):
+    FIFO admission, newest-admitted-first preemption, admission-order
+    chunk selection, LATENCY fetches / BULK parks for everyone.  It
+    maximises utilisation and is SLO-blind — the exact PR-4/PR-5
+    behaviour, bit-for-bit.
+    """
+
+    name = "watermark"
+
+    def __init__(self, engine: "Engine"):
+        self.eng = engine
+
+    def order_queue(self, queue: List[Request], now: float) -> None:
+        """Reorder the admission queue in place (base: FIFO — resumes
+        were pushed to the head by preemption and stay there)."""
+
+    def may_admit(self, req: Request, need: int) -> bool:
+        """Extra admission gate on top of the free-page watermark
+        (base: none)."""
+        return True
+
+    def pick_victim(self, victims: List[Request], now: float) -> Request:
+        """Choose the preemption victim (base: newest admitted)."""
+        return max(victims, key=lambda r: r.admit_seq)
+
+    def chunk_order(self, reqs) -> List[Request]:
+        """Order admitting slots for chunk selection (base: admission
+        order)."""
+        return sorted(reqs, key=lambda r: r.admit_seq)
+
+    def fetch_qos(self, req: Request) -> QoS:
+        """QoS class for this request's resume prefetches."""
+        return QoS.LATENCY
+
+    def store_qos(self, req: Request) -> QoS:
+        """QoS class for this request's preemption writebacks."""
+        return QoS.BULK
+
+    def on_submit(self, req: Request) -> None:
+        """Hook at submission (base: nothing to arm)."""
+
+
+class SLOScheduler(SchedulerPolicy):
+    """Goodput scheduling (``policy="slo"``): admission, preemption and
+    chunk selection maximise *SLO attainment* instead of utilisation,
+    and the request's priority tier maps onto the pager's QoS windows —
+    the paper's §2.2 MACR QoS applied at request granularity:
+
+      * **queue order** — arrived requests first, INTERACTIVE tier
+        before BATCH, earliest deadline first within a tier (EDF);
+        parked requests of a tier resume before its fresh admissions
+        (their pages are already paid for),
+      * **admission shedding** — a BATCH request must leave
+        ``batch_headroom`` free pages beyond the low watermark, and
+        never admits while an interactive resume is still in flight:
+        under overload, batch-tier load is shed first,
+      * **preemption** — the victim is a BATCH slot when one exists,
+        preferring one whose SLO is *already blown* (evicting it costs
+        nothing that isn't lost) and otherwise the one *furthest from
+        its next deadline* (most slack to absorb a park/resume
+        round-trip),
+      * **QoS mapping** — interactive resumes/prefetches ride LATENCY
+        aloads and interactive parks STANDARD astores; batch resumes
+        ride STANDARD and batch parks BULK — so an interactive
+        request's far-memory traffic is never queued behind a batch
+        request's in the AMU windows,
+      * **deadlines as events** — each submission arms its TTFT
+        deadline in a :class:`~repro.paging.DeadlineQueue`; ticks pop
+        due deadlines and post ``DEADLINE`` events (§2.3.2: passing
+        time is a scheduling event like an arriving page).
+    """
+
+    name = "slo"
+
+    def next_deadline(self, req: Request, now: float) -> float:
+        """The next instant this request's SLO contract can be missed:
+        its TTFT deadline before the first token, then each successive
+        token's TPOT budget.  inf when unconstrained."""
+        if not req.token_ts:
+            if req.ttft_slo is None:
+                return float("inf")
+            return req.arrival_t + req.ttft_slo
+        if req.tpot_slo is None:
+            return float("inf")
+        return req.token_ts[-1] + req.tpot_slo
+
+    def slack(self, req: Request, now: float) -> float:
+        return self.next_deadline(req, now) - now
+
+    def blown(self, req: Request, now: float) -> bool:
+        return self.next_deadline(req, now) < now
+
+    def order_queue(self, queue: List[Request], now: float) -> None:
+        queue.sort(key=lambda r: (
+            r.arrival_t > now,           # future arrivals wait their turn
+            int(r.tier),                 # INTERACTIVE before BATCH
+            not r.parked,                # resumes before fresh admissions
+            self.next_deadline(r, now),  # EDF within the tier
+            r.rid))
+
+    def may_admit(self, req: Request, need: int) -> bool:
+        eng = self.eng
+        if req.tier is not Tier.BATCH or not eng.paging:
+            return True
+        if not (eng.active or eng.prefilling or eng._resuming):
+            return True                  # idle system: nothing to shed for
+        if any(r.tier is Tier.INTERACTIVE
+               for r in eng._resuming.values()):
+            return False                 # interactive resume owns the bus
+        headroom = eng.sched_cfg.batch_headroom
+        return eng.page_pool.n_free - need >= eng.policy.low + headroom
+
+    def pick_victim(self, victims: List[Request], now: float) -> Request:
+        return min(victims, key=lambda r: (
+            r.tier is not Tier.BATCH,    # shed batch tier first
+            not self.blown(r, now),      # a blown SLO loses nothing more
+            -self.slack(r, now),         # then: most slack to spare
+            -r.admit_seq))
+
+    def chunk_order(self, reqs) -> List[Request]:
+        now = self.eng.clock()
+        return sorted(reqs, key=lambda r: (self.next_deadline(r, now),
+                                           r.admit_seq))
+
+    def fetch_qos(self, req: Request) -> QoS:
+        return QoS.LATENCY if req.tier is Tier.INTERACTIVE else QoS.STANDARD
+
+    def store_qos(self, req: Request) -> QoS:
+        return QoS.STANDARD if req.tier is Tier.INTERACTIVE else QoS.BULK
+
+    def on_submit(self, req: Request) -> None:
+        if req.ttft_slo is not None:
+            self.eng.deadlines.schedule(req.arrival_t + req.ttft_slo,
+                                        req.rid)
+
+
+_SCHEDULERS = {"watermark": SchedulerPolicy, "slo": SLOScheduler}
+
+
 class Engine:
     """Continuous-batching serving engine on the paged far-memory KV.
 
     The module docstring describes the design; operationally::
 
-        eng = Engine(cfg, params, max_batch=4, max_len=256,
-                     page_size=16, device_pages=48,   # oversubscribed
-                     chunk_tokens=32)                 # chunked prefill
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=4, max_len=256,
+            paging=PagingConfig(page_size=16,
+                                device_pages=48),   # oversubscribed
+            chunking=ChunkingConfig(chunk_tokens=32)))  # chunked prefill
         for p in prompts:
             eng.submit(p, max_new_tokens=16)
         outputs = eng.run()                           # {rid: tokens}
 
-    Knobs: ``device_pages`` below ``max_batch * pages_per_seq``
+    Construction takes one frozen :class:`~repro.serve.config.
+    EngineConfig` (the documented path; the pre-config flat kwargs are
+    still accepted for one release with a DeprecationWarning).  Knobs:
+    ``paging.device_pages`` below ``max_batch * pages_per_seq``
     oversubscribes the pool (watermark admission + preemption, §2.3.2);
-    ``chunk_tokens`` switches admission to the chunk queue (mixed
-    prefill/decode steps); ``prefix_cache=True`` adds cross-request
-    prefix sharing on top of it (content-addressed prompt pages;
-    dense/moe global-attention families); ``offload_finished`` parks
-    finished sequences' pages in the far tier for later
-    :meth:`fetch_finished` reuse; ``paging=False`` is the dense A/B
-    reference; ``kernel_impl`` selects the paged-attention backend
-    (``auto``/``pallas``/``interpret``/``xla``); ``pager_factory``
-    injects a custom :class:`~repro.paging.Pager` (tests use a
-    simulated-latency AMU backend).
+    ``chunking.chunk_tokens`` switches admission to the chunk queue
+    (mixed prefill/decode steps); ``chunking.prefix_cache=True`` adds
+    cross-request prefix sharing on top of it (content-addressed prompt
+    pages; dense/moe global-attention families);
+    ``paging.offload_finished`` parks finished sequences' pages in the
+    far tier for later :meth:`fetch_finished` reuse;
+    ``paging.enabled=False`` is the dense A/B reference;
+    ``kernel_impl`` selects the paged-attention backend
+    (``auto``/``pallas``/``interpret``/``xla``);
+    ``paging.pager_factory`` injects a custom
+    :class:`~repro.paging.Pager` (tests use a simulated-latency AMU
+    backend); ``scheduler.policy="slo"`` switches scheduling from
+    utilisation to goodput (see :class:`SLOScheduler`).
     """
 
     def __init__(
         self,
         cfg: ModelConfig,
         params,
-        *,
-        max_batch: int = 4,
-        max_len: int = 256,
-        prefill_buckets: tuple = (32, 64, 128, 256),
-        greedy: bool = True,
-        offload_finished: bool = False,
-        clock: Callable[[], float] = time.monotonic,
-        mesh=None,
-        page_size: int = 16,
-        device_pages: Optional[int] = None,
-        watermark: Optional[WatermarkPolicy] = None,
-        hot_tail_pages: int = 1,
-        pager_factory: Optional[Callable[..., Pager]] = None,
-        paging: Optional[bool] = None,
-        kernel_impl: str = "auto",
-        step_dt: float = 1e-3,
-        chunk_tokens: Optional[int] = None,
-        chunk_slots: int = 2,
-        prefix_cache: bool = False,
+        config: Optional[EngineConfig] = None,
+        **legacy_kwargs,
     ):
+        if legacy_kwargs:
+            config = engine_config_from_kwargs(config, **legacy_kwargs)
+        ec = config or EngineConfig()
+        pg, ck, sc = ec.paging, ec.chunking, ec.scheduler
+        max_batch, max_len = ec.max_batch, ec.max_len
+        self.config = ec
+        self.sched_cfg = sc
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
-        self.buckets = tuple(sorted(b for b in prefill_buckets
+        self.buckets = tuple(sorted(b for b in ec.prefill_buckets
                                     if b <= max_len)) or (max_len,)
-        self.greedy = greedy
-        self.clock = clock
+        self.greedy = ec.greedy
+        # ONE clock for every request timestamp (arrival, first token,
+        # per-token, completion).  Default: an engine-owned VirtualClock
+        # advanced by step_dt per tick, in lockstep with the pager's
+        # simulated AMU — deterministic SLO measurement.  Injecting
+        # e.g. time.monotonic opts into wall-clock telemetry.
+        self.clock = sc.clock if sc.clock is not None else VirtualClock()
+        self._own_clock = sc.clock is None
         self.pool = SlotPool(max_batch)
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}     # slot -> request
         self.finished: Dict[int, Request] = {}
-        self.offload_finished = offload_finished
+        self.offload_finished = pg.offload_finished
         self._ids = itertools.count()
         self._admits = itertools.count()
 
         # -- page-granularity KV residency over a fixed device pool --------
         # (decided before the decode step is built: the step consumes the
         # paged layout directly when the family has attention KV)
+        page_size = pg.page_size
         shapes = jax.eval_shape(lambda: init_cache(cfg, max_batch, max_len))
         kv_shapes = shapes.kv if isinstance(shapes.kv, dict) else {}
-        self.paging = ("k" in kv_shapes) if paging is None else \
-            (paging and "k" in kv_shapes)
+        self.paging = ("k" in kv_shapes) if pg.enabled is None else \
+            (pg.enabled and "k" in kv_shapes)
         self.page_size = page_size
-        self.step_dt = step_dt
-        self.hot_tail_pages = max(0, hot_tail_pages)
+        self.step_dt = sc.step_dt
+        self.hot_tail_pages = max(0, pg.hot_tail_pages)
         self._resuming: Dict[int, Request] = {}
         if self.paging:
             k = kv_shapes["k"]
@@ -293,15 +475,16 @@ class Engine:
                     f"page_size {page_size} must divide the per-sequence "
                     f"token capacity {self.slot_tokens}")
             self.pages_per_seq = self.slot_tokens // page_size
-            n_pages = device_pages if device_pages is not None \
+            n_pages = pg.device_pages if pg.device_pages is not None \
                 else max_batch * self.pages_per_seq
             page_nbytes = int(2 * k.shape[0] * page_size * k.shape[3]
                               * k.shape[4] * k.dtype.itemsize)
             self.page_pool = PagePool(n_pages, page_size)
             self.page_table = PageTable(self.page_pool)
-            if pager_factory is not None:
-                self.pager = pager_factory(self.page_pool, self.page_table,
-                                           page_nbytes=page_nbytes)
+            if pg.pager_factory is not None:
+                self.pager = pg.pager_factory(self.page_pool,
+                                              self.page_table,
+                                              page_nbytes=page_nbytes)
             else:
                 self.pager = Pager(self.page_pool, self.page_table,
                                    page_nbytes=page_nbytes)
@@ -325,14 +508,23 @@ class Engine:
             self.page_pool = self.page_table = self.pager = None
             self.far_tier = None
             self.cache = init_cache(cfg, max_batch, max_len)
-        if offload_finished and not self.paging:
+        if self.offload_finished and not self.paging:
             raise PagingError(
                 "offload_finished requires the paged engine: finished KV "
                 "is parked page-by-page through the pager's far tier")
-        self.policy = watermark or WatermarkPolicy(low=0, critical=0)
+        self.policy = pg.watermark or WatermarkPolicy(low=0, critical=0)
+        # the scheduling-policy layer: every discretionary decision
+        # (queue order, victim, chunk order, per-request QoS) goes
+        # through self.sched — see SchedulerPolicy / SLOScheduler
+        if sc.policy not in _SCHEDULERS:
+            raise PagingError(
+                f"unknown scheduler policy {sc.policy!r}; "
+                f"expected one of {sorted(_SCHEDULERS)}")
+        self.sched = _SCHEDULERS[sc.policy](self)
+        self.deadlines = DeadlineQueue()
 
         # -- mesh-sharded decode step (dist.steps, not a raw jit) ----------
-        self.mesh = mesh if mesh is not None else \
+        self.mesh = ec.mesh if ec.mesh is not None else \
             make_mesh_compat((1, 1), ("data", "model"))
         shape = ShapeConfig("serve_engine", max_len, max_batch, "decode")
         # cache donated: the step aliases the pool frames in place —
@@ -340,19 +532,20 @@ class Engine:
         # step's output immediately, so the donation is safe)
         self._decode, self._decode_specs = make_serve_step(
             cfg, self.mesh, shape, donate=True, paged=self.paging,
-            kernel_impl=kernel_impl)
+            kernel_impl=ec.kernel_impl)
         self._prefills: Dict[Any, Any] = {}
 
         # -- chunk-queue admission (chunked paged prefill) ------------------
         # admission installs page-table rows only; prompts are then fed
         # through the mixed step in chunks that interleave with decode
-        self.chunk_tokens = int(chunk_tokens) if chunk_tokens else 0
-        self.chunk_slots = max(1, int(chunk_slots))
+        self.chunk_tokens = int(ck.chunk_tokens) if ck.chunk_tokens else 0
+        self.chunk_slots = max(1, int(ck.chunk_slots))
         self.chunking = bool(self.chunk_tokens) and self.paging
         self.prefilling: Dict[int, Request] = {}     # slot -> admitting req
         if self.chunking:
             self._mixed, self._mixed_specs = make_mixed_step(
-                cfg, self.mesh, shape, donate=True, kernel_impl=kernel_impl)
+                cfg, self.mesh, shape, donate=True,
+                kernel_impl=ec.kernel_impl)
             if cfg.family == "hybrid":
                 s = ssm_mod.mamba2_state_init(cfg, 1)
                 self._zero_chunk_ssm = jax.tree_util.tree_map(
@@ -369,7 +562,7 @@ class Engine:
         # absolute rope; SWA ring wrap rewrites pages in place, and
         # hybrid/encdec carry non-KV per-request prefix state).
         self.prefix: Optional[PrefixCache] = None
-        if prefix_cache:
+        if ck.prefix_cache:
             if not self.chunking:
                 raise PagingError(
                     "prefix_cache requires chunked paged admission "
@@ -387,16 +580,30 @@ class Engine:
         self.events.on(EventKind.TICK, self._on_tick)
         self.events.on(EventKind.PAGE_ARRIVED, self._on_page_arrived)
         self.events.on(EventKind.COMPLETE, self._on_complete)
+        self.events.on(EventKind.DEADLINE, self._on_deadline)
         self.stats = {"steps": 0, "prefills": 0, "admitted": 0,
                       "preemptions": 0, "resumes": 0, "mixed_steps": 0,
                       "chunks": 0, "prefill_preempts": 0,
                       "prefix_hits": 0, "prefix_tokens_saved": 0,
-                      "prefix_far_hits": 0}
+                      "prefix_far_hits": 0, "deadline_misses": 0,
+                      "slo_attained": 0, "slo_missed": 0,
+                      "shed_admissions": 0}
 
     # -- public API ----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
                eos_id: Optional[int] = None,
-               src_embeds: Optional[np.ndarray] = None) -> int:
+               src_embeds: Optional[np.ndarray] = None,
+               tier: Tier = Tier.INTERACTIVE,
+               ttft_slo: Optional[float] = None,
+               tpot_slo: Optional[float] = None,
+               arrival_t: Optional[float] = None) -> int:
+        """Queue one request.  SLO fields: ``tier`` picks the priority
+        class (maps to pager QoS under the SLO scheduler), ``ttft_slo``
+        / ``tpot_slo`` override the :class:`SchedulerConfig` defaults,
+        and ``arrival_t`` places the request on the virtual-clock time
+        axis (a trace replay submits the whole workload up front; the
+        engine admits nothing before its arrival time).  Defaults
+        reproduce the old behaviour: arrive now, no SLOs."""
         prompt = np.asarray(prompt, np.int32)
         if self.paging:
             full = pages_for(min(len(prompt) + max_new_tokens,
@@ -415,10 +622,18 @@ class Engine:
                     f"{self.page_pool.n_pages} under low watermark "
                     f"{self.policy.low} can never admit it")
         rid = next(self._ids)
+        now = self.clock()
         req = Request(rid=rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
-                      src_embeds=src_embeds, submitted_t=self.clock())
+                      src_embeds=src_embeds, submitted_t=now,
+                      tier=Tier(tier),
+                      ttft_slo=(ttft_slo if ttft_slo is not None
+                                else self.sched_cfg.ttft_slo),
+                      tpot_slo=(tpot_slo if tpot_slo is not None
+                                else self.sched_cfg.tpot_slo),
+                      arrival_t=now if arrival_t is None else arrival_t)
         self.queue.append(req)
+        self.sched.on_submit(req)
         return rid
 
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
@@ -426,8 +641,9 @@ class Engine:
 
         Example (8 requests through 3 slots, continuous batching)::
 
-            eng = Engine(cfg, params, max_batch=3, max_len=64,
-                         chunk_tokens=8)
+            eng = Engine(cfg, params, EngineConfig(
+                max_batch=3, max_len=64,
+                chunking=ChunkingConfig(chunk_tokens=8)))
             rids = [eng.submit(p, max_new_tokens=5) for p in prompts]
             outputs = eng.run()          # {rid: [token, ...]}
         """
@@ -454,6 +670,15 @@ class Engine:
                 self._admit()
                 if not self.active and not self.prefilling \
                         and not self._resuming:
+                    future = [r.arrival_t for r in self.queue
+                              if r.arrival_t > self.clock()]
+                    if future and len(future) == len(self.queue):
+                        # the system is idle only because the trace is:
+                        # fast-forward the virtual clock to the next
+                        # arrival (a wall clock advances by itself)
+                        if self._own_clock:
+                            self.clock.advance(min(future) - self.clock())
+                        continue
                     # nothing running and nothing in flight: the state
                     # can never change, so admission is blocked for
                     # good — fail loudly instead of spinning to max_steps
@@ -466,6 +691,13 @@ class Engine:
 
     # -- event handlers -------------------------------------------------------
     def _on_tick(self, ev) -> None:
+        # the engine-owned virtual clock advances here, by step_dt, in
+        # lockstep with the pager's simulated backend below — one time
+        # axis for transfers AND request telemetry
+        if self._own_clock:
+            self.clock.advance(self.step_dt)
+        for t, rid in self.deadlines.pop_due(self.clock()):
+            self.events.post(EventKind.DEADLINE, (t, rid))
         if self.pager is None:
             return
         for seq, logical in self.pager.advance(self.step_dt):
@@ -493,6 +725,23 @@ class Engine:
                 # offloaded sequences keep their far-tier pages: that IS
                 # the finished-KV store fetch_finished reads back
                 self.pager.drop_far(rid)
+
+    def _on_deadline(self, ev) -> None:
+        """A TTFT deadline passed.  If the request still has no first
+        token it has missed its SLO *now* — count it while it is still
+        schedulable, so preemption's already-blown preference and the
+        telemetry agree in real time rather than post hoc."""
+        _, rid = ev.payload
+        req = self.finished.get(rid)
+        if req is None:
+            for r in itertools.chain(self.queue, self.active.values(),
+                                     self.prefilling.values(),
+                                     self._resuming.values()):
+                if r.rid == rid:
+                    req = r
+                    break
+        if req is not None and not req.token_ts:
+            self.stats["deadline_misses"] += 1
 
     # -- internals ------------------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -636,14 +885,17 @@ class Engine:
         return True
 
     def _preempt_one(self, protect: frozenset) -> bool:
-        """Park the most recently admitted unprotected sequence — a
-        running one (:meth:`_park`) or a half-prefilled one whose
-        completed chunks are parked as-is (:meth:`_park_prefilling`)."""
+        """Park the scheduler's chosen victim — a running sequence
+        (:meth:`_park`) or a half-prefilled one whose completed chunks
+        are parked as-is (:meth:`_park_prefilling`).  The watermark
+        policy picks the most recently admitted; the SLO policy picks
+        the slot whose SLO is already blown or furthest from its
+        deadline, batch tier first."""
         victims = [r for r in list(self.active.values())
                    + list(self.prefilling.values()) if r.rid not in protect]
         if not victims or len(self.active) + len(self.prefilling) <= 1:
             return False
-        victim = max(victims, key=lambda r: r.admit_seq)
+        victim = self.sched.pick_victim(victims, self.clock())
         if victim.mid_prefill:
             self._park_prefilling(victim)
         else:
@@ -692,7 +944,8 @@ class Engine:
                 self.pager.park_clean(rid, logical)  # far copy current
             else:
                 self.pager.writeback(rid, logical,
-                                     self._read_frame(pte.phys), tokens=cur)
+                                     self._read_frame(pte.phys), tokens=cur,
+                                     qos=self.sched.store_qos(req))
 
     def _park(self, req: Request) -> None:
         """Preempt a running sequence: cold pages → far tier (BULK), hot
@@ -737,16 +990,19 @@ class Engine:
         self.events.post(EventKind.PREEMPT, req.rid)
 
     def _start_resume(self, req: Request) -> bool:
-        """Begin bringing a parked request back: LATENCY-QoS prefetch of
-        its parked pages, hot tail first, overlapping decode.  A resume
-        is a continuation, not a fresh admission, so like growth it is
-        exempt from the low watermark — it only needs raw frames."""
+        """Begin bringing a parked request back: prefetch of its parked
+        pages (LATENCY QoS for interactive tier, the scheduler may
+        demote batch resumes to STANDARD), hot tail first, overlapping
+        decode.  A resume is a continuation, not a fresh admission, so
+        like growth it is exempt from the low watermark — it only needs
+        raw frames."""
         parked = self.page_table.logical_pages(req.rid, PageState.PARKED)
         if self.page_pool.n_free < len(parked) and \
                 not self._make_room(len(parked), frozenset({req.rid}),
                                     preempt=False):
             return False
-        self.pager.prefetch_seq(req.rid, tail_first=True)
+        self.pager.prefetch_seq(req.rid, tail_first=True,
+                                qos=self.sched.fetch_qos(req))
         self._resuming[req.rid] = req
         return True
 
@@ -763,8 +1019,9 @@ class Engine:
         for rid, req in list(self._resuming.items()):
             if not self.page_table.resident(rid):
                 # pages evicted again under pressure mid-resume get a
-                # fresh LATENCY prefetch (no-op when all are in flight)
-                self.pager.prefetch_seq(rid, tail_first=True)
+                # fresh prefetch (no-op when all are in flight)
+                self.pager.prefetch_seq(rid, tail_first=True,
+                                        qos=self.sched.fetch_qos(req))
                 continue
             if not self.pool.n_free:
                 continue
@@ -929,8 +1186,12 @@ class Engine:
     def _admit(self) -> None:
         if self.paging:
             self._try_finish_resumes()
+        now = self.clock()
+        self.sched.order_queue(self.queue, now)
         while self.queue:
             req = self.queue[0]
+            if req.arrival_t > now:
+                break                 # trace replay: not in the system yet
             if req.parked:                                # preempted: resume
                 if req.rid in self._resuming or not self._start_resume(req):
                     break
@@ -950,6 +1211,12 @@ class Engine:
                     need -= sum(
                         1 for l in hits
                         if self.prefix.entry_state(l) is PageState.RESIDENT)
+                if not self.sched.may_admit(req, need):
+                    # SLO load shedding: the highest-priority admissible
+                    # request is batch-tier and the pool is too tight to
+                    # take it without risking interactive deadlines
+                    self.stats["shed_admissions"] += 1
+                    break
                 if not self.policy.can_admit(self.page_pool, need) and \
                         not self._make_room(need + self.policy.low,
                                             frozenset(), preempt=False):
@@ -999,6 +1266,7 @@ class Engine:
             first = int(np.argmax(np.asarray(logits)[0]))
             req.generated.append(first)
             req.first_token_t = self.clock()
+            req.token_ts.append(req.first_token_t)
             self.active[slot] = req
             self.stats["admitted"] += 1
             self.events.post(EventKind.ADMIT, req.rid)
@@ -1023,8 +1291,7 @@ class Engine:
         picks: List = []
         t_exact = None
         exact = self.cfg.family == "hybrid"    # pad tokens corrupt SSM state
-        for req in sorted(self.prefilling.values(),
-                          key=lambda r: r.admit_seq):
+        for req in self.sched.chunk_order(self.prefilling.values()):
             if len(picks) >= self.chunk_slots:
                 break
             start = req.prefill_pos
@@ -1137,6 +1404,7 @@ class Engine:
         first = int(np.argmax(np.asarray(logits_row)))
         req.generated.append(first)
         req.first_token_t = self.clock()
+        req.token_ts.append(req.first_token_t)
         self.active[slot] = req
         self._finish_if_done(req)
 
@@ -1171,9 +1439,11 @@ class Engine:
         self.stats["steps"] += 1
         if self.active:
             logits = np.asarray(logits)
+            t_now = self.clock()
             for slot, req in list(self.active.items()):
                 nxt = int(np.argmax(logits[slot]))
                 req.generated.append(nxt)
+                req.token_ts.append(t_now)
                 self._finish_if_done(req)
         if picks:
             self._finish_chunks(picks, np.asarray(chunk_logits), carry)
@@ -1252,5 +1522,41 @@ class Engine:
             self.pool.release(slot)
         req.done_t = self.clock()
         self.finished[req.rid] = req
+        self.stats["slo_attained" if req.slo_attained()
+                   else "slo_missed"] += 1
         self.events.post(EventKind.COMPLETE, req.rid)
         self.events.drain()
+
+    # -- SLO telemetry --------------------------------------------------------
+    def slo_report(self) -> Dict[str, Any]:
+        """Per-tier SLO attainment over the finished requests.
+
+        All numbers live on the engine's one clock (virtual seconds by
+        default).  *Goodput* is the serving-paper definition: tokens
+        generated by requests that met every SLO they carry — work that
+        arrived uselessly late counts for nothing.  Example::
+
+            eng.run()
+            rep = eng.slo_report()
+            rep["interactive"]["goodput"]      # SLO-attaining tok/s
+            rep["interactive"]["ttft_p95"]
+        """
+        elapsed = max(self.clock(), 1e-12)
+        out: Dict[str, Any] = {"elapsed": elapsed}
+        for tier in Tier:
+            reqs = [r for r in self.finished.values() if r.tier is tier]
+            ttfts = sorted(r.ttft for r in reqs if r.token_ts)
+            good = [r for r in reqs if r.slo_attained()]
+            good_tokens = sum(len(r.generated) for r in good)
+            out[tier.name.lower()] = {
+                "n": len(reqs),
+                "attained": len(good),
+                "attainment": len(good) / len(reqs) if reqs else 1.0,
+                "good_tokens": good_tokens,
+                "goodput": good_tokens / elapsed,
+                "ttft_p50": (float(np.percentile(ttfts, 50))
+                             if ttfts else 0.0),
+                "ttft_p95": (float(np.percentile(ttfts, 95))
+                             if ttfts else 0.0),
+            }
+        return out

@@ -132,6 +132,7 @@ def mode_engine():
     from repro.dist.sharding import param_specs
     from repro.dist.steps import abstract_params
     from repro.models.model import init_params
+    from repro.serve.config import EngineConfig, PagingConfig
     from repro.serve.engine import Engine
 
     cfg = get_smoke("mistral-nemo-12b")
@@ -142,8 +143,9 @@ def mode_engine():
                          out_shardings=jax.tree_util.tree_map(
                              lambda s: NamedSharding(mesh, s),
                              pspecs))(jax.random.PRNGKey(0))
-        eng = Engine(cfg, params, max_batch=3, max_len=64, mesh=mesh,
-                     prefill_buckets=(16,), page_size=8, device_pages=9)
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=3, max_len=64, mesh=mesh, prefill_buckets=(16,),
+            paging=PagingConfig(page_size=8, device_pages=9)))
         for i in range(5):
             eng.submit(np.arange(4 + i) % cfg.vocab_size, max_new_tokens=6)
         out = eng.run()

@@ -21,6 +21,7 @@ from repro.models import init_params
 from repro.paging import (PREFIX_SEQ, PagePool, PageState, PageTable, Pager,
                           PagingError, PrefixCache, WatermarkPolicy,
                           page_hashes, pages_for)
+from repro.serve.config import ChunkingConfig, EngineConfig, PagingConfig
 from repro.serve.engine import Engine
 
 
@@ -58,8 +59,9 @@ def _flaky_pager_factory(base_latency, fail):
 def _dense_reference(cfg, params, cache, requests):
     key = tuple((tuple(int(t) for t in p), n) for p, n in requests)
     if key not in cache:
-        eng = Engine(cfg, params, max_batch=3, max_len=64,
-                     prefill_buckets=(32,), paging=False)
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=3, max_len=64, prefill_buckets=(32,),
+            paging=PagingConfig(enabled=False)))
         for prompt, new in requests:
             eng.submit(prompt, max_new_tokens=new)
         cache[key] = eng.run()
@@ -97,8 +99,10 @@ def test_engine_single_far_tier_backend(setup):
     """The pager's parked pages and finished-sequence KV share ONE
     FarMemoryTier (the KVOffloadTier duplicate storage path is gone)."""
     cfg, params, _ = setup
-    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(16,),
-                 page_size=8, device_pages=5, offload_finished=True)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=8, device_pages=5,
+                            offload_finished=True)))
     assert eng.far_tier is eng.pager.tier
     assert eng.far_tier.amu is eng.pager.amu
     rid = eng.submit(np.arange(7) % cfg.vocab_size, max_new_tokens=4)
@@ -117,9 +121,11 @@ def test_fetch_finished_fault_keeps_entries(setup):
     retry."""
     cfg, params, _ = setup
     fail = {"on": False}
-    eng = Engine(cfg, params, max_batch=1, max_len=64, prefill_buckets=(16,),
-                 page_size=8, offload_finished=True,
-                 pager_factory=_flaky_pager_factory(1e-6, fail))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=1, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=8, offload_finished=True,
+                            pager_factory=_flaky_pager_factory(1e-6,
+                                                               fail))))
     rid = eng.submit(np.arange(12) % cfg.vocab_size, max_new_tokens=4)
     eng.run()
     fail["on"] = True
@@ -145,9 +151,11 @@ def test_watermark_eviction_loop_frees_frames(setup):
     pre = np.arange(8) % cfg.vocab_size
     prompts = [np.concatenate([pre, (np.arange(4) + 3 * i) % cfg.vocab_size])
                for i in range(4)]
-    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(16,),
-                 page_size=4, device_pages=8, chunk_tokens=4,
-                 prefix_cache=True, watermark=WatermarkPolicy(low=2))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=4, device_pages=8,
+                            watermark=WatermarkPolicy(low=2)),
+        chunking=ChunkingConfig(chunk_tokens=4, prefix_cache=True)))
     for p in prompts:
         eng.submit(p, max_new_tokens=5)
     out = eng.run()
@@ -225,8 +233,10 @@ def test_prefix_hits_skip_chunks_and_match_dense(setup):
                                  % cfg.vocab_size]), 5) for i in range(6)]
     ref = _dense_reference(cfg, params, ref_cache, requests)
 
-    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(32,),
-                 page_size=4, chunk_tokens=4, prefix_cache=True)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(32,),
+        paging=PagingConfig(page_size=4),
+        chunking=ChunkingConfig(chunk_tokens=4, prefix_cache=True)))
     for p, n in requests:
         eng.submit(p, max_new_tokens=n)
     out = eng.run()
@@ -247,10 +257,11 @@ def test_prefix_far_hit_while_arriving_matches_dense(setup):
                                  % cfg.vocab_size]), 5) for i in range(6)]
     ref = _dense_reference(cfg, params, ref_cache, requests)
 
-    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(32,),
-                 page_size=4, chunk_tokens=4, prefix_cache=True,
-                 device_pages=9, hot_tail_pages=0,
-                 pager_factory=_slow_pager_factory(2.5e-3))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(32,),
+        paging=PagingConfig(page_size=4, device_pages=9, hot_tail_pages=0,
+                            pager_factory=_slow_pager_factory(2.5e-3)),
+        chunking=ChunkingConfig(chunk_tokens=4, prefix_cache=True)))
     for p, n in requests:
         eng.submit(p, max_new_tokens=n)
     out = eng.run()
@@ -270,10 +281,12 @@ def test_prefix_far_hit_fault_mid_admission_recovers(setup):
     ref = _dense_reference(cfg, params, ref_cache, requests)
 
     fail = {"on": False}
-    eng = Engine(cfg, params, max_batch=1, max_len=64, prefill_buckets=(32,),
-                 page_size=4, chunk_tokens=4, prefix_cache=True,
-                 device_pages=7, hot_tail_pages=0,
-                 pager_factory=_flaky_pager_factory(1e-4, fail))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=1, max_len=64, prefill_buckets=(32,),
+        paging=PagingConfig(page_size=4, device_pages=7, hot_tail_pages=0,
+                            pager_factory=_flaky_pager_factory(1e-4,
+                                                               fail)),
+        chunking=ChunkingConfig(chunk_tokens=4, prefix_cache=True)))
     rids = [eng.submit(p, max_new_tokens=n) for p, n in requests]
     # run a few steps, then fault the link for a stretch of the run
     eng.run(max_steps=4)
@@ -319,11 +332,13 @@ def test_property_two_tier_engine_matches_dense(setup, seed, page_size,
 
     need = max(pages_for(min(len(p) + n, 64), page_size)
                for p, n in requests)
-    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_buckets=(32,),
-                 page_size=page_size, device_pages=need + spare_pages + low,
-                 hot_tail_pages=hot_tail, chunk_tokens=4,
-                 prefix_cache=True, watermark=WatermarkPolicy(low=low),
-                 pager_factory=_slow_pager_factory(latency))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(32,),
+        paging=PagingConfig(
+            page_size=page_size, device_pages=need + spare_pages + low,
+            hot_tail_pages=hot_tail, watermark=WatermarkPolicy(low=low),
+            pager_factory=_slow_pager_factory(latency)),
+        chunking=ChunkingConfig(chunk_tokens=4, prefix_cache=True)))
     for prompt, new in requests:
         eng.submit(prompt, max_new_tokens=new)
     out = eng.run()

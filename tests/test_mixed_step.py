@@ -16,6 +16,7 @@ from repro.configs import get_smoke
 from repro.core.amu import AMU, SimBackend
 from repro.models import init_params
 from repro.paging import Pager
+from repro.serve.config import ChunkingConfig, EngineConfig, PagingConfig
 from repro.serve.engine import Engine
 
 
@@ -26,9 +27,11 @@ def setup():
     return cfg, params
 
 
-def _run(cfg, params, prompts, *, max_new=6, src=None, **kw):
-    eng = Engine(cfg, params, max_batch=3, max_len=64,
-                 prefill_buckets=(16, 32), **kw)
+def _run(cfg, params, prompts, *, max_new=6, src=None,
+         paging=PagingConfig(), chunking=ChunkingConfig()):
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16, 32),
+        paging=paging, chunking=chunking))
     for i, p in enumerate(prompts):
         kw2 = {"src_embeds": src[i]} if src is not None else {}
         eng.submit(p, max_new_tokens=max_new, **kw2)
@@ -51,10 +54,13 @@ def test_chunk_boundaries_match_dense(setup):
     cfg, params = setup
     lengths = [3, 4, 5, 7, 8, 9, 11, 12, 13, 15, 16, 17]
     prompts = [(np.arange(n) + n) % cfg.vocab_size for n in lengths]
-    _, ref = _run(cfg, params, prompts, paging=False)
+    _, ref = _run(cfg, params, prompts,
+                  paging=PagingConfig(enabled=False))
     for chunk in (4, 8):
-        eng, out = _run(cfg, params, prompts, page_size=4,
-                        chunk_tokens=chunk, chunk_slots=2)
+        eng, out = _run(cfg, params, prompts,
+                        paging=PagingConfig(page_size=4),
+                        chunking=ChunkingConfig(chunk_tokens=chunk,
+                                                chunk_slots=2))
         assert out == ref, f"chunk_tokens={chunk}"
         assert eng.stats["chunks"] > len(prompts)      # actually chunked
         assert eng.stats["prefills"] == 0              # no dense fallback
@@ -66,8 +72,11 @@ def test_single_chunk_covers_whole_prompt(setup):
     layout (the admission path never materialises dense KV)."""
     cfg, params = setup
     prompts = [np.arange(7) % cfg.vocab_size, np.arange(13) % cfg.vocab_size]
-    _, ref = _run(cfg, params, prompts, paging=False)
-    eng, out = _run(cfg, params, prompts, page_size=4, chunk_tokens=64)
+    _, ref = _run(cfg, params, prompts,
+                  paging=PagingConfig(enabled=False))
+    eng, out = _run(cfg, params, prompts,
+                    paging=PagingConfig(page_size=4),
+                    chunking=ChunkingConfig(chunk_tokens=64))
     assert out == ref
     assert eng.stats["chunks"] == len(prompts)
     assert eng.stats["prefills"] == 0
@@ -81,10 +90,13 @@ def test_mid_prefill_preemption_resumes_exactly(setup):
     prompts = [(np.arange(16) % cfg.vocab_size),
                (np.arange(16) + 3) % cfg.vocab_size,
                (np.arange(12) + 5) % cfg.vocab_size]
-    _, ref = _run(cfg, params, prompts, max_new=8, paging=False)
-    eng, out = _run(cfg, params, prompts, max_new=8, page_size=4,
-                    device_pages=6, hot_tail_pages=0, chunk_tokens=4,
-                    chunk_slots=2)
+    _, ref = _run(cfg, params, prompts, max_new=8,
+                  paging=PagingConfig(enabled=False))
+    eng, out = _run(cfg, params, prompts, max_new=8,
+                    paging=PagingConfig(page_size=4, device_pages=6,
+                                        hot_tail_pages=0),
+                    chunking=ChunkingConfig(chunk_tokens=4,
+                                            chunk_slots=2))
     assert eng.stats["prefill_preempts"] > 0   # cancelled mid-prefill
     assert eng.stats["resumes"] == eng.stats["preemptions"]
     assert out == ref
@@ -98,11 +110,14 @@ def test_mid_prefill_preemption_slow_pager(setup):
     prompts = [(np.arange(16) % cfg.vocab_size),
                (np.arange(16) + 3) % cfg.vocab_size,
                (np.arange(12) + 5) % cfg.vocab_size]
-    _, ref = _run(cfg, params, prompts, max_new=8, paging=False)
-    eng, out = _run(cfg, params, prompts, max_new=8, page_size=4,
-                    device_pages=6, hot_tail_pages=0, chunk_tokens=4,
-                    chunk_slots=2,
-                    pager_factory=_slow_pager_factory(2.5e-3))
+    _, ref = _run(cfg, params, prompts, max_new=8,
+                  paging=PagingConfig(enabled=False))
+    eng, out = _run(cfg, params, prompts, max_new=8,
+                    paging=PagingConfig(
+                        page_size=4, device_pages=6, hot_tail_pages=0,
+                        pager_factory=_slow_pager_factory(2.5e-3)),
+                    chunking=ChunkingConfig(chunk_tokens=4,
+                                            chunk_slots=2))
     assert eng.stats["preemptions"] > 0
     assert out == ref
 
@@ -125,16 +140,17 @@ def test_mixed_step_other_families(arch):
                for p in prompts]
 
     def run(**kw):
-        eng = Engine(cfg, params, max_batch=2, max_len=32,
-                     prefill_buckets=(8,), **kw)
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=2, max_len=32, prefill_buckets=(8,), **kw))
         for i, p in enumerate(prompts):
             kw2 = {"src_embeds": src[i]} if src is not None else {}
             eng.submit(p, max_new_tokens=6, **kw2)
         return eng, eng.run()
 
-    _, ref = run(paging=False)
-    eng, out = run(page_size=4, device_pages=5, hot_tail_pages=1,
-                   chunk_tokens=4, chunk_slots=2)
+    _, ref = run(paging=PagingConfig(enabled=False))
+    eng, out = run(paging=PagingConfig(page_size=4, device_pages=5,
+                                       hot_tail_pages=1),
+                   chunking=ChunkingConfig(chunk_tokens=4, chunk_slots=2))
     assert eng.chunking and eng.stats["chunks"] > 0
     assert eng.stats["preemptions"] > 0
     assert out == ref
@@ -158,14 +174,16 @@ def test_mixed_step_on_mesh_matches_dense_mesh_engine(setup):
                np.arange(16) % cfg.vocab_size]
 
     def run(**kw):
-        eng = Engine(cfg, params, max_batch=3, max_len=64,
-                     prefill_buckets=(16,), mesh=mesh, **kw)
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=3, max_len=64, prefill_buckets=(16,), mesh=mesh,
+            **kw))
         for p in prompts:
             eng.submit(p, max_new_tokens=6)
         return eng.run()
 
-    ref = run(paging=False)
-    out = run(page_size=4, chunk_tokens=4, chunk_slots=2)
+    ref = run(paging=PagingConfig(enabled=False))
+    out = run(paging=PagingConfig(page_size=4),
+              chunking=ChunkingConfig(chunk_tokens=4, chunk_slots=2))
     assert out == ref
 
 

@@ -17,6 +17,7 @@ from repro.configs import get_smoke
 from repro.core.amu import AMU, SimBackend
 from repro.models import init_params
 from repro.paging import Pager, pages_for
+from repro.serve.config import EngineConfig, PagingConfig
 from repro.serve.engine import Engine
 
 
@@ -31,8 +32,9 @@ def _dense_reference(cfg, params, cache, requests):
     """Dense-engine outputs, cached per request set (module lifetime)."""
     key = tuple((tuple(int(t) for t in p), n) for p, n in requests)
     if key not in cache:
-        eng = Engine(cfg, params, max_batch=3, max_len=64,
-                     prefill_buckets=(16,), paging=False)
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=3, max_len=64, prefill_buckets=(16,),
+            paging=PagingConfig(enabled=False)))
         for prompt, new in requests:
             eng.submit(prompt, max_new_tokens=new)
         cache[key] = eng.run()
@@ -73,10 +75,12 @@ def test_property_paged_decode_matches_dense(setup, seed, page_size,
     # oversubscribed and growth forces preemption/resume churn
     need = max(pages_for(min(len(p) + n, 64), page_size)
                for p, n in requests)
-    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_buckets=(16,),
-                 page_size=page_size, device_pages=need + spare_pages,
-                 hot_tail_pages=hot_tail,
-                 pager_factory=_slow_pager_factory(latency))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(
+            page_size=page_size, device_pages=need + spare_pages,
+            hot_tail_pages=hot_tail,
+            pager_factory=_slow_pager_factory(latency))))
     for prompt, new in requests:
         eng.submit(prompt, max_new_tokens=new)
     out = eng.run()
@@ -97,15 +101,17 @@ def test_paged_matches_dense_other_families(arch):
                np.arange(8) % cfg.vocab_size,
                np.arange(8) % cfg.vocab_size]
 
-    def run(**kw):
-        eng = Engine(cfg, params, max_batch=2, max_len=32,
-                     prefill_buckets=(8,), **kw)
+    def run(paging=PagingConfig()):
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=2, max_len=32, prefill_buckets=(8,),
+            paging=paging))
         for p in prompts:
             eng.submit(p, max_new_tokens=6)
         return eng, eng.run()
 
-    _, ref = run(paging=False)
-    eng, out = run(page_size=4, device_pages=5, hot_tail_pages=1)
+    _, ref = run(paging=PagingConfig(enabled=False))
+    eng, out = run(PagingConfig(page_size=4, device_pages=5,
+                                hot_tail_pages=1))
     assert eng.paging and eng.stats["preemptions"] > 0
     assert out == ref
     assert eng.page_pool.n_free == eng.page_pool.n_pages
@@ -120,17 +126,19 @@ def test_resume_while_arriving_matches_dense(setup):
                np.arange(16) % cfg.vocab_size,
                np.arange(5) % cfg.vocab_size]
 
-    dense = Engine(cfg, params, max_batch=3, max_len=64,
-                   prefill_buckets=(16,), paging=False)
+    dense = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(enabled=False)))
     for p in prompts:
         dense.submit(p, max_new_tokens=10)
     ref = dense.run()
 
     # 2.5 ticks of base latency: a parked page needs >= 3 engine ticks
     # in flight, so _try_finish_resumes repeatedly sees ARRIVING pages
-    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_buckets=(16,),
-                 page_size=4, device_pages=7, hot_tail_pages=1,
-                 pager_factory=_slow_pager_factory(2.5e-3))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=4, device_pages=7, hot_tail_pages=1,
+                            pager_factory=_slow_pager_factory(2.5e-3))))
     for p in prompts:
         eng.submit(p, max_new_tokens=10)
     out = eng.run()

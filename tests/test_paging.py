@@ -12,6 +12,7 @@ from repro.paging import (EventKind, EventLoop, PagePool, PageState,
                           PageTable, Pager, PagingError, WatermarkPolicy,
                           pages_for)
 from repro.paging.sim import simulate_paged_serving
+from repro.serve.config import EngineConfig, PagingConfig
 from repro.serve.kv_cache import (SlotPool, join_kv_pages, split_kv_pages)
 
 
@@ -375,12 +376,14 @@ def test_engine_oversubscribed_preempts_and_matches_solo(dense_setup):
     cfg, params = dense_setup
     prompt = np.arange(7) % cfg.vocab_size
 
-    solo = Engine(cfg, params, max_batch=1, max_len=64, prefill_buckets=(16,))
+    solo = Engine(cfg, params, EngineConfig(
+        max_batch=1, max_len=64, prefill_buckets=(16,)))
     solo.submit(prompt, max_new_tokens=12)
     ref = solo.run()[0]
 
-    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_buckets=(16,),
-                 page_size=8, device_pages=5)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=8, device_pages=5)))
     rid = eng.submit(prompt, max_new_tokens=12)
     eng.submit(np.arange(5) % cfg.vocab_size, max_new_tokens=12)
     eng.submit(np.arange(9) % cfg.vocab_size, max_new_tokens=12)
@@ -404,8 +407,9 @@ def test_engine_admits_more_demand_than_pool(dense_setup):
     cfg, params = dense_setup
     # per request: ceil((5 + 11) / 4) = 4 pages; 6 requests = 24 pages
     # of total demand on a 12-page pool (2x oversubscription).
-    eng = Engine(cfg, params, max_batch=4, max_len=64, prefill_buckets=(16,),
-                 page_size=4, device_pages=12)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=4, device_pages=12)))
     for i in range(6):
         eng.submit(np.arange(5 + i) % cfg.vocab_size, max_new_tokens=11)
     out = eng.run()
@@ -418,8 +422,9 @@ def test_engine_admits_more_demand_than_pool(dense_setup):
 def test_engine_rejects_impossible_request(dense_setup):
     from repro.serve.engine import Engine
     cfg, params = dense_setup
-    eng = Engine(cfg, params, max_batch=2, max_len=64, page_size=8,
-                 device_pages=2)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64,
+        paging=PagingConfig(page_size=8, device_pages=2)))
     with pytest.raises(PagingError):
         eng.submit(np.arange(30), max_new_tokens=30)   # needs > pool
 
@@ -429,9 +434,10 @@ def test_engine_watermark_blocks_admission(dense_setup):
     first to finish (admission by free pages, not free slots)."""
     from repro.serve.engine import Engine
     cfg, params = dense_setup
-    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_buckets=(16,),
-                 page_size=8, device_pages=4,
-                 watermark=WatermarkPolicy(low=3))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=8, device_pages=4,
+                            watermark=WatermarkPolicy(low=3))))
     eng.submit(np.arange(6), max_new_tokens=4)         # 1..2 pages
     eng.submit(np.arange(6), max_new_tokens=4)
     out = eng.run()
@@ -457,14 +463,16 @@ def test_engine_preempt_resume_at_exact_page_boundary(dense_setup):
                np.arange(16) % cfg.vocab_size,
                np.arange(8) % cfg.vocab_size]
 
-    dense = Engine(cfg, params, max_batch=3, max_len=64,
-                   prefill_buckets=(16,), paging=False)
+    dense = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(enabled=False)))
     for p in prompts:
         dense.submit(p, max_new_tokens=8)
     ref = dense.run()
 
-    eng = Engine(cfg, params, max_batch=3, max_len=64, prefill_buckets=(16,),
-                 page_size=8, device_pages=5)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=8, device_pages=5)))
     for p in prompts:
         eng.submit(p, max_new_tokens=8)
     out = eng.run()
@@ -477,7 +485,9 @@ def test_engine_rejects_page_size_not_dividing_capacity(dense_setup):
     from repro.serve.engine import Engine
     cfg, params = dense_setup
     with pytest.raises(PagingError):
-        Engine(cfg, params, max_batch=2, max_len=64, page_size=24)
+        Engine(cfg, params, EngineConfig(
+            max_batch=2, max_len=64,
+            paging=PagingConfig(page_size=24)))
 
 
 def test_engine_paged_offload_matches_dense_offload(dense_setup):
@@ -490,15 +500,16 @@ def test_engine_paged_offload_matches_dense_offload(dense_setup):
     cfg, params = dense_setup
     prompt = np.arange(7) % cfg.vocab_size
 
-    dense = Engine(cfg, params, max_batch=1, max_len=64,
-                   prefill_buckets=(16,), paging=False)
+    dense = Engine(cfg, params, EngineConfig(
+        max_batch=1, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(enabled=False)))
     dense.submit(prompt, max_new_tokens=4)
     dense.run()
     dense_tree = extract_slot(dense.cache, 0, 1)
 
-    eng = Engine(cfg, params, max_batch=1, max_len=64,
-                 prefill_buckets=(16,), offload_finished=True,
-                 page_size=8)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=1, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=8, offload_finished=True)))
     rid = eng.submit(prompt, max_new_tokens=4)
     eng.run()
     # the park traffic rode BULK astores on the shared AMU

@@ -6,6 +6,7 @@ import pytest
 
 from repro.configs import get_smoke
 from repro.models import init_params
+from repro.serve.config import EngineConfig, PagingConfig
 from repro.serve.engine import Engine
 
 
@@ -18,8 +19,8 @@ def dense_setup():
 
 def test_engine_completes_all_requests(dense_setup):
     cfg, params = dense_setup
-    eng = Engine(cfg, params, max_batch=3, max_len=64,
-                 prefill_buckets=(16, 32))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16, 32)))
     rng = np.random.default_rng(0)
     n = 7
     for i in range(n):
@@ -35,8 +36,8 @@ def test_engine_continuous_batching_overlaps(dense_setup):
     """More requests than slots must share decode steps (no drain barrier):
     total decode steps << requests x tokens."""
     cfg, params = dense_setup
-    eng = Engine(cfg, params, max_batch=4, max_len=64,
-                 prefill_buckets=(16,))
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_len=64, prefill_buckets=(16,)))
     for i in range(8):
         eng.submit(np.arange(4), max_new_tokens=6)
     out = eng.run()
@@ -48,8 +49,8 @@ def test_engine_continuous_batching_overlaps(dense_setup):
 def test_engine_deterministic(dense_setup):
     cfg, params = dense_setup
     def run_once():
-        eng = Engine(cfg, params, max_batch=2, max_len=64,
-                     prefill_buckets=(16,))
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=2, max_len=64, prefill_buckets=(16,)))
         eng.submit(np.arange(6), max_new_tokens=5)
         eng.submit(np.arange(3), max_new_tokens=5)
         return eng.run()
@@ -62,13 +63,13 @@ def test_engine_single_matches_batched(dense_setup):
     cfg, params = dense_setup
     prompt = np.arange(7) % cfg.vocab_size
 
-    solo = Engine(cfg, params, max_batch=1, max_len=64,
-                  prefill_buckets=(16,))
+    solo = Engine(cfg, params, EngineConfig(
+        max_batch=1, max_len=64, prefill_buckets=(16,)))
     solo.submit(prompt, max_new_tokens=4)
     solo_out = solo.run()[0]
 
-    busy = Engine(cfg, params, max_batch=3, max_len=64,
-                  prefill_buckets=(16,))
+    busy = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,)))
     rid = busy.submit(prompt, max_new_tokens=4)
     busy.submit(np.arange(12) % cfg.vocab_size, max_new_tokens=6)
     busy.submit(np.arange(3) % cfg.vocab_size, max_new_tokens=6)
@@ -78,8 +79,9 @@ def test_engine_single_matches_batched(dense_setup):
 
 def test_engine_kv_offload_parks_finished(dense_setup):
     cfg, params = dense_setup
-    eng = Engine(cfg, params, max_batch=2, max_len=64,
-                 prefill_buckets=(16,), offload_finished=True)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(offload_finished=True)))
     for i in range(3):
         eng.submit(np.arange(5), max_new_tokens=3)
     out = eng.run()
@@ -96,7 +98,7 @@ def test_engine_kv_offload_parks_finished(dense_setup):
 def test_engine_ssm_family():
     cfg = get_smoke("rwkv6-7b")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, max_batch=2, max_len=32)
+    eng = Engine(cfg, params, EngineConfig(max_batch=2, max_len=32))
     for i in range(3):
         eng.submit(np.arange(4 + i), max_new_tokens=4)
     out = eng.run()
