@@ -14,7 +14,16 @@ dry-runs — any movement is a code change, not noise):
   interactive-goodput ratio over watermark-FIFO drops more than
   ``--threshold`` below the baseline at any swept oversubscription, or
   when the 4x-oversubscription row falls under the 1.2x acceptance
-  floor,
+  floor; the same rows also carry a tail-latency gate —
+  ``ttft_p99_slo`` (lower is better) must not regress beyond
+  ``--threshold`` vs the baseline,
+* ``obs_overhead`` — the telemetry observer-effect guard: fails when
+  the tracer-disabled run's virtual-clock throughput (``paged_off``)
+  drifts from the committed baseline's ``paged_kv_sweep oversub=2``
+  row at all, when the tracer-enabled run degrades it more than
+  ``OBS_OVERHEAD_MAX`` (in practice 0% — telemetry never touches the
+  clock), or when any virtual-clock result differs between the three
+  modes (``deterministic=0``),
 * roofline (``--roofline docs/ROOFLINE.md``) — diffs the fresh
   ``roofline_cell`` rows against the committed roofline table and fails
   when any cell's bottleneck class flips or its step-time lower bound
@@ -47,6 +56,10 @@ PREFIX_FLOOR_AT_HALF = 1.5
 #: slo_goodput_sweep acceptance floor: interactive goodput of the
 #: SLO-aware scheduler over watermark-FIFO at 4x oversubscription.
 SLO_FLOOR_AT_4X = 1.2
+
+#: obs_overhead acceptance ceiling: virtual-clock throughput drift of
+#: the tracer-enabled sim vs the committed paged_kv_sweep baseline.
+OBS_OVERHEAD_MAX = 0.10
 
 
 def _parse_fields(derived: str) -> Dict[str, float]:
@@ -86,7 +99,13 @@ def check_sweep(cur_rows, base_rows, *, name: str, axis: str, metric: str,
             print(f"FAIL: {name} {axis}={x:g} row missing from current run")
             failed = True
             continue
+        if metric not in b or metric not in c:
+            print(f"WARN: {name} {axis}={x:g} lacks {metric} (not gated)")
+            continue
         bv, cv = b[metric], c[metric]
+        if bv == 0 or cv == 0:
+            print(f"WARN: {name} {axis}={x:g} {metric} is zero (not gated)")
+            continue
         change = (cv / bv - 1.0) if higher_is_better else (bv / cv - 1.0)
         status = "OK"
         if change < -threshold:
@@ -109,6 +128,47 @@ def check_prefix_floor(cur_rows) -> bool:
     print(f"{'OK' if ok else 'FAIL'}: prefix_reuse_sweep shared=0.5 "
           f"ttft_speedup={speedup:.3f} (floor {PREFIX_FLOOR_AT_HALF})")
     return not ok
+
+
+def check_obs_overhead(cur_rows, base_rows) -> bool:
+    """Telemetry observer-effect guard: tracing-disabled must match the
+    committed ``paged_kv_sweep oversub=2`` baseline exactly (the sim is
+    deterministic), tracing-enabled must degrade its virtual-clock
+    throughput < ``OBS_OVERHEAD_MAX``, and all three modes must agree
+    on every virtual result (``deterministic=1``)."""
+    rows = [r for r in cur_rows if r.get("name") == "obs_overhead"]
+    if not rows:
+        print("FAIL: current run has no obs_overhead row")
+        return True
+    f = _parse_fields(rows[0].get("derived", ""))
+    det = f.get("deterministic", 0.0) >= 1.0
+    failed = not det
+    ref = sweep_rows(base_rows, "paged_kv_sweep", "oversub") \
+        .get(2.0, {}).get("paged")
+    if ref:
+        off_drift = abs(f.get("paged_off", 0.0) / ref - 1.0)
+        on_drift = f.get("paged_on", float("inf")) / ref - 1.0
+        # 2e-3 relative: both rows round us/token to two decimals, so
+        # print rounding alone can move the ratio by ~1e-3 on a ~5us
+        # value; anything beyond that is a real observer effect
+        if off_drift > 2e-3:
+            print(f"FAIL: obs_overhead tracer-disabled run perturbed the "
+                  f"sim: paged_off={f.get('paged_off'):.3f} vs "
+                  f"baseline {ref:.3f}")
+            failed = True
+        if on_drift > OBS_OVERHEAD_MAX:
+            print(f"FAIL: obs_overhead tracer-enabled run degraded "
+                  f"virtual throughput {on_drift:+.1%} "
+                  f"(ceiling {OBS_OVERHEAD_MAX:.0%})")
+            failed = True
+    else:
+        print("WARN: baseline has no paged_kv_sweep oversub=2 row "
+              "(obs drift not gated)")
+    print(f"{'FAIL' if failed else 'OK'}: obs_overhead "
+          f"deterministic={int(det)} paged_off={f.get('paged_off', 0):.3f} "
+          f"paged_on={f.get('paged_on', 0):.3f} "
+          f"wall_frac={f.get('wall_frac', 0):.3f} (informational)")
+    return failed
 
 
 def check_slo_floor(cur_rows) -> bool:
@@ -227,7 +287,14 @@ def main(argv=None) -> int:
     failed |= check_sweep(cur, base, name="slo_goodput_sweep",
                           axis="oversub", metric="goodput_ratio",
                           threshold=args.threshold)
+    # tail-latency gate: p99 interactive TTFT under the SLO scheduler
+    # must not grow beyond threshold (lower is better)
+    failed |= check_sweep(cur, base, name="slo_goodput_sweep",
+                          axis="oversub", metric="ttft_p99_slo",
+                          threshold=args.threshold,
+                          higher_is_better=False)
     failed |= check_slo_floor(cur)
+    failed |= check_obs_overhead(cur, base)
     if args.roofline is not None:
         failed |= check_roofline(cur, args.roofline, args.threshold)
     if failed:

@@ -24,6 +24,13 @@ each gets a bench:
                          request oversubscription: interactive goodput
                          ratio + per-tier SLO attainment (the goodput
                          claim),
+  * obs_overhead       — telemetry observer-effect guard (repro.obs):
+                         the paged_kv_sweep 2x sim untraced /
+                         tracer-disabled / tracer-enabled must agree on
+                         the virtual clock (disabled == committed
+                         baseline exactly, enabled < 10% drift — gated
+                         in CI); wall-clock cost rides along as
+                         ``wall_frac``,
   * amu_runtime        — software-AMU issue/getfin overhead (runtime path),
   * kernels            — per-kernel interpret-mode us_per_call (semantic
     cost on CPU; real perf comes from the dry-run roofline, not this),
@@ -192,8 +199,68 @@ def bench_slo_goodput_sweep() -> None:
              f"attain_slo={r['int_attain_slo']:.3f} "
              f"ttft_p95_wm={r['ttft_p95_wm_us']:.0f}us "
              f"ttft_p95_slo={r['ttft_p95_slo_us']:.0f}us "
+             f"ttft_p99_wm={r['ttft_p99_wm_us']:.0f}us "
+             f"ttft_p99_slo={r['ttft_p99_slo_us']:.0f}us "
              f"preempts={r['preemptions_slo']:.0f} "
              f"sheds={r['shed_admissions_slo']:.0f}")
+
+
+def bench_obs_overhead(trace_out=None, metrics_out=None,
+                       repeats: int = 3) -> None:
+    """Telemetry observer-effect guard (repro.obs, PR 7).
+
+    Runs the exact ``paged_kv_sweep`` 2x-oversubscription sim three
+    ways — untraced, tracer-disabled (``Tracer(enabled=False)``
+    threaded through every instrumentation site), tracer-enabled — and
+    reports the *virtual-clock* throughput of each.  Telemetry observes
+    the simulation and must never perturb it: ``check_regression.py``
+    fails when the disabled run's ``paged_off`` drifts from the
+    committed baseline's ``paged_kv_sweep oversub=2`` row at all, or
+    the enabled run's ``paged_on`` degrades it more than 10% (in
+    practice 0% — the tracer never touches the clock).  Wall-clock cost
+    (``wall_frac``, min-of-``repeats``) is reported for the perf
+    trajectory but not hard-gated: CI boxes are too noisy for a
+    wall-time ceiling, while the virtual numbers are exact.
+
+    With ``trace_out``/``metrics_out`` set, the enabled run's trace and
+    metrics snapshot are written out — the CI artifact that
+    ``tools/trace_report.py --validate`` checks."""
+    from repro.obs import (MetricsRegistry, Tracer, write_chrome_trace,
+                           write_metrics)
+    from repro.paging.sim import simulate_paged_serving
+
+    def run_once(tracer, metrics):
+        t0 = time.perf_counter()
+        r = simulate_paged_serving(2.0, tracer=tracer, metrics=metrics)
+        return time.perf_counter() - t0, r
+
+    base_s = on_s = float("inf")
+    r_base = r_off = r_on = None
+    last = None
+    for _ in range(repeats):
+        s, r_base = run_once(None, None)
+        base_s = min(base_s, s)
+        _, r_off = run_once(Tracer(enabled=False), None)
+        tr, mx = Tracer(enabled=True), MetricsRegistry()
+        s, r_on = run_once(tr, mx)
+        on_s = min(on_s, s)
+        last = (tr, mx)
+    det = all(r_base[k] == r_off[k] == r_on[k]
+              for k in ("paged_us_per_token", "hit_rate", "demand_fetches",
+                        "bulk_writebacks"))
+    wall_frac = max(0.0, on_s / base_s - 1.0)
+    tr, mx = last
+    _row("obs_overhead", on_s * 1e6,
+         f"paged_base={r_base['paged_us_per_token']:.2f} "
+         f"paged_off={r_off['paged_us_per_token']:.2f} "
+         f"paged_on={r_on['paged_us_per_token']:.2f} "
+         f"deterministic={int(det)} events={len(tr.events)} "
+         f"wall_base={base_s*1e6:.0f}us wall_on={on_s*1e6:.0f}us "
+         f"wall_frac={wall_frac:.3f}")
+    if trace_out:
+        write_chrome_trace(trace_out, tr, mx)
+    if metrics_out:
+        write_metrics(metrics_out, mx)
 
 
 # ---------------------------------------------------------------------------
@@ -317,6 +384,13 @@ def main(argv=None) -> None:
                          "skip interpret-mode kernel timings")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows as a JSON array")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the obs_overhead bench's Chrome-trace "
+                         "JSON (load in ui.perfetto.dev or feed to "
+                         "tools/trace_report.py)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the obs_overhead bench's flat metrics "
+                         "snapshot JSON")
     args = ap.parse_args(argv)
 
     _ROWS.clear()
@@ -328,6 +402,8 @@ def main(argv=None) -> None:
     bench_mixed_batch_sweep()
     bench_prefix_reuse_sweep()
     bench_slo_goodput_sweep()
+    bench_obs_overhead(trace_out=args.trace_out,
+                       metrics_out=args.metrics_out)
     bench_amu_runtime(n=2_000 if args.smoke else 20_000)
     if not args.smoke:
         bench_kernels()

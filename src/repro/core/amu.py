@@ -43,6 +43,8 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs import NULL_TRACER
+
 __all__ = [
     "QoS",
     "AccessConfig",
@@ -122,6 +124,7 @@ class Request:
     config: AccessConfig
     state: RequestState = RequestState.PENDING
     issue_t: float = 0.0
+    start_t: float = 0.0          # backend start (0.0 = never started)
     done_t: float = 0.0
     payload: Any = None           # backend-specific handle / result
     error: Optional[BaseException] = None
@@ -258,6 +261,8 @@ class AMU:
         default_config: Optional[AccessConfig] = None,
         full_policy: QueueFullPolicy = QueueFullPolicy.BLOCK,
         clock: Callable[[], float] = time.monotonic,
+        tracer=None,
+        metrics=None,
     ) -> None:
         if max_outstanding < 1:
             raise AMUError("max_outstanding must be >= 1")
@@ -274,6 +279,18 @@ class AMU:
         self._in_flight: Dict[int, Request] = {}
         self._completed: Deque[int] = collections.deque()
         self.stats = collections.Counter()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self._notes: Dict[int, dict] = {}   # rid -> extra span args
+
+    def annotate(self, rid: int, **kw) -> None:
+        """Attach key/values to the transfer span emitted when ``rid``
+        retires (callers — the pager — tag seq/logical/window-wait).
+        Only call under ``tracer.enabled`` — notes die with the span."""
+        note = self._notes.get(rid)
+        if note is None:
+            note = self._notes[rid] = {}
+        note.update(kw)
 
     # -- clocks ------------------------------------------------------------
     def backend_clock(self) -> float:
@@ -333,11 +350,18 @@ class AMU:
             try:
                 self.backend.start(req)
                 req.state = RequestState.IN_FLIGHT
+                req.start_t = self._clock()
                 self._in_flight[rid] = req
             except BaseException as e:  # failed issue -> FAILED, poison req
                 req.state = RequestState.FAILED
                 req.error = e
                 self._completed.append(rid)
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "amu", req.config.qos.name, "fault",
+                        {"rid": rid, "kind": req.kind,
+                         "nbytes": req.nbytes,
+                         **self._notes.pop(rid, {})})
         for rid in list(self._in_flight):
             req = self._in_flight[rid]
             if self.backend.poll(req):
@@ -360,6 +384,19 @@ class AMU:
         req.done_t = self._clock()
         self._completed.append(req.rid)
         self.stats["completed"] += 1
+        qos = req.config.qos.name
+        if self.tracer.enabled:
+            # one span per transfer, issue -> retire, on the QoS track
+            # (queued_us = time waiting for a queue slot before the
+            # backend started moving bytes)
+            self.tracer.complete(
+                "amu", qos, req.kind, req.issue_t, req.done_t,
+                {"rid": req.rid, "nbytes": req.nbytes, "qos": qos,
+                 "queued_us": (req.start_t - req.issue_t) * 1e6,
+                 **self._notes.pop(req.rid, {})})
+        if self.metrics is not None:
+            self.metrics.observe(f"amu/latency_s/{req.kind}/{qos}",
+                                 req.done_t - req.issue_t)
 
     # -- completion path (getfin / wait) ------------------------------------
     def getfin(self) -> int:
@@ -391,6 +428,7 @@ class AMU:
             heapq.heapify(self._issue_q)
             self.backend.start(req)
             req.state = RequestState.IN_FLIGHT
+            req.start_t = self._clock()
             self._in_flight[rid] = req
         if req.state is RequestState.IN_FLIGHT:
             self.backend.finish(req)

@@ -18,7 +18,11 @@ Driver-level extras:
     the pager's QoS windows); combine with ``--workload`` to see the
     per-tier attainment report,
   * ``--dense`` / ``--kernel-impl`` A/B the paged decode path against
-    the dense per-slot cache and the kernel backends.
+    the dense per-slot cache and the kernel backends,
+  * ``--trace-out t.json`` writes a Perfetto-loadable timeline of the
+    run (AMU transfer spans, pager actions, per-QoS window occupancy,
+    request lifecycles — one virtual clock); ``--metrics-out m.json``
+    dumps every counter/histogram.  See ``tools/trace_report.py``.
 """
 
 from __future__ import annotations
@@ -142,6 +146,13 @@ def main(argv=None):
         print(f"[serve] scheduler: policy={econf.scheduler.policy} "
               f"shed={eng.stats['shed_admissions']} "
               f"deadline_misses={eng.stats['deadline_misses']}")
+    # eng.run() already wrote the files (EngineConfig.obs); just say where
+    if econf.obs.trace_out:
+        print(f"[serve] trace written to {econf.obs.trace_out} "
+              "(load in https://ui.perfetto.dev, or run "
+              "tools/trace_report.py on it)")
+    if econf.obs.metrics_out:
+        print(f"[serve] metrics written to {econf.obs.metrics_out}")
     return out
 
 

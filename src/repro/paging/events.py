@@ -31,6 +31,7 @@ import itertools
 from dataclasses import dataclass
 from typing import Any, Callable, Deque, Dict, List, Tuple
 
+from repro.obs import MetricsRegistry
 from repro.paging.page_table import PagePool, PagingError
 
 __all__ = ["EventKind", "Event", "EventLoop", "WatermarkPolicy",
@@ -136,12 +137,15 @@ class EventLoop:
         loop.tick()        # one decode step: post TICK + drain all
     """
 
-    def __init__(self) -> None:
+    def __init__(self, metrics: "MetricsRegistry" = None) -> None:
         self._q: Deque[Event] = collections.deque()
         self._handlers: Dict[EventKind, List[Callable[[Event], None]]] = \
             collections.defaultdict(list)
         self.ticks = 0
-        self.history: collections.Counter = collections.Counter()
+        # Counter-compatible view onto a shared MetricsRegistry, keyed
+        # by EventKind (history[EventKind.PREEMPT] etc. work unchanged)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.history = self.metrics.counters("events")
 
     def on(self, kind: EventKind, handler: Callable[[Event], None]) -> None:
         self._handlers[kind].append(handler)

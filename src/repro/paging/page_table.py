@@ -46,6 +46,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Hashable, List, Optional, Set, Tuple
 
 from repro.core.amu import AMUError
+from repro.obs import NULL_TRACER
 
 __all__ = ["PagingError", "PageState", "Frame", "PagePool", "PageTable",
            "NOT_MAPPED", "pages_for"]
@@ -293,6 +294,9 @@ class PageTable:
     def __init__(self, pool: PagePool):
         self.pool = pool
         self._maps: Dict[Hashable, List[PTE]] = {}
+        # bound by Pager.bind_obs: residency transitions emit one
+        # instant each on the ("pager", "residency") track when tracing
+        self.tracer = NULL_TRACER
 
     # -- sequence lifecycle --------------------------------------------------
     def register(self, seq: Hashable) -> None:
@@ -427,6 +431,9 @@ class PageTable:
         self._unmap(seq, logical, pte)
         pte.phys = NOT_MAPPED
         pte.state = PageState.PARKED
+        if self.tracer.enabled:
+            self.tracer.instant("pager", "residency", "PARKED",
+                                {"seq": seq, "logical": logical})
         return phys
 
     def mark_arriving(self, seq: Hashable, logical: int) -> int:
@@ -437,6 +444,9 @@ class PageTable:
                 f"fetch of non-parked page ({seq!r}, {logical}): {pte.state}")
         pte.phys = self.pool.alloc(seq, logical)
         pte.state = PageState.ARRIVING
+        if self.tracer.enabled:
+            self.tracer.instant("pager", "residency", "ARRIVING",
+                                {"seq": seq, "logical": logical})
         return pte.phys
 
     def mark_resident(self, seq: Hashable, logical: int) -> None:
@@ -446,6 +456,9 @@ class PageTable:
             raise PagingError(
                 f"arrival for page ({seq!r}, {logical}) in state {pte.state}")
         pte.state = PageState.RESIDENT
+        if self.tracer.enabled:
+            self.tracer.instant("pager", "residency", "RESIDENT",
+                                {"seq": seq, "logical": logical})
 
     def remap_private(self, seq: Hashable, logical: int) -> Tuple[int, int]:
         """Break a COW share: allocate a private frame for this mapping

@@ -31,10 +31,16 @@ from typing import Any, Callable, Deque, Dict, Hashable, List, Optional, Tuple
 from repro.core.amu import (AMU, AMUError, AccessConfig, FAILURE_CODE, QoS,
                             RequestState, SimBackend)
 from repro.core.offload import FarMemoryTier
+from repro.obs import MetricsRegistry, NULL_TRACER
 from repro.paging.page_table import (NOT_MAPPED, PagePool, PageState,
                                      PageTable, PagingError)
 
 __all__ = ["Pager", "QoSWindows"]
+
+#: per-QoS take/release counter keys (precomputed: no per-op f-strings)
+_TAKE_KEY = {q: f"window_take_{q.name.lower()}" for q in QoS}
+_RELEASE_KEY = {q: f"window_release_{q.name.lower()}" for q in QoS}
+_OCCUPANCY_TRACK = {q: f"window/{q.name}" for q in QoS}
 
 _PENDING = -2        # rid sentinel: request queued behind its QoS window
 
@@ -59,6 +65,20 @@ class QoSWindows:
                 raise PagingError(f"QoS window for {q.name} must be >= 1")
         self.limit = dict(windows)
         self.in_flight: Dict[QoS, int] = {q: 0 for q in windows}
+        # every take/release is counted (the acquire/release balance
+        # invariant reads these) and sampled onto one occupancy counter
+        # track per class when tracing is on
+        self.stats = MetricsRegistry().counters("pager")
+        self.tracer = NULL_TRACER
+
+    def bind_obs(self, stats, tracer) -> None:
+        """Point take/release accounting at a shared registry view +
+        tracer (existing counts carry over)."""
+        if stats is not self.stats:
+            for k, v in self.stats.items():
+                stats[k] += v
+            self.stats = stats
+        self.tracer = tracer
 
     def has_room(self, qos: QoS) -> bool:
         return self.in_flight[qos] < self.limit[qos]
@@ -67,11 +87,34 @@ class QoSWindows:
         if not self.has_room(qos):
             raise PagingError(f"QoS window {qos.name} full")
         self.in_flight[qos] += 1
+        self.stats[_TAKE_KEY[qos]] += 1
+        if self.tracer.enabled:
+            self.tracer.counter("pager", _OCCUPANCY_TRACK[qos],
+                                self.in_flight[qos])
 
     def release(self, qos: QoS) -> None:
         if self.in_flight[qos] <= 0:
             raise PagingError(f"QoS window {qos.name} release underflow")
         self.in_flight[qos] -= 1
+        self.stats[_RELEASE_KEY[qos]] += 1
+        if self.tracer.enabled:
+            self.tracer.counter("pager", _OCCUPANCY_TRACK[qos],
+                                self.in_flight[qos])
+
+    def check_invariants(self) -> None:
+        """Take/release counters must balance against live occupancy."""
+        for qos, limit in self.limit.items():
+            occ = self.in_flight[qos]
+            if not 0 <= occ <= limit:
+                raise PagingError(
+                    f"QoS window {qos.name} occupancy {occ} outside "
+                    f"[0, {limit}]")
+            takes = self.stats[_TAKE_KEY[qos]]
+            releases = self.stats[_RELEASE_KEY[qos]]
+            if takes - releases != occ:
+                raise PagingError(
+                    f"QoS window {qos.name} unbalanced: {takes} takes - "
+                    f"{releases} releases != {occ} in flight")
 
 
 class Pager:
@@ -99,6 +142,8 @@ class Pager:
         granularity: Optional[int] = None,
         read_frame: Optional[Callable[[int], Any]] = None,
         tier: Optional[FarMemoryTier] = None,
+        tracer=None,
+        metrics=None,
     ):
         self.pool = pool
         self.table = table
@@ -130,12 +175,52 @@ class Pager:
         self._inflight: Dict[int, Tuple[str, Hashable, int, QoS]] = {}
         self._page_rid: Dict[Tuple[Hashable, int], int] = {}
         self._pending: Dict[QoS, Deque[Tuple[str, Hashable, int,
-                                             Callable[[], int]]]] = {
+                                             Callable[[], int], float]]] = {
             QoS.LATENCY: collections.deque(),
             QoS.STANDARD: collections.deque(),
             QoS.BULK: collections.deque(),
         }
-        self.stats = collections.Counter()
+        # telemetry: stats is a Counter-compatible view onto a shared
+        # MetricsRegistry (repro.obs) — every existing stats["key"] call
+        # site works unchanged, and one metrics export sees everything
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = self.metrics.counters("pager")
+        self.tracer = NULL_TRACER
+        self._noframe_t: Dict[Tuple[Hashable, int], float] = {}
+        self._blocked_note: Dict[Tuple[Hashable, int], float] = {}
+        self.bind_obs(self.metrics, tracer)
+
+    def bind_obs(self, metrics=None, tracer=None) -> None:
+        """Bind this pager (and its AMU, windows, page table) to a shared
+        registry + tracer — the engine calls this so factory-built pagers
+        land on the engine's clock/registry.  Existing counts migrate."""
+        if metrics is not None and metrics is not self.metrics:
+            fresh = metrics.counters("pager")
+            for k, v in self.stats.items():
+                fresh[k] += v
+            self.metrics = metrics
+            self.stats = fresh
+        if tracer is not None:
+            self.tracer = tracer
+            self.amu.tracer = tracer
+            self.table.tracer = tracer
+        if self.amu.metrics is None or metrics is not None:
+            self.amu.metrics = self.metrics
+        self.windows.bind_obs(self.stats, self.tracer)
+
+    def _now(self) -> float:
+        return self.amu._clock()
+
+    def check_invariants(self) -> None:
+        """Window acquire/release accounting must balance: counter
+        deltas equal live occupancy, and occupancy equals the number of
+        requests this pager is actually tracking in flight."""
+        self.windows.check_invariants()
+        occ = sum(self.windows.in_flight.values())
+        if occ != len(self._inflight):
+            raise PagingError(
+                f"window occupancy {occ} != {len(self._inflight)} "
+                "tracked in-flight requests")
 
     # -- write path: park / writeback ---------------------------------------
     def writeback(self, seq: Hashable, logical: int, data: Any,
@@ -152,6 +237,10 @@ class Pager:
         self.tier.put((seq, logical), data, nbytes=self.page_nbytes,
                       tokens=tokens)
         self.stats["writeback"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant("pager", "actions", "writeback",
+                                {"seq": seq, "logical": logical,
+                                 "qos": qos.name})
         self._issue(qos, "astore", seq, logical,
                     lambda: self.amu.astore(data, nbytes=self.page_nbytes,
                                             config=self.evict_config,
@@ -166,6 +255,9 @@ class Pager:
                 "use writeback for dirty pages")
         self.table.mark_parked(seq, logical)
         self.stats["clean_evict"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant("pager", "actions", "clean_evict",
+                                {"seq": seq, "logical": logical})
 
     def evict(self, seq: Hashable, logical: int,
               qos: Optional[QoS] = None) -> None:
@@ -222,6 +314,9 @@ class Pager:
         done = self.evict_lru(deficit)
         if done:
             self.stats["watermark_evictions"] += done
+            if self.tracer.enabled:
+                self.tracer.instant("pager", "actions", "watermark_evict",
+                                    {"n": done, "free": self.pool.n_free})
         return done
 
     # -- read path: prefetch / demand fetch ---------------------------------
@@ -237,10 +332,24 @@ class Pager:
             return False
         if self.pool.n_free == 0:
             self.stats["prefetch_no_frame"] += 1
+            if self.tracer.enabled:
+                # first time this page is frame-blocked: remember when,
+                # so the eventual fetch span carries the blocked time
+                self._noframe_t.setdefault((seq, logical), self._now())
+                self.tracer.instant("pager", "actions", "prefetch_no_frame",
+                                    {"seq": seq, "logical": logical})
             return False
         self.table.mark_arriving(seq, logical)
         src = self.tier.home((seq, logical))
         self.stats["prefetch"] += 1
+        if self.tracer.enabled:
+            t_blocked = self._noframe_t.pop((seq, logical), None)
+            if t_blocked is not None:
+                self._blocked_note[(seq, logical)] = \
+                    (self._now() - t_blocked) * 1e6
+            self.tracer.instant("pager", "actions", "prefetch",
+                                {"seq": seq, "logical": logical,
+                                 "qos": qos.name})
         self._issue(qos, "aload", seq, logical,
                     lambda: self.amu.aload(src, nbytes=self.page_nbytes,
                                            config=self.fetch_config,
@@ -304,6 +413,10 @@ class Pager:
         kind, seq, logical, qos = self._inflight.pop(rid)
         self.windows.release(qos)
         self.stats[f"{kind}_failed"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant("pager", "actions", "fault",
+                                {"seq": seq, "logical": logical,
+                                 "kind": kind, "qos": qos.name})
         if kind != "aload":
             return
         self._page_rid.pop((seq, logical), None)
@@ -330,6 +443,9 @@ class Pager:
                 raise PagingError(
                     f"demand fetch of ({seq!r}, {logical}) failed to issue")
             self.stats["demand_fetch"] += 1
+            if self.tracer.enabled:
+                self.tracer.instant("pager", "actions", "demand_fetch",
+                                    {"seq": seq, "logical": logical})
         rid = self._page_rid.get((seq, logical), _PENDING)
         if rid == _PENDING:
             self._force_issue(seq, logical)
@@ -384,7 +500,10 @@ class Pager:
         real backend this is just a poll (time advances by itself)."""
         if isinstance(self.amu.backend, SimBackend):
             self.amu.backend.advance(dt)
-        return self.poll()
+        arrived = self.poll()
+        if self.tracer.enabled:
+            self.tracer.counter("pager", "free_frames", self.pool.n_free)
+        return arrived
 
     # -- issue machinery -----------------------------------------------------
     def _issue(self, qos: QoS, kind: str, seq: Hashable, logical: int,
@@ -397,34 +516,47 @@ class Pager:
             self.stats["window_queued"] += 1
             if kind == "aload":
                 self._page_rid[(seq, logical)] = _PENDING
-            self._pending[qos].append((kind, seq, logical, submit))
+            self._pending[qos].append((kind, seq, logical, submit,
+                                       self._now()))
+            if self.tracer.enabled:
+                self.tracer.instant("pager", "actions", "window_queued",
+                                    {"seq": seq, "logical": logical,
+                                     "kind": kind, "qos": qos.name})
 
     def _track(self, rid: int, kind: str, seq: Hashable, logical: int,
-               qos: QoS) -> None:
+               qos: QoS, queued_t: Optional[float] = None) -> None:
         self._inflight[rid] = (kind, seq, logical, qos)
         if kind == "aload":
             self._page_rid[(seq, logical)] = rid
+        if self.tracer.enabled:
+            note = {"seq": str(seq), "logical": logical}
+            if queued_t is not None:
+                note["window_wait_us"] = (self._now() - queued_t) * 1e6
+            blocked = self._blocked_note.pop((seq, logical), None)
+            if blocked is not None:
+                note["frame_blocked_us"] = blocked
+            self.amu.annotate(rid, **note)
 
     def _pump(self) -> None:
         # latency class drains first, bulk last (§2.2 QoS-ordered issue)
         for qos in (QoS.LATENCY, QoS.STANDARD, QoS.BULK):
             dq = self._pending[qos]
             while dq and self.windows.has_room(qos):
-                kind, seq, logical, submit = dq.popleft()
+                kind, seq, logical, submit, t_q = dq.popleft()
                 self.windows.take(qos)
                 rid = submit()
-                self._track(rid, kind, seq, logical, qos)
+                self._track(rid, kind, seq, logical, qos, queued_t=t_q)
 
     def _force_issue(self, seq: Hashable, logical: int) -> None:
         for qos, dq in self._pending.items():
-            for i, (kind, s, l, submit) in enumerate(dq):
+            for i, (kind, s, l, submit, t_q) in enumerate(dq):
                 if (s, l) == (seq, logical):
                     del dq[i]
                     while not self.windows.has_room(qos):
                         self._drain_one(qos)
                     self.windows.take(qos)
                     rid = submit()
-                    self._track(rid, kind, seq, logical, qos)
+                    self._track(rid, kind, seq, logical, qos, queued_t=t_q)
                     return
         raise PagingError(f"page ({seq!r}, {logical}) not pending")
 
@@ -471,5 +603,8 @@ class Pager:
             self.table.mark_resident(seq, logical)
             self.pool.touch(pte.phys)
             self.stats["arrived"] += 1
+            if self.tracer.enabled:
+                self.tracer.instant("pager", "actions", "arrived",
+                                    {"seq": seq, "logical": logical})
             return (seq, logical)
         return None

@@ -41,6 +41,8 @@ def simulate_paged_serving(
     bandwidth: float = 10e9,
     latency_window: int = 8,
     densify_bandwidth: float = 20e9,
+    tracer=None,
+    metrics=None,
 ) -> Dict[str, float]:
     """Serve ``n_seqs`` decode bursts whose KV starts in the far tier,
     with the device pool sized to ``total_pages / oversubscription``.
@@ -75,12 +77,14 @@ def simulate_paged_serving(
     # -- policy 2: AMU prefetching pager -----------------------------------
     pool = PagePool(pool_pages, page_size=1)
     table = PageTable(pool)
-    pamu = AMU(backend=SimBackend(base_latency=base_latency,
-                                  bandwidth=bandwidth),
-               max_outstanding=latency_window + 4)
+    sim_be = SimBackend(base_latency=base_latency, bandwidth=bandwidth)
+    pamu = AMU(backend=sim_be, max_outstanding=latency_window + 4)
+    if tracer is not None:
+        tracer.clock = lambda: sim_be.now    # spans on the sim clock
     pager = Pager(pool, table, pamu, page_nbytes=page_bytes,
-                  latency_window=latency_window, bulk_window=4)
-    loop = EventLoop()
+                  latency_window=latency_window, bulk_window=4,
+                  tracer=tracer, metrics=metrics)
+    loop = EventLoop(metrics=metrics)
     loop.on(EventKind.PAGE_ARRIVED,
             lambda ev: pool.touch(table.entry(*ev.payload).phys))
     for s in range(n_seqs):
@@ -639,6 +643,9 @@ def simulate_slo_schedule(
             "ttft_p95": int_ttft[min(len(int_ttft) - 1,
                                      int(0.95 * len(int_ttft)))]
             if int_ttft else 0.0,
+            "ttft_p99": int_ttft[min(len(int_ttft) - 1,
+                                     int(0.99 * len(int_ttft)))]
+            if int_ttft else 0.0,
             "batch_tok_per_s": batch_tokens / max(span, 1e-30),
             "wall": elapsed,
             "preempts": preempts,
@@ -667,6 +674,8 @@ def simulate_slo_schedule(
         "int_attain_slo": slo["attain"],
         "ttft_p95_wm_us": wm["ttft_p95"] * 1e6,
         "ttft_p95_slo_us": slo["ttft_p95"] * 1e6,
+        "ttft_p99_wm_us": wm["ttft_p99"] * 1e6,
+        "ttft_p99_slo_us": slo["ttft_p99"] * 1e6,
         "batch_tok_per_s_wm": wm["batch_tok_per_s"],
         "batch_tok_per_s_slo": slo["batch_tok_per_s"],
         "preemptions_slo": float(slo["preempts"]),

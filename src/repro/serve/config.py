@@ -48,8 +48,8 @@ from repro.paging import WatermarkPolicy
 
 __all__ = [
     "Tier", "VirtualClock", "PagingConfig", "ChunkingConfig",
-    "SchedulerConfig", "EngineConfig", "engine_config_from_kwargs",
-    "add_config_args", "config_from_args",
+    "SchedulerConfig", "ObsConfig", "EngineConfig",
+    "engine_config_from_kwargs", "add_config_args", "config_from_args",
 ]
 
 
@@ -162,6 +162,31 @@ class SchedulerConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Telemetry (:mod:`repro.obs`): the tracer rides the engine's one
+    :class:`VirtualClock`, so AMU transfer spans, pager actions, and
+    request lifecycle tracks share a single deterministic time axis.
+    Tracing is off by default and costs one branch per call site when
+    off; ``trace_out``/``metrics_out`` imply enabling it and write the
+    Perfetto-loadable timeline / flat metrics JSON when ``run()``
+    returns."""
+
+    trace: bool = _f(
+        False, "enable span/instant tracing even without --trace-out "
+        "(events stay in memory on engine.tracer)")
+    trace_out: Optional[str] = _f(
+        None, "write a Chrome-trace/Perfetto JSON timeline here after "
+        "run() (implies tracing on)")
+    metrics_out: Optional[str] = _f(
+        None, "write the flat metrics JSON (counters + gauges + "
+        "histogram percentiles) here after run()")
+
+    @property
+    def tracing(self) -> bool:
+        return bool(self.trace or self.trace_out)
+
+
+@dataclass(frozen=True)
 class EngineConfig:
     """Everything ``Engine.__init__`` takes besides the model + params."""
 
@@ -182,6 +207,8 @@ class EngineConfig:
                                      metadata={"cli": True})
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig,
                                        metadata={"cli": True})
+    obs: ObsConfig = field(default_factory=ObsConfig,
+                           metadata={"cli": True})
 
 
 # -- legacy flat-kwarg shim ---------------------------------------------------
@@ -243,7 +270,7 @@ def engine_config_from_kwargs(base: Optional[EngineConfig] = None,
 # new knob lands on the CLI (with its help string) the moment it lands
 # in the config — the API and the CLI cannot drift.
 
-_GROUPS = ("paging", "chunking", "scheduler")
+_GROUPS = ("paging", "chunking", "scheduler", "obs")
 
 
 def _cli_fields(dc_type):
@@ -279,7 +306,7 @@ def add_config_args(parser: argparse.ArgumentParser) -> None:
     (top level + every sub-config; names are unique by construction)."""
     seen = set()
     for dc in (EngineConfig, PagingConfig, ChunkingConfig,
-               SchedulerConfig):
+               SchedulerConfig, ObsConfig):
         for fld in _cli_fields(dc):
             if fld.name in seen:
                 raise TypeError(
@@ -322,8 +349,10 @@ def config_from_args(args: argparse.Namespace, **overrides) -> EngineConfig:
     paging = PagingConfig(**build(PagingConfig))
     chunking = ChunkingConfig(**build(ChunkingConfig))
     scheduler = SchedulerConfig(**build(SchedulerConfig))
+    obs = ObsConfig(**build(ObsConfig))
     cfg = EngineConfig(paging=paging, chunking=chunking,
-                       scheduler=scheduler, **build(EngineConfig))
+                       scheduler=scheduler, obs=obs,
+                       **build(EngineConfig))
     for path, value in overrides.items():
         group, _, fname = path.partition("_")
         if group in _GROUPS and fname:

@@ -101,6 +101,8 @@ from repro.launch.mesh import make_mesh_compat
 from repro.models import ssm as ssm_mod
 from repro.models.model import (Cache, PagedCache, encode_cross, init_cache,
                                 init_paged_cache, prefill)
+from repro.obs import (MetricsRegistry, Tracer, to_chrome_trace,
+                       write_chrome_trace, write_metrics)
 from repro.paging import (NOT_MAPPED, DeadlineQueue, EventKind, EventLoop,
                           PagePool, PageState, PageTable, Pager, PagingError,
                           PrefixCache, WatermarkPolicy, pages_for)
@@ -447,6 +449,13 @@ class Engine:
         # e.g. time.monotonic opts into wall-clock telemetry.
         self.clock = sc.clock if sc.clock is not None else VirtualClock()
         self._own_clock = sc.clock is None
+        # -- unified telemetry: one registry + one tracer on THE clock ------
+        # (repro.obs; ec.obs.tracing turns span emission on — default off,
+        # in which case every instrumented site costs one branch)
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(clock=self.clock, enabled=ec.obs.tracing)
+        self._phase_span: Dict[int, int] = {}    # rid -> open lifecycle sid
+        self._obs_started: set = set()           # rids with a queued span
         self.pool = SlotPool(max_batch)
         self.queue: List[Request] = []
         self.active: Dict[int, Request] = {}     # slot -> request
@@ -490,6 +499,11 @@ class Engine:
                                    page_nbytes=page_nbytes)
             if self.pager.read_frame is None:    # keep a factory's hook
                 self.pager.read_frame = self._read_frame
+            # adopt the pager (factory-built or not) into the engine's
+            # registry + tracer: its ad-hoc stats migrate into the
+            # "pager" counter group and its AMU/page-table emit spans on
+            # the engine clock
+            self.pager.bind_obs(self.metrics, self.tracer)
             # THE far tier: one FarMemoryTier behind the pager holds
             # every cold page — preempted, watermark-evicted, finished —
             # plus finished sequences' aux residues and the prefix
@@ -576,18 +590,22 @@ class Engine:
             self.prefix = PrefixCache(self.page_pool, self.page_table,
                                       self.pager, page_size)
 
-        self.events = EventLoop()
+        self.events = EventLoop(metrics=self.metrics)
         self.events.on(EventKind.TICK, self._on_tick)
         self.events.on(EventKind.PAGE_ARRIVED, self._on_page_arrived)
         self.events.on(EventKind.COMPLETE, self._on_complete)
         self.events.on(EventKind.DEADLINE, self._on_deadline)
-        self.stats = {"steps": 0, "prefills": 0, "admitted": 0,
-                      "preemptions": 0, "resumes": 0, "mixed_steps": 0,
-                      "chunks": 0, "prefill_preempts": 0,
-                      "prefix_hits": 0, "prefix_tokens_saved": 0,
-                      "prefix_far_hits": 0, "deadline_misses": 0,
-                      "slo_attained": 0, "slo_missed": 0,
-                      "shed_admissions": 0}
+        # dict-compatible view onto the shared registry ("engine" group):
+        # callers keep reading eng.stats["preemptions"] etc. unchanged
+        self.stats = self.metrics.counters(
+            "engine",
+            initial={"steps": 0, "prefills": 0, "admitted": 0,
+                     "preemptions": 0, "resumes": 0, "mixed_steps": 0,
+                     "chunks": 0, "prefill_preempts": 0,
+                     "prefix_hits": 0, "prefix_tokens_saved": 0,
+                     "prefix_far_hits": 0, "deadline_misses": 0,
+                     "slo_attained": 0, "slo_missed": 0,
+                     "shed_admissions": 0})
 
     # -- public API ----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
@@ -687,6 +705,15 @@ class Engine:
                         "admitted (free pages "
                         f"{self.page_pool.n_free if self.paging else 'n/a'}"
                         f", low watermark {self.policy.low})")
+        if not self.queue and not self.active and not self._resuming \
+                and not self.prefilling:
+            # fully drained: the telemetry counters must balance
+            self.check_invariants()
+        ob = self.config.obs
+        if ob.trace_out:
+            self.export_trace(ob.trace_out)
+        if ob.metrics_out:
+            self.export_metrics(ob.metrics_out)
         return {r.rid: r.generated for r in self.finished.values()}
 
     # -- event handlers -------------------------------------------------------
@@ -731,7 +758,7 @@ class Engine:
         token it has missed its SLO *now* — count it while it is still
         schedulable, so preemption's already-blown preference and the
         telemetry agree in real time rather than post hoc."""
-        _, rid = ev.payload
+        t, rid = ev.payload
         req = self.finished.get(rid)
         if req is None:
             for r in itertools.chain(self.queue, self.active.values(),
@@ -742,6 +769,71 @@ class Engine:
                     break
         if req is not None and not req.token_ts:
             self.stats["deadline_misses"] += 1
+            if self.tracer.enabled:
+                self.tracer.instant("engine", "sched", "deadline_miss",
+                                    {"rid": rid, "tier": req.tier.name,
+                                     "deadline": t})
+
+    # -- telemetry ------------------------------------------------------------
+    def _obs_phase(self, req: Request, name: Optional[str]) -> None:
+        """Advance a request's lifecycle track: close its current phase
+        span and open ``name`` (None just closes — the finish path).
+        The first phase a request ever enters also back-fills a
+        ``queued`` span covering arrival → now, so the Perfetto track
+        reads arrival → admit → prefill/decode → … end to end."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        tid = f"req{req.rid}"
+        if req.rid not in self._obs_started:
+            self._obs_started.add(req.rid)
+            tr.complete("requests", tid, "queued", req.arrival_t,
+                        args={"tier": req.tier.name})
+        tr.end(self._phase_span.pop(req.rid, 0))
+        if name is not None:
+            self._phase_span[req.rid] = tr.begin(
+                "requests", tid, name, {"tier": req.tier.name})
+
+    def check_invariants(self) -> None:
+        """Cross-layer conservation checks over the telemetry counters.
+
+        * preemptions == resumes + requests *currently* parked by a
+          preemption (a prefix-far admission parks without one, so only
+          ``n_preempts > 0`` requests count),
+        * ADMIT events == admissions + resumes (every ADMIT post has
+          exactly one matching stats increment),
+        * the pager's per-QoS window takes/releases balance its
+          in-flight gauges (see :meth:`Pager.check_invariants`).
+        """
+        s = self.stats
+        pending = sum(
+            1 for r in itertools.chain(self.queue, self._resuming.values())
+            if r.parked and r.n_preempts > 0)
+        if s["preemptions"] != s["resumes"] + pending:
+            raise PagingError(
+                f"preempt/resume imbalance: {s['preemptions']} preemptions "
+                f"!= {s['resumes']} resumes + {pending} currently parked")
+        admits = self.events.history.get(EventKind.ADMIT, 0)
+        if admits != s["admitted"] + s["resumes"]:
+            raise PagingError(
+                f"ADMIT event imbalance: {admits} events != "
+                f"{s['admitted']} admissions + {s['resumes']} resumes")
+        if self.pager is not None:
+            self.pager.check_invariants()
+
+    def export_trace(self, path: Optional[str] = None) -> dict:
+        """Chrome-trace/Perfetto JSON of everything traced so far (AMU
+        transfers, pager actions, residency flips, request lifecycle —
+        one virtual time axis).  Writes to ``path`` when given."""
+        if path is not None:
+            write_chrome_trace(path, self.tracer, metrics=self.metrics)
+        return to_chrome_trace(self.tracer, metrics=self.metrics)
+
+    def export_metrics(self, path: Optional[str] = None) -> dict:
+        """Flat JSON snapshot of every counter/gauge/histogram."""
+        if path is not None:
+            write_metrics(path, self.metrics)
+        return self.metrics.snapshot()
 
     # -- internals ------------------------------------------------------------
     def _bucket(self, plen: int) -> int:
@@ -967,6 +1059,7 @@ class Engine:
         self.pool.release(slot)
         self.queue.insert(0, req)
         self.stats["preemptions"] += 1
+        self._obs_phase(req, "parked")
         self.events.post(EventKind.PREEMPT, req.rid)
 
     def _park_prefilling(self, req: Request) -> None:
@@ -987,6 +1080,7 @@ class Engine:
         self.queue.insert(0, req)
         self.stats["preemptions"] += 1
         self.stats["prefill_preempts"] += 1
+        self._obs_phase(req, "parked")
         self.events.post(EventKind.PREEMPT, req.rid)
 
     def _start_resume(self, req: Request) -> bool:
@@ -1004,6 +1098,7 @@ class Engine:
         self.pager.prefetch_seq(req.rid, tail_first=True,
                                 qos=self.sched.fetch_qos(req))
         self._resuming[req.rid] = req
+        self._obs_phase(req, "resuming")
         return True
 
     def _try_finish_resumes(self) -> None:
@@ -1059,6 +1154,7 @@ class Engine:
                 self.active[slot] = req
             del self._resuming[rid]
             self.stats["admitted" if first_admit else "resumes"] += 1
+            self._obs_phase(req, "prefill" if req.mid_prefill else "decode")
             self.events.post(EventKind.ADMIT, rid)
 
     def _alloc_pinned(self, req: Request, n_tokens: int) -> None:
@@ -1216,6 +1312,12 @@ class Engine:
                     # request is batch-tier and the pool is too tight to
                     # take it without risking interactive deadlines
                     self.stats["shed_admissions"] += 1
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "engine", "sched", "shed",
+                            {"rid": req.rid, "tier": req.tier.name,
+                             "need_pages": need,
+                             "free": self.page_pool.n_free})
                     break
                 if not self.policy.can_admit(self.page_pool, need) and \
                         not self._make_room(need + self.policy.low,
@@ -1251,6 +1353,7 @@ class Engine:
                 req.admit_seq = next(self._admits)
                 self.prefilling[slot] = req
                 self.stats["admitted"] += 1
+                self._obs_phase(req, "prefill")
                 self.events.post(EventKind.ADMIT, req.rid)
                 continue
             logits, single = self._prefill_one(req)
@@ -1269,6 +1372,11 @@ class Engine:
             req.token_ts.append(req.first_token_t)
             self.active[slot] = req
             self.stats["admitted"] += 1
+            self._obs_phase(req, "decode")
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "requests", f"req{req.rid}", "first_token",
+                    {"ttft_s": req.first_token_t - req.arrival_t})
             self.events.post(EventKind.ADMIT, req.rid)
             self._finish_if_done(req)
 
@@ -1364,8 +1472,13 @@ class Engine:
         """Advance every picked request past its chunk; rows that just
         covered their prompt's last token graduate to the decode batch
         (their first sampled token is the chunk's last-valid logits)."""
+        tr = self.tracer
         for i, (req, start, end) in enumerate(picks):
             req.prefill_pos = end
+            if tr.enabled:
+                tr.instant("requests", f"req{req.rid}", "chunk",
+                           {"start": start, "end": end,
+                            "target": req.target_len})
             if self.cfg.family == "hybrid":
                 req.chunk_ssm = jax.tree_util.tree_map(
                     lambda a: np.asarray(a[:, i:i + 1]), carry)
@@ -1406,6 +1519,11 @@ class Engine:
         req.first_token_t = self.clock()
         req.token_ts.append(req.first_token_t)
         self.active[slot] = req
+        self._obs_phase(req, "decode")
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "requests", f"req{req.rid}", "first_token",
+                {"ttft_s": req.first_token_t - req.arrival_t})
         self._finish_if_done(req)
 
     def _step(self) -> None:
@@ -1440,10 +1558,14 @@ class Engine:
         if self.active:
             logits = np.asarray(logits)
             t_now = self.clock()
+            tr = self.tracer
             for slot, req in list(self.active.items()):
                 nxt = int(np.argmax(logits[slot]))
                 req.generated.append(nxt)
                 req.token_ts.append(t_now)
+                if tr.enabled:
+                    tr.instant("requests", f"req{req.rid}", "token",
+                               {"n": len(req.generated)})
                 self._finish_if_done(req)
         if picks:
             self._finish_chunks(picks, np.asarray(chunk_logits), carry)
@@ -1524,6 +1646,23 @@ class Engine:
         self.finished[req.rid] = req
         self.stats["slo_attained" if req.slo_attained()
                    else "slo_missed"] += 1
+        if req.token_ts:
+            tier = req.tier.name
+            self.metrics.observe(f"engine/ttft_s/{tier}", req.ttft)
+            if len(req.token_ts) > 1:
+                self.metrics.observe(f"engine/tpot_s/{tier}", req.tpot)
+        if self.tracer.enabled:
+            self._obs_phase(req, None)       # close the lifecycle track
+            # everything trace_report needs to rebuild slo_report() from
+            # the trace alone rides on this one instant
+            self.tracer.instant(
+                "requests", f"req{req.rid}", "finish",
+                {"tier": req.tier.name, "arrival": req.arrival_t,
+                 "first_token": req.first_token_t, "done": req.done_t,
+                 "n_new": len(req.generated),
+                 "n_preempts": req.n_preempts,
+                 "ttft_slo": req.ttft_slo, "tpot_slo": req.tpot_slo,
+                 "attained": bool(req.slo_attained())})
         self.events.post(EventKind.COMPLETE, req.rid)
         self.events.drain()
 
@@ -1557,6 +1696,8 @@ class Engine:
                 "ttft_p50": (float(np.percentile(ttfts, 50))
                              if ttfts else 0.0),
                 "ttft_p95": (float(np.percentile(ttfts, 95))
+                             if ttfts else 0.0),
+                "ttft_p99": (float(np.percentile(ttfts, 99))
                              if ttfts else 0.0),
             }
         return out

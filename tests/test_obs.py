@@ -1,0 +1,351 @@
+"""Telemetry-layer tests: spans, histograms, exporters, invariants.
+
+The observability PR's acceptance surface:
+
+  * spans are well-formed — every ``begin`` is closed by ``end``/
+    ``flush_open``, durations are non-negative, nothing outruns the
+    shared :class:`VirtualClock`,
+  * histogram percentiles track a numpy reference within the
+    log-bucketing bound (growth 1.05 ⇒ ≲5% relative error); count/sum/
+    min/max are exact,
+  * the Chrome-trace export passes ``tools/trace_report.py``'s schema
+    validation — including the no-overlap-per-track rule the exporter's
+    AMU lane packing exists to satisfy,
+  * a disabled tracer is free: no events, no open spans, sid 0,
+  * ``CounterView`` keeps every ``collections.Counter`` idiom the old
+    ad-hoc stats dicts relied on,
+  * property: the SLO report rebuilt *from the trace alone* equals the
+    engine's own ``slo_report()``, and the preempt/resume +
+    window-acquire/release conservation invariants hold after any run
+    — including AMU fault storms.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.core.amu import AMU, QoS, SimBackend
+from repro.models import init_params
+from repro.obs import (CounterView, Histogram, MetricsRegistry, NULL_TRACER,
+                       Tracer, to_chrome_trace)
+from repro.paging import (EventKind, PagePool, PageState, PageTable, Pager,
+                          PagingError)
+from repro.paging.sim import simulate_paged_serving
+from repro.serve import (ChunkingConfig, Engine, EngineConfig, PagingConfig,
+                         SchedulerConfig, VirtualClock)
+from repro.serve.config import ObsConfig
+from repro.serve.workload import WorkloadSpec, generate
+
+# tools/trace_report.py is deliberately standalone (stdlib only, no repro
+# import) so CI can run it on artifacts; load it here by path.
+_TR_PATH = (pathlib.Path(__file__).resolve().parent.parent
+            / "tools" / "trace_report.py")
+_spec = importlib.util.spec_from_file_location("trace_report", _TR_PATH)
+trace_report = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(trace_report)
+
+
+# -- metrics ------------------------------------------------------------------
+
+def test_counterview_counter_compat():
+    """Every idiom the old ad-hoc Counter/dict stats relied on."""
+    reg = MetricsRegistry()
+    stats = reg.counters("pager")
+    assert stats["missing"] == 0              # Counter: missing reads as 0
+    assert "missing" not in stats             # ... without being created
+    stats["writeback"] += 1
+    stats["writeback"] += 2
+    assert stats["writeback"] == 3
+    assert stats.get("writeback") == 3
+    assert stats.get("nope", 7) == 7
+    assert dict(stats) == {"writeback": 3}
+    assert stats == {"writeback": 3}          # tests compare against dicts
+    # two views of one group share storage; EventKind keys export by name
+    other = reg.counters("pager")
+    other[EventKind.PREEMPT] += 1
+    assert stats[EventKind.PREEMPT] == 1
+    snap = reg.snapshot()
+    assert snap["counters"]["pager"]["PREEMPT"] == 1
+    assert snap["counters"]["pager"]["writeback"] == 3
+
+
+def test_counters_initial_seeds_without_clobbering():
+    reg = MetricsRegistry()
+    reg.counters("engine")["steps"] = 5
+    view = reg.counters("engine", initial={"steps": 0, "prefills": 0})
+    assert view["steps"] == 5                 # existing value kept
+    assert view["prefills"] == 0              # new key seeded
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(1, 400),
+       spread=st.floats(0.1, 6.0))
+def test_histogram_percentiles_vs_numpy(seed, n, spread):
+    """Log-bucketed percentiles vs the numpy order-statistic reference.
+
+    The histogram's rank walk selects the bucket holding the
+    ``ceil(rank)`` order statistic, i.e. numpy's ``method="higher"``;
+    the returned geometric bucket midpoint is then within a factor
+    ``sqrt(growth)`` of that sample.  min/max/count/sum are exact.
+    """
+    rng = np.random.default_rng(seed)
+    samples = np.exp(rng.normal(-6.0, spread, n))     # latency-shaped
+    h = Histogram("t", growth=1.05)
+    for v in samples:
+        h.observe(float(v))
+    assert h.count == n
+    assert h.min == samples.min()
+    assert h.max == samples.max()
+    assert h.mean == pytest.approx(samples.mean())
+    for q in (50.0, 95.0, 99.0):
+        ref = float(np.percentile(samples, q, method="higher"))
+        got = h.percentile(q)
+        assert got == pytest.approx(ref, rel=0.055), (q, ref, got)
+    # max is the operative tail stat and must carry no bucketing error
+    assert h.percentile(100.0) == samples.max()
+
+
+def test_histogram_empty_and_floor():
+    h = Histogram()
+    assert h.p50 == 0.0 and h.max == 0.0 and h.mean == 0.0
+    h.observe(0.0)                            # at/below floor: bucket 0
+    assert h.p50 == 0.0
+    assert h.count == 1
+
+
+# -- tracer -------------------------------------------------------------------
+
+def test_spans_wellformed_on_virtual_clock():
+    clock = VirtualClock()
+    tr = Tracer(clock=clock)
+    a = tr.begin("p", "t1", "outer")
+    clock.advance(1.0)
+    b = tr.begin("p", "t2", "inner", {"k": 1})
+    clock.advance(0.5)
+    tr.end(b, {"extra": True})
+    tr.instant("p", "t1", "tick")
+    clock.advance(0.25)
+    tr.end(a)
+    assert not tr.open_spans                  # every begin was closed
+    now = clock()
+    for ph, pid, tid, name, ts, dur, args in tr.events:
+        assert ts >= 0.0
+        if ph == "X":
+            assert dur >= 0.0
+            assert ts + dur <= now + 1e-12    # nothing outruns the clock
+    # the inner span merged its end args into its begin args
+    inner = next(e for e in tr.events if e[3] == "inner")
+    assert inner[6] == {"k": 1, "extra": True}
+    # double-end and unknown sids are tolerated no-ops
+    tr.end(b)
+    tr.end(12345)
+
+
+def test_flush_open_closes_dangling_spans():
+    clock = VirtualClock()
+    tr = Tracer(clock=clock)
+    tr.begin("p", "t", "dangling")
+    clock.advance(2.0)
+    doc = to_chrome_trace(tr)
+    assert doc["otherData"]["open_spans_flushed"] == 1
+    assert not tr.open_spans
+    sp = next(e for e in doc["traceEvents"] if e["ph"] == "X")
+    assert sp["args"]["incomplete"] is True
+    assert sp["dur"] == pytest.approx(2.0 * 1e6)
+
+
+def test_disabled_tracer_is_free():
+    tr = Tracer(enabled=False)
+    assert tr.begin("p", "t", "x") == 0       # sid 0: end(0) is a no-op
+    tr.end(0)
+    tr.instant("p", "t", "i")
+    tr.counter("p", "c", 1.0)
+    tr.complete("p", "t", "x", 0.0, 1.0)
+    assert tr.events == [] and not tr.open_spans
+    assert NULL_TRACER.events == []           # the shared instance too
+    assert to_chrome_trace(tr)["traceEvents"] == []
+
+
+# -- exporter schema ----------------------------------------------------------
+
+def test_sim_trace_passes_schema_validation():
+    """A real paging-sim run exports valid Chrome-trace JSON: every
+    pid/tid named, spans non-overlapping per track (the AMU lane
+    packing), per-QoS window-occupancy counter tracks present."""
+    tracer = Tracer()
+    metrics = MetricsRegistry()
+    simulate_paged_serving(2.0, n_seqs=4, pages_per_seq=4, new_tokens=8,
+                           tracer=tracer, metrics=metrics)
+    doc = to_chrome_trace(tracer, metrics=metrics)
+    assert trace_report.validate(doc) == []
+    phases = {e["ph"] for e in doc["traceEvents"]}
+    assert {"M", "X", "C"} <= phases
+    # round-trips through JSON (the --trace-out payload)
+    doc2 = json.loads(json.dumps(doc))
+    assert trace_report.validate(doc2) == []
+    counters = {e["name"] for e in doc["traceEvents"] if e["ph"] == "C"}
+    assert "window/LATENCY" in counters
+    # AMU transfer spans landed, tagged with the queueing breakdown
+    pids, tids = trace_report.track_names(doc["traceEvents"])
+    amu_spans = [e for e in doc["traceEvents"]
+                 if e["ph"] == "X" and pids[e["pid"]] == "amu"]
+    assert amu_spans
+    assert all("queued_us" in e["args"] for e in amu_spans)
+    assert metrics.histograms                 # per-kind/QoS latency hists
+
+
+def test_validator_rejects_malformed_docs():
+    assert trace_report.validate([]) != []
+    assert trace_report.validate({"traceEvents": [{"ph": "Z"}]}) != []
+    # overlapping spans on one unnamed track: two problems at least
+    bad = {"traceEvents": [
+        {"ph": "X", "pid": 1, "tid": 1, "name": "a", "ts": 0.0, "dur": 10.0},
+        {"ph": "X", "pid": 1, "tid": 1, "name": "b", "ts": 5.0, "dur": 10.0},
+    ]}
+    probs = trace_report.validate(bad)
+    assert any("overlaps" in p for p in probs)
+
+
+# -- pager invariants under faults --------------------------------------------
+
+def test_pager_invariants_survive_fault_storm():
+    """Window acquire/release must balance even when every transfer
+    faults: the ``{kind}_failed`` reap path releases windows and
+    reverts ARRIVING pages, so ``check_invariants`` stays green."""
+    fail = {"on": True}
+
+    def latency_fn(req):
+        if fail["on"]:
+            raise RuntimeError("injected far-memory fault")
+        return 5e-6
+
+    pool = PagePool(8, 4)
+    table = PageTable(pool)
+    metrics = MetricsRegistry()
+    amu = AMU(backend=SimBackend(base_latency=5e-6, bandwidth=10e9,
+                                 latency_fn=latency_fn), max_outstanding=64)
+    pager = Pager(pool, table, amu, page_nbytes=1 << 12,
+                  tracer=Tracer(), metrics=metrics)
+    table.register_parked("s", 4)
+    for l in range(4):
+        pager.store_far("s", l, None)
+    assert pager.prefetch_seq("s") == 4
+    pager.advance(1.0)                        # reaps all four failures
+    pager.check_invariants()
+    assert pager.stats["aload_failed"] == 4
+    assert table.logical_pages("s", PageState.PARKED) == [0, 1, 2, 3]
+    fail["on"] = False                        # fault clears: retry fills
+    pager.prefetch_seq("s")
+    pager.advance(1.0)
+    pager.check_invariants()
+    assert table.resident("s")
+    # fault instants were traced on both the AMU and pager tracks
+    faults = [e for e in pager.tracer.events
+              if e[0] == "i" and e[3] == "fault" and e[1] == "amu"]
+    assert len(faults) == 4
+    pager_faults = [e for e in pager.tracer.events
+                    if e[0] == "i" and e[3] == "fault" and e[1] == "pager"]
+    assert len(pager_faults) == 4
+
+
+# -- engine: trace-derived SLO report == the engine's own ---------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("phi4-mini-3.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run_traced(cfg, params, seed, device_pages):
+    ec = EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(device_pages=device_pages, page_size=8),
+        chunking=ChunkingConfig(chunk_tokens=8),
+        scheduler=SchedulerConfig(policy="slo", step_dt=2e-3),
+        obs=ObsConfig(trace=True))
+    eng = Engine(cfg, params, ec)
+    spec = WorkloadSpec(rate=2000.0, prompt_median=8.0, prompt_sigma=0.5,
+                        max_prompt=16, min_output=2, max_output=8,
+                        interactive_frac=0.5, ttft_slo=20e-3, tpot_slo=5e-3)
+    rng = np.random.default_rng(seed)
+    for wr in generate(8, spec, seed=seed):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              wr.prompt_len).astype(np.int32)
+        eng.submit(prompt, max_new_tokens=wr.output_len, tier=wr.tier,
+                   ttft_slo=wr.ttft_slo, tpot_slo=wr.tpot_slo,
+                   arrival_t=wr.arrival_t)
+    eng.run()
+    return eng
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**16), device_pages=st.sampled_from([8, 10]))
+def test_property_trace_reproduces_slo_report(setup, seed, device_pages):
+    """The whole point of the telemetry layer: the trace is a complete
+    record.  ``slo_report()`` recomputed from the exported JSON alone
+    (by the standalone trace_report tool) must match the engine's —
+    attainment and goodput exactly, TTFT percentiles to float noise —
+    and the conservation invariants must hold on the drained engine."""
+    cfg, params = setup
+    eng = _run_traced(cfg, params, seed, device_pages)
+    eng.check_invariants()                    # preempt/resume + windows
+    doc = json.loads(json.dumps(eng.export_trace()))
+    assert trace_report.validate(doc) == []
+    assert doc["otherData"]["open_spans_flushed"] == 0
+    derived = trace_report.report_from_trace(doc)
+    own = eng.slo_report()
+    assert derived["elapsed"] == pytest.approx(own["elapsed"])
+    for tier in ("interactive", "batch"):
+        d, o = derived[tier], own[tier]
+        assert d["n"] == o["n"]
+        assert d["attained"] == o["attained"]
+        assert d["attainment"] == pytest.approx(o["attainment"])
+        assert d["good_tokens"] == o["good_tokens"]
+        assert d["goodput"] == pytest.approx(o["goodput"])
+        for q in ("ttft_p50", "ttft_p95", "ttft_p99"):
+            assert d[q] == pytest.approx(o[q], abs=1e-9)
+    # preemption storms leave their pager/residency signature on the trace
+    if eng.stats["preemptions"]:
+        counts = trace_report.lifecycle_counts(doc)
+        assert counts.get("pager/PARKED", 0) > 0
+        assert counts.get("requests/parked", 0) == eng.stats["preemptions"]
+
+
+def test_engine_invariant_check_detects_imbalance(setup):
+    cfg, params = setup
+    eng = _run_traced(cfg, params, 0, 10)
+    eng.check_invariants()
+    eng.stats["preemptions"] += 1             # corrupt the books
+    with pytest.raises(PagingError, match="imbalance"):
+        eng.check_invariants()
+
+
+def test_engine_tracing_off_by_default(setup):
+    """Default EngineConfig: tracer disabled, stats still registry-backed
+    (one shared metrics export), trace export empty but valid."""
+    cfg, params = setup
+    ec = EngineConfig(max_batch=2, max_len=64, prefill_buckets=(16,),
+                      chunking=ChunkingConfig(chunk_tokens=8))
+    eng = Engine(cfg, params, ec)
+    assert not eng.tracer.enabled
+    assert not eng.config.obs.tracing
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                   max_new_tokens=3)
+    eng.run()
+    eng.check_invariants()
+    assert eng.tracer.events == []            # zero allocations kept
+    doc = eng.export_trace()
+    assert trace_report.validate(doc) == []
+    snap = eng.export_metrics()
+    assert snap["counters"]["engine"]["admitted"] == 3
+    assert "events" in snap["counters"]       # EventLoop shares the registry
+    assert eng.stats["admitted"] == 3         # CounterView reads unchanged

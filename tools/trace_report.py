@@ -1,0 +1,299 @@
+#!/usr/bin/env python3
+"""Offline analysis of a repro.obs Chrome-trace JSON (``--trace-out``).
+
+Standalone on purpose — stdlib only, no ``repro`` import — so CI can run
+it on an uploaded trace artifact without the package or its toolchain:
+
+  python tools/trace_report.py t.json             # human-readable report
+  python tools/trace_report.py t.json --validate  # schema check, exit != 0
+  python tools/trace_report.py t.json --json      # the report as JSON
+
+What it derives, from the trace alone:
+
+  * **schema validation** — every event well-formed for its phase type,
+    every pid/tid backed by a metadata name event, spans non-negative
+    and non-overlapping per track (the exporter lane-packs AMU tracks
+    precisely so this holds),
+  * **SLO report reproduction** — per-tier attainment/goodput/TTFT
+    percentiles recomputed from the request-lifecycle ``finish``
+    instants; must equal the engine's own ``slo_report()`` (asserted in
+    ``tests/test_obs.py``),
+  * **queueing-delay breakdown per QoS** — where each AMU transfer's
+    wall time went: waiting in the pager's QoS window queue
+    (``window_wait_us``), blocked on a free device frame
+    (``frame_blocked_us``), queued for an AMU slot (``queued_us``), and
+    actually in flight (span duration minus slot wait),
+  * **window occupancy / lifecycle counts** — peak per-QoS occupancy
+    from the counter tracks, preempt/resume/shed instants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Any, Dict, List, Tuple
+
+PHASES = {"M", "X", "i", "C"}
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """numpy.percentile(xs, q) with the default linear interpolation."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    rank = (q / 100.0) * (len(s) - 1)
+    lo = int(math.floor(rank))
+    hi = min(lo + 1, len(s) - 1)
+    frac = rank - lo
+    return s[lo] * (1.0 - frac) + s[hi] * frac
+
+
+def track_names(events: List[dict]) -> Tuple[Dict[int, str],
+                                             Dict[Tuple[int, int], str]]:
+    """pid -> process name, (pid, tid) -> thread name from "M" events."""
+    pids: Dict[int, str] = {}
+    tids: Dict[Tuple[int, int], str] = {}
+    for ev in events:
+        if ev.get("ph") != "M":
+            continue
+        if ev.get("name") == "process_name":
+            pids[ev["pid"]] = ev["args"]["name"]
+        elif ev.get("name") == "thread_name":
+            tids[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    return pids, tids
+
+
+# -- validation ---------------------------------------------------------------
+
+def validate(doc: Any) -> List[str]:
+    """Schema problems (empty list == valid Chrome-trace JSON)."""
+    probs: List[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["document is not a dict with a traceEvents list"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents is not a list"]
+    pids, tids = track_names(events)
+    spans: Dict[Tuple[int, int], List[Tuple[float, float, str]]] = {}
+    for i, ev in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            probs.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in PHASES:
+            probs.append(f"{where}: bad ph {ph!r}")
+            continue
+        for key in ("pid", "tid", "name"):
+            if key not in ev:
+                probs.append(f"{where}: missing {key}")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            probs.append(f"{where}: bad ts {ts!r}")
+            continue
+        if ev["pid"] not in pids:
+            probs.append(f"{where}: pid {ev['pid']} has no process_name")
+        elif (ev["pid"], ev["tid"]) not in tids:
+            probs.append(f"{where}: tid {ev['tid']} has no thread_name")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                probs.append(f"{where}: bad dur {dur!r}")
+            else:
+                spans.setdefault((ev["pid"], ev["tid"]), []).append(
+                    (ts, dur, ev.get("name", "?")))
+        elif ph == "i":
+            if ev.get("s") not in ("t", "p", "g"):
+                probs.append(f"{where}: instant missing scope s")
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                probs.append(f"{where}: counter without a value")
+    # complete spans on one thread must nest/abut, never overlap (the
+    # exporter lane-packs the AMU tracks to guarantee this)
+    for (pid, tid), sp in spans.items():
+        sp.sort()
+        open_end = -math.inf
+        for ts, dur, name in sp:
+            if ts < open_end - 1e-3 and ts + dur > open_end + 1e-3:
+                track = tids.get((pid, tid), f"{pid}/{tid}")
+                probs.append(
+                    f"track {track}: span {name!r} at ts={ts:.1f} "
+                    f"overlaps the previous span ending {open_end:.1f}")
+            open_end = max(open_end, ts + dur)
+    return probs
+
+
+# -- SLO report reproduction --------------------------------------------------
+
+def report_from_trace(doc: dict) -> Dict[str, Any]:
+    """Rebuild the engine's ``slo_report()`` from lifecycle instants."""
+    events = doc["traceEvents"]
+    pids, _ = track_names(events)
+    elapsed = max(float(doc.get("otherData", {}).get("clock_s", 0.0)), 1e-12)
+    by_tier: Dict[str, List[dict]] = {}
+    for ev in events:
+        if ev.get("ph") == "i" and ev.get("name") == "finish" \
+                and pids.get(ev["pid"]) == "requests":
+            a = ev.get("args", {})
+            by_tier.setdefault(str(a.get("tier", "?")).lower(), []).append(a)
+    out: Dict[str, Any] = {"elapsed": elapsed}
+    for tier in ("interactive", "batch"):
+        rows = by_tier.get(tier, [])
+        ttfts = [float(a["first_token"]) - float(a["arrival"])
+                 for a in rows if a.get("n_new", 0) > 0]
+        good = [a for a in rows if a.get("attained")]
+        good_tokens = sum(int(a.get("n_new", 0)) for a in good)
+        out[tier] = {
+            "n": len(rows),
+            "attained": len(good),
+            "attainment": len(good) / len(rows) if rows else 1.0,
+            "good_tokens": good_tokens,
+            "goodput": good_tokens / elapsed,
+            "ttft_p50": percentile(ttfts, 50),
+            "ttft_p95": percentile(ttfts, 95),
+            "ttft_p99": percentile(ttfts, 99),
+        }
+    return out
+
+
+# -- AMU queueing-delay breakdown ---------------------------------------------
+
+def amu_breakdown(doc: dict) -> Dict[str, Dict[str, float]]:
+    """Per-QoS decomposition of every AMU transfer's wall time."""
+    events = doc["traceEvents"]
+    pids, tids = track_names(events)
+    out: Dict[str, Dict[str, float]] = {}
+    for ev in events:
+        if ev.get("ph") != "X" or pids.get(ev["pid"]) != "amu":
+            continue
+        lane = tids.get((ev["pid"], ev["tid"]), "?")
+        qos = lane.split("·")[0]        # strip the ·N lane suffix
+        args = ev.get("args", {})
+        row = out.setdefault(qos, {
+            "n": 0, "bytes": 0.0, "total_us": 0.0, "queued_us": 0.0,
+            "in_flight_us": 0.0, "window_wait_us": 0.0,
+            "frame_blocked_us": 0.0, "faults": 0})
+        queued = float(args.get("queued_us", 0.0))
+        row["n"] += 1
+        row["bytes"] += float(args.get("nbytes", 0.0))
+        row["total_us"] += ev["dur"]
+        row["queued_us"] += queued
+        row["in_flight_us"] += max(0.0, ev["dur"] - queued)
+        row["window_wait_us"] += float(args.get("window_wait_us", 0.0))
+        row["frame_blocked_us"] += float(args.get("frame_blocked_us", 0.0))
+    for ev in events:
+        if ev.get("ph") == "i" and ev.get("name") == "fault" \
+                and pids.get(ev["pid"]) == "amu":
+            qos = tids.get((ev["pid"], ev["tid"]), "?").split("·")[0]
+            if qos in out:
+                out[qos]["faults"] += 1
+    return out
+
+
+def occupancy_peaks(doc: dict) -> Dict[str, float]:
+    """Peak value of every counter track (per-QoS window occupancy)."""
+    peaks: Dict[str, float] = {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") == "C":
+            v = float(ev.get("args", {}).get("value", 0.0))
+            name = ev.get("name", "?")
+            peaks[name] = max(peaks.get(name, 0.0), v)
+    return peaks
+
+
+def lifecycle_counts(doc: dict) -> Dict[str, int]:
+    """How many of each pager/engine/request instant the trace holds."""
+    pids, _ = track_names(doc["traceEvents"])
+    counts: Dict[str, int] = {}
+    for ev in doc["traceEvents"]:
+        if ev.get("ph") in ("i", "X") and pids.get(ev["pid"]) != "amu":
+            key = f"{pids.get(ev['pid'], '?')}/{ev.get('name', '?')}"
+            counts[key] = counts.get(key, 0) + 1
+    return counts
+
+
+def build_report(doc: dict) -> Dict[str, Any]:
+    return {
+        "slo": report_from_trace(doc),
+        "amu_qos": amu_breakdown(doc),
+        "counter_peaks": occupancy_peaks(doc),
+        "lifecycle": lifecycle_counts(doc),
+        "open_spans_flushed": doc.get("otherData", {})
+                                 .get("open_spans_flushed", 0),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Analyse a repro.obs Chrome-trace JSON")
+    ap.add_argument("trace", help="path to a --trace-out JSON file")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check only; exit non-zero on problems")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full report as JSON on stdout")
+    args = ap.parse_args(argv)
+
+    doc = load(args.trace)
+    probs = validate(doc)
+    if args.validate:
+        if probs:
+            for p in probs:
+                print(f"INVALID: {p}", file=sys.stderr)
+            return 1
+        n = len(doc["traceEvents"])
+        print(f"OK: {n} events, "
+              f"{doc.get('otherData', {}).get('open_spans_flushed', 0)} "
+              "open spans flushed")
+        return 0
+    if probs:
+        for p in probs:
+            print(f"warning: {p}", file=sys.stderr)
+
+    rep = build_report(doc)
+    if args.json:
+        json.dump(rep, sys.stdout, indent=2, sort_keys=True)
+        print()
+        return 0
+
+    slo = rep["slo"]
+    print(f"elapsed (virtual): {slo['elapsed'] * 1e3:.2f} ms")
+    for tier in ("interactive", "batch"):
+        t = slo[tier]
+        print(f"  {tier}: n={t['n']} attainment={t['attainment']:.2f} "
+              f"goodput={t['goodput']:.1f} tok/s "
+              f"ttft p50/p95/p99 = {t['ttft_p50'] * 1e3:.2f}/"
+              f"{t['ttft_p95'] * 1e3:.2f}/{t['ttft_p99'] * 1e3:.2f} ms")
+    if rep["amu_qos"]:
+        print("AMU transfers by QoS (means per transfer):")
+        for qos, r in sorted(rep["amu_qos"].items()):
+            n = max(1, r["n"])
+            print(f"  {qos}: n={r['n']} "
+                  f"window_wait={r['window_wait_us'] / n:.1f}us "
+                  f"frame_blocked={r['frame_blocked_us'] / n:.1f}us "
+                  f"amu_queue={r['queued_us'] / n:.1f}us "
+                  f"in_flight={r['in_flight_us'] / n:.1f}us "
+                  f"faults={r['faults']}")
+    if rep["counter_peaks"]:
+        peaks = ", ".join(f"{k}={v:.0f}"
+                          for k, v in sorted(rep["counter_peaks"].items()))
+        print(f"counter peaks: {peaks}")
+    interesting = {k: v for k, v in sorted(rep["lifecycle"].items())
+                   if not k.startswith("requests/")}
+    if interesting:
+        print("pager/engine events: "
+              + ", ".join(f"{k}={v}" for k, v in interesting.items()))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
