@@ -17,6 +17,13 @@ dry-runs — any movement is a code change, not noise):
   floor; the same rows also carry a tail-latency gate —
   ``ttft_p99_slo`` (lower is better) must not regress beyond
   ``--threshold`` vs the baseline,
+* ``disagg_sweep`` — fails when any of the disaggregated-vs-fused
+  ratios (``tpot_ratio`` / ``ttft_ratio`` / ``goodput_ratio``) at any
+  swept oversubscription drops more than ``--threshold`` below the
+  baseline, or when the 2x row falls under the absolute floors:
+  inter-token latency must favour the split
+  (``tpot_ratio >= 1.05``) and the split must keep at least half of
+  fused goodput at matched device counts,
 * ``obs_overhead`` — the telemetry observer-effect guard: fails when
   the tracer-disabled run's virtual-clock throughput (``paged_off``)
   drifts from the committed baseline's ``paged_kv_sweep oversub=2``
@@ -60,6 +67,13 @@ SLO_FLOOR_AT_4X = 1.2
 #: obs_overhead acceptance ceiling: virtual-clock throughput drift of
 #: the tracer-enabled sim vs the committed paged_kv_sweep baseline.
 OBS_OVERHEAD_MAX = 0.10
+
+#: disagg_sweep acceptance floors at 2x oversubscription: the decode
+#: device's mean inter-token latency must beat the fused engines'
+#: (tpot_ratio — the interference-isolation claim), and the split must
+#: keep at least this fraction of fused goodput at matched devices.
+DISAGG_TPOT_FLOOR_AT_2X = 1.05
+DISAGG_GOODPUT_FLOOR_AT_2X = 0.50
 
 
 def _parse_fields(derived: str) -> Dict[str, float]:
@@ -169,6 +183,25 @@ def check_obs_overhead(cur_rows, base_rows) -> bool:
           f"paged_on={f.get('paged_on', 0):.3f} "
           f"wall_frac={f.get('wall_frac', 0):.3f} (informational)")
     return failed
+
+
+def check_disagg_floor(cur_rows) -> bool:
+    """Absolute acceptance at 2x load: disaggregation must win
+    inter-token latency (tpot_ratio >= floor) while keeping at least
+    half of fused goodput at matched device counts."""
+    cur = sweep_rows(cur_rows, "disagg_sweep", "oversub")
+    row = cur.get(2.0)
+    if row is None:
+        print("FAIL: disagg_sweep has no oversub=2 row")
+        return True
+    tpot = row.get("tpot_ratio", 0.0)
+    good = row.get("goodput_ratio", 0.0)
+    ok = tpot >= DISAGG_TPOT_FLOOR_AT_2X and \
+        good >= DISAGG_GOODPUT_FLOOR_AT_2X
+    print(f"{'OK' if ok else 'FAIL'}: disagg_sweep oversub=2 "
+          f"tpot_ratio={tpot:.3f} (floor {DISAGG_TPOT_FLOOR_AT_2X}) "
+          f"goodput_ratio={good:.3f} (floor {DISAGG_GOODPUT_FLOOR_AT_2X})")
+    return not ok
 
 
 def check_slo_floor(cur_rows) -> bool:
@@ -294,6 +327,16 @@ def main(argv=None) -> int:
                           threshold=args.threshold,
                           higher_is_better=False)
     failed |= check_slo_floor(cur)
+    # disaggregation gates: per-row regression on all three ratios plus
+    # the absolute TPOT/goodput floors at 2x (matched device counts)
+    failed |= check_sweep(cur, base, name="disagg_sweep", axis="oversub",
+                          metric="tpot_ratio", threshold=args.threshold)
+    failed |= check_sweep(cur, base, name="disagg_sweep", axis="oversub",
+                          metric="ttft_ratio", threshold=args.threshold)
+    failed |= check_sweep(cur, base, name="disagg_sweep", axis="oversub",
+                          metric="goodput_ratio",
+                          threshold=args.threshold)
+    failed |= check_disagg_floor(cur)
     failed |= check_obs_overhead(cur, base)
     if args.roofline is not None:
         failed |= check_roofline(cur, args.roofline, args.threshold)

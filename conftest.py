@@ -9,9 +9,10 @@ completely inert.
 
 The stub covers exactly the API surface the test-suite uses — ``given``,
 ``settings``, ``assume`` and the ``integers`` / ``floats`` / ``booleans``
-/ ``sampled_from`` / ``lists`` / ``tuples`` / ``just`` / ``one_of``
-strategies — drawing pseudo-random examples from a per-test seeded RNG
-(reproducible across runs; no shrinking, no example database).
+/ ``sampled_from`` / ``lists`` / ``tuples`` / ``just`` / ``one_of`` /
+``permutations`` / ``sets`` / ``data`` strategies — drawing
+pseudo-random examples from a per-test seeded RNG (reproducible across
+runs; no shrinking, no example database).
 """
 
 from __future__ import annotations
@@ -73,6 +74,39 @@ def _build_hypothesis_stub() -> types.ModuleType:
         flat = list(strategies)
         return _Strategy(lambda rnd: rnd.choice(flat).draw(rnd))
 
+    def permutations(values):
+        values = list(values)
+
+        def draw(rnd):
+            out = list(values)
+            rnd.shuffle(out)
+            return out
+        return _Strategy(draw)
+
+    def sets(elements, *, min_size=0, max_size=None, **_kw):
+        def draw(rnd):
+            n = rnd.randint(min_size, 10 if max_size is None else max_size)
+            out = set()
+            for _ in range(n * 5):       # bounded retry on duplicates
+                if len(out) >= n:
+                    break
+                out.add(elements.draw(rnd))
+            return out
+        return _Strategy(draw)
+
+    class _DataObject:
+        """Interactive draws (``st.data()``): strategies drawn mid-test
+        from the same per-test seeded RNG."""
+
+        def __init__(self, rnd):
+            self._rnd = rnd
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rnd)
+
+    def data():
+        return _Strategy(lambda rnd: _DataObject(rnd))
+
     st.integers = integers
     st.floats = floats
     st.booleans = booleans
@@ -81,6 +115,9 @@ def _build_hypothesis_stub() -> types.ModuleType:
     st.tuples = tuples
     st.just = just
     st.one_of = one_of
+    st.permutations = permutations
+    st.sets = sets
+    st.data = data
 
     class _Unsatisfied(Exception):
         pass

@@ -6,8 +6,9 @@
 
 Every ``--`` engine flag below is auto-generated from the
 :class:`repro.serve.config.EngineConfig` dataclass fields (one flag per
-knob, help text included), so the CLI cannot drift from the config API.
-Driver-level extras:
+knob, help text included), so the CLI cannot drift from the config API
+— including ``--role`` (fused / prefill / decode).  Driver-level
+extras:
 
   * ``--workload`` replaces the uniform synthetic requests with the
     production traffic model (:mod:`repro.serve.workload`): bursty
@@ -17,6 +18,15 @@ Driver-level extras:
     (EDF chunk order, batch shedding, deadline-aware preemption onto
     the pager's QoS windows); combine with ``--workload`` to see the
     per-tier attainment report,
+  * ``--disagg`` runs the disaggregated walkthrough in one process: a
+    PREFILL and a DECODE engine over ONE shared far tier, driven by
+    :func:`repro.serve.disagg.run_disaggregated` (prefill graduates
+    each request at its first token and BULK-parks its pages; decode
+    adopts it through the resume machinery),
+  * ``--role prefill --handoff-spool d.pkl`` runs the prefill half
+    alone and spools records *plus their tier entries* to a file;
+    ``--role decode --handoff-spool d.pkl`` adopts that spool in a
+    separate process — the two-process version of ``--disagg``,
   * ``--dense`` / ``--kernel-impl`` A/B the paged decode path against
     the dense per-slot cache and the kernel backends,
   * ``--trace-out t.json`` writes a Perfetto-loadable timeline of the
@@ -28,6 +38,7 @@ Driver-level extras:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -36,8 +47,132 @@ import numpy as np
 from repro.configs import get_config, get_smoke
 from repro.models.model import init_params
 from repro.serve.config import add_config_args, config_from_args
+from repro.serve.disagg import (make_shared_tier, run_disaggregated,
+                                spool_load, spool_save, tier_pager_factory)
 from repro.serve.engine import Engine
 from repro.serve.workload import WorkloadSpec, generate
+
+
+def _submit_requests(eng, args, cfg, econf, rng) -> None:
+    """Queue the synthetic or workload-model requests on ``eng``."""
+    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
+    if args.workload:
+        spec = WorkloadSpec(rate=args.workload_rate,
+                            max_prompt=max(4, econf.max_len // 2))
+        for wr in generate(args.requests, spec, seed=args.seed):
+            plen = min(wr.prompt_len, econf.max_len - wr.output_len - 1)
+            prompt = np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, max(1, plen))])
+            kwargs = {}
+            if cfg.family == "encdec":
+                kwargs["src_embeds"] = rng.standard_normal(
+                    (len(prompt), cfg.d_model)).astype(np.float32)
+            eng.submit(prompt, max_new_tokens=wr.output_len,
+                       tier=wr.tier, ttft_slo=wr.ttft_slo,
+                       tpot_slo=wr.tpot_slo, arrival_t=wr.arrival_t,
+                       **kwargs)
+    else:
+        for _ in range(args.requests):
+            plen = int(rng.integers(4, min(32, econf.max_len // 2)))
+            prompt = np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, plen)])
+            kwargs = {}
+            if cfg.family == "encdec":
+                kwargs["src_embeds"] = rng.standard_normal(
+                    (plen, cfg.d_model)).astype(np.float32)
+            eng.submit(prompt, max_new_tokens=args.max_new, **kwargs)
+
+
+def _report(eng, econf, out, wall) -> None:
+    total_new = sum(len(v) for v in out.values())
+    lat = [r.done_t - r.submitted_t for r in eng.finished.values()]
+    ttft = [r.first_token_t - r.submitted_t for r in eng.finished.values()]
+    print(f"[serve] {len(out)} requests, {total_new} tokens in {wall:.2f}s "
+          f"({total_new / wall:.1f} tok/s)")
+    print(f"[serve] decode steps {eng.stats['steps']} "
+          f"(batch occupancy "
+          f"{total_new / max(1, eng.stats['steps'] * econf.max_batch):.2f})")
+    if lat:
+        print(f"[serve] mean TTFT {np.mean(ttft)*1e3:.0f} ms, "
+              f"mean latency {np.mean(lat)*1e3:.0f} ms")
+    if eng.paging:
+        print(f"[serve] page pool {eng.page_pool.n_pages} x "
+              f"{eng.page_size} tok: preemptions {eng.stats['preemptions']}, "
+              f"resumes {eng.stats['resumes']}, pager {dict(eng.pager.stats)}")
+    if eng.chunking:
+        print(f"[serve] chunked prefill: {eng.stats['chunks']} chunks of "
+              f"<= {eng.chunk_tokens} tok across "
+              f"{eng.stats['mixed_steps']} mixed steps "
+              f"({eng.stats['prefills']} dense-prefill fallbacks)")
+    if eng.prefix is not None:
+        print(f"[serve] prefix cache: {eng.stats['prefix_hits']} page hits "
+              f"({eng.stats['prefix_far_hits']} far), "
+              f"{eng.stats['prefix_tokens_saved']} prefill tokens saved, "
+              f"{eng.prefix.stats['interned']} pages interned")
+
+
+def _role_config(econf, role: str, factory, board=None):
+    """The fused CLI config re-targeted at one disaggregated role."""
+    return dataclasses.replace(
+        econf, role=role, handoff=board,
+        paging=dataclasses.replace(econf.paging, pager_factory=factory))
+
+
+def _run_disagg(args, econf, cfg, params, rng):
+    """In-process PREFILL + DECODE walkthrough over one shared tier."""
+    tier = make_shared_tier()
+    factory = tier_pager_factory(tier)
+    pre = Engine(cfg, params, _role_config(econf, "prefill", factory))
+    dec = Engine(cfg, params, _role_config(econf, "decode", factory,
+                                           board=pre.handoff))
+    _submit_requests(pre, args, cfg, econf, rng)
+    t0 = time.time()
+    out = run_disaggregated(pre, dec)
+    wall = time.time() - t0
+    total_new = sum(len(v) for v in out.values())
+    print(f"[serve] disaggregated: {len(out)} requests, {total_new} "
+          f"tokens in {wall:.2f}s ({total_new / wall:.1f} tok/s)")
+    print(f"[serve] prefill: {pre.stats['handoffs']} handoffs, "
+          f"{pre.stats['chunks']} chunks, "
+          f"pager {dict(pre.pager.stats)}")
+    print(f"[serve] decode:  {dec.stats['handoffs']} adoptions, "
+          f"{dec.stats['resumes']} resumes, "
+          f"{dec.stats['steps']} steps, pager {dict(dec.pager.stats)}")
+    print(f"[serve] shared tier: {dict(tier.stats)}")
+    return out
+
+
+def _run_role(args, econf, cfg, params, rng):
+    """One disaggregated half in this process, handing off via a spool
+    file (``--role prefill`` writes it, ``--role decode`` adopts it)."""
+    if not args.handoff_spool:
+        raise SystemExit(
+            "--role prefill/decode needs --handoff-spool PATH (or use "
+            "--disagg to run both halves in one process)")
+    tier = make_shared_tier()
+    factory = tier_pager_factory(tier)
+    eng = Engine(cfg, params, _role_config(econf, econf.role, factory))
+    t0 = time.time()
+    if econf.role == "prefill":
+        _submit_requests(eng, args, cfg, econf, rng)
+        eng.run()
+        recs = eng.handoff.poll()
+        spool_save(args.handoff_spool, recs, tier)
+        wall = time.time() - t0
+        print(f"[serve] prefill: {len(recs)} handoff records "
+              f"(+ tier entries) spooled to {args.handoff_spool} "
+              f"in {wall:.2f}s")
+        print(f"[serve] prefill pager {dict(eng.pager.stats)}")
+        return {rec.rid: list(rec.generated) for rec in recs}
+    recs = spool_load(args.handoff_spool, tier)
+    for rec in recs:
+        eng.admit_handoff(rec)
+    out = eng.run()
+    wall = time.time() - t0
+    print(f"[serve] decode: adopted {len(recs)} records from "
+          f"{args.handoff_spool}")
+    _report(eng, econf, out, wall)
+    return out
 
 
 def main(argv=None):
@@ -64,6 +199,15 @@ def main(argv=None):
     ap.add_argument("--slo", action="store_true",
                     help="shorthand for --policy slo (goodput "
                          "scheduling; pairs with --workload)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the disaggregated walkthrough: a PREFILL "
+                         "and a DECODE engine over one shared far tier "
+                         "in this process (see --role/--handoff-spool "
+                         "for the two-process version)")
+    ap.add_argument("--handoff-spool", default=None, metavar="PATH",
+                    help="with --role prefill: write handoff records + "
+                         "tier entries here after the run; with --role "
+                         "decode: adopt them from here")
     ap.add_argument("--seed", type=int, default=0)
     add_config_args(ap)     # one --flag per EngineConfig field
     args = ap.parse_args(argv)
@@ -77,62 +221,20 @@ def main(argv=None):
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    eng = Engine(cfg, params, econf)
-
     rng = np.random.default_rng(args.seed)
-    shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
+
+    if args.disagg:
+        return _run_disagg(args, econf, cfg, params, rng)
+    if econf.role != "fused":
+        return _run_role(args, econf, cfg, params, rng)
+
+    eng = Engine(cfg, params, econf)
     t0 = time.time()
-    if args.workload:
-        spec = WorkloadSpec(rate=args.workload_rate,
-                            max_prompt=max(4, econf.max_len // 2))
-        for wr in generate(args.requests, spec, seed=args.seed):
-            plen = min(wr.prompt_len, econf.max_len - wr.output_len - 1)
-            prompt = np.concatenate(
-                [shared, rng.integers(0, cfg.vocab_size, max(1, plen))])
-            kwargs = {}
-            if cfg.family == "encdec":
-                kwargs["src_embeds"] = rng.standard_normal(
-                    (len(prompt), cfg.d_model)).astype(np.float32)
-            eng.submit(prompt, max_new_tokens=wr.output_len,
-                       tier=wr.tier, ttft_slo=wr.ttft_slo,
-                       tpot_slo=wr.tpot_slo, arrival_t=wr.arrival_t,
-                       **kwargs)
-    else:
-        for i in range(args.requests):
-            plen = int(rng.integers(4, min(32, econf.max_len // 2)))
-            prompt = np.concatenate(
-                [shared, rng.integers(0, cfg.vocab_size, plen)])
-            kwargs = {}
-            if cfg.family == "encdec":
-                kwargs["src_embeds"] = rng.standard_normal(
-                    (plen, cfg.d_model)).astype(np.float32)
-            eng.submit(prompt, max_new_tokens=args.max_new, **kwargs)
+    _submit_requests(eng, args, cfg, econf, rng)
     out = eng.run()
     wall = time.time() - t0
 
-    total_new = sum(len(v) for v in out.values())
-    lat = [r.done_t - r.submitted_t for r in eng.finished.values()]
-    ttft = [r.first_token_t - r.submitted_t for r in eng.finished.values()]
-    print(f"[serve] {len(out)} requests, {total_new} tokens in {wall:.2f}s "
-          f"({total_new / wall:.1f} tok/s)")
-    print(f"[serve] decode steps {eng.stats['steps']} "
-          f"(batch occupancy {total_new / max(1, eng.stats['steps'] * econf.max_batch):.2f})")
-    print(f"[serve] mean TTFT {np.mean(ttft)*1e3:.0f} ms, "
-          f"mean latency {np.mean(lat)*1e3:.0f} ms")
-    if eng.paging:
-        print(f"[serve] page pool {eng.page_pool.n_pages} x "
-              f"{eng.page_size} tok: preemptions {eng.stats['preemptions']}, "
-              f"resumes {eng.stats['resumes']}, pager {dict(eng.pager.stats)}")
-    if eng.chunking:
-        print(f"[serve] chunked prefill: {eng.stats['chunks']} chunks of "
-              f"<= {eng.chunk_tokens} tok across "
-              f"{eng.stats['mixed_steps']} mixed steps "
-              f"({eng.stats['prefills']} dense-prefill fallbacks)")
-    if eng.prefix is not None:
-        print(f"[serve] prefix cache: {eng.stats['prefix_hits']} page hits "
-              f"({eng.stats['prefix_far_hits']} far), "
-              f"{eng.stats['prefix_tokens_saved']} prefill tokens saved, "
-              f"{eng.prefix.stats['interned']} pages interned")
+    _report(eng, econf, out, wall)
     if econf.paging.offload_finished:
         print(f"[serve] far-tier AMU stats: {dict(eng.far_tier.amu.stats)}")
     if args.workload or args.slo:

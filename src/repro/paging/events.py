@@ -45,6 +45,8 @@ class EventKind(enum.Enum):
     PREEMPT = "preempt"              # a victim must shed pages
     COMPLETE = "complete"            # a sequence finished
     DEADLINE = "deadline"            # a request's SLO deadline passed
+    HANDOFF = "handoff"              # prefill graduated a request to the
+                                     # shared far tier (disaggregation)
 
 
 @dataclass

@@ -474,6 +474,31 @@ class Pager:
         for logical in range(self.table.n_pages(seq)):
             self.wait_page(seq, logical)
 
+    def fetch_keys(self, keys: List[Hashable], *,
+                   discard_after: bool = False) -> Dict[Hashable, Any]:
+        """Overlapped fault-safe fetch of raw far-tier entries (the
+        tier-payload analogue of :meth:`prefetch_seq` + :meth:`wait_seq`
+        for pages): every key's aload is issued before the first wait so
+        the transfers overlap, then each is verified landed.
+
+        The one fault discipline both reuse paths share — the engine's
+        ``fetch_finished`` reassembly and the cross-engine handoff
+        admission: a mid-transfer :class:`~repro.core.amu.AMUError`
+        propagates with every home copy *intact* (``FarMemoryTier.get``
+        clears only the pending transfer), so the caller retries by
+        calling again; with ``discard_after`` the entries are dropped
+        only once **all** payloads verifiably landed — never before."""
+        tier = self.tier
+        for key in keys:
+            tier.prefetch(key)              # issue everything first
+        out: Dict[Hashable, Any] = {}
+        for key in keys:
+            out[key] = tier.get(key)        # raises on fault; nothing
+        if discard_after:                   # discarded yet
+            for key in keys:
+                tier.discard(key)
+        return out
+
     # -- far-tier access (delegates to the shared FarMemoryTier) -------------
     def far_copy(self, seq: Hashable, logical: int) -> Any:
         return self.tier.home((seq, logical))

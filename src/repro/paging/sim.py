@@ -26,7 +26,8 @@ from repro.paging.page_table import PagePool, PageState, PageTable
 from repro.paging.pager import Pager
 
 __all__ = ["simulate_paged_serving", "simulate_mixed_batching",
-           "simulate_prefix_reuse", "simulate_slo_schedule"]
+           "simulate_prefix_reuse", "simulate_slo_schedule",
+           "simulate_disagg"]
 
 
 def simulate_paged_serving(
@@ -202,6 +203,7 @@ def simulate_mixed_batching(
         ttft = [0.0] * n_seqs
         done = 0
         decode_steps = 0
+        decode_time = 0.0
         while done < n_seqs:
             # admit while slots + pages-above-watermark allow
             while queue and (len(running) + len(prefilling)) < max_batch:
@@ -235,6 +237,7 @@ def simulate_mixed_batching(
             now += step
             if running:
                 decode_steps += 1
+                decode_time += step
             for seq in sorted(prefilling):
                 if prefilling[seq] >= prompt_tokens:
                     del prefilling[seq]
@@ -261,6 +264,9 @@ def simulate_mixed_batching(
             "wall": now,
             "decode_tok_per_s": total_new / now,
             "decode_steps": decode_steps,
+            # mean decode-step cost = inter-token latency: chunk work
+            # stretches a mixed step to max(t_decode_step, chunk FLOPs)
+            "tpot_mean": decode_time / max(1, decode_steps),
         }
 
     dense = run(chunked=False)
@@ -277,6 +283,142 @@ def simulate_mixed_batching(
         "tok_per_s_mixed": mixed["decode_tok_per_s"],
         "throughput_speedup": (mixed["decode_tok_per_s"]
                                / dense["decode_tok_per_s"]),
+        "tpot_dense_us": dense["tpot_mean"] * 1e6,
+        "tpot_mixed_us": mixed["tpot_mean"] * 1e6,
+    }
+
+
+def simulate_disagg(
+    oversubscription: float,
+    *,
+    max_batch: int = 4,
+    prompt_tokens: int = 128,
+    new_tokens: int = 32,
+    page_size: int = 16,
+    chunk_tokens: int = 8,
+    chunk_slots: int = 2,
+    low_watermark: int = 1,
+    t_decode_step: float = 20e-6,
+    t_prefill_token: float = 1.5e-6,
+    page_bytes: int = 256 << 10,
+    base_latency: float = 10e-6,
+    bandwidth: float = 10e9,
+) -> Dict[str, float]:
+    """Two-pool disaggregated prefill/decode vs fused mixed batching, at
+    matched device counts, deterministic.
+
+    Both sides get **two devices** and the same offered load
+    (``oversubscription * max_batch * 4`` requests *per device*, all at
+    t=0):
+
+    * **fused** — two independent ``make_mixed_step`` engines, each
+      taking half the traffic: every step fuses one decode token per
+      running slot with up to ``chunk_slots`` prompt chunks, so chunk
+      FLOPs stretch decode steps (``max(t_decode_step, chunk_work)``)
+      and decode slots throttle prefill throughput — the interference
+      disaggregation removes,
+    * **disaggregated** — one PREFILL device + one DECODE device over a
+      shared far tier.  The prefill device runs prompts back-to-back at
+      full compute density (no decode interference) and emits each
+      request's **first token itself** (the engine's PREFILL role
+      finishes at first token), then graduates: a BULK astore parks the
+      prompt's KV pages + aux residue in the shared tier
+      (``base_latency + pages * page_bytes / bandwidth``, overlapped
+      with the next prompt's compute).  The decode device admits each
+      handoff through a LATENCY fetch of those pages — overlapped with
+      its running decode batch, exactly like the engine's resume
+      machinery — and decodes the remaining tokens at an *unstretched*
+      ``t_decode_step`` (no chunk work in its steps).
+
+    The trade this exposes is the one production disaggregation is
+    deployed for: the fused engines win raw TTFT and aggregate
+    throughput at these scales (chunking already hides prefill FLOPs
+    under decode weight streaming, and two fused devices prefill two
+    prompt streams in parallel), while the disaggregated split wins
+    **inter-token latency** — the decode device's steps are never
+    stretched by chunk work, so TPOT is flat ``t_decode_step`` instead
+    of ``max(t_decode_step, chunk_work)`` whenever prompts are in
+    flight.  Returns mean TTFT, mean TPOT and aggregate decode
+    tokens/s for both sides; ``ttft_ratio`` / ``tpot_ratio`` /
+    ``goodput_ratio`` are oriented so > 1 always means disaggregation
+    won that axis.
+    """
+    per_dev = max(1, int(round(oversubscription * max_batch * 4)))
+    n_seqs = 2 * per_dev
+    pages = -(-prompt_tokens // page_size)
+    xfer = base_latency + pages * page_bytes / bandwidth
+
+    # -- fused baseline: one engine's mixed-batching loop, half traffic
+    # (the second device is identical and independent)
+    fused = simulate_mixed_batching(
+        oversubscription, max_batch=max_batch,
+        prompt_tokens=prompt_tokens, new_tokens=new_tokens,
+        page_size=page_size, chunk_tokens=chunk_tokens,
+        chunk_slots=chunk_slots, low_watermark=low_watermark,
+        t_decode_step=t_decode_step, t_prefill_token=t_prefill_token)
+    fused_ttft = fused["ttft_mixed_us"] * 1e-6
+    fused_tpot = fused["tpot_mixed_us"] * 1e-6
+    fused_tok_s = 2 * fused["tok_per_s_mixed"]        # two devices
+
+    # -- disaggregated: prefill device serialises every prompt ---------
+    # (dense full-compute prefill + the first-token step; graduation's
+    # BULK park overlaps the next prompt)
+    now = 0.0
+    ttft = []
+    ready = []                   # handoff visible to the decode side at
+    for _ in range(n_seqs):      # first-token time + BULK park
+        now += prompt_tokens * t_prefill_token + t_decode_step
+        ttft.append(now)
+        ready.append(now + xfer)
+
+    # -- decode device: admit handoffs through a LATENCY fetch that
+    # overlaps the running batch, then pure decode steps
+    t = 0.0
+    remaining = {i: new_tokens - 1 for i in range(n_seqs)}
+    running: Dict[int, int] = {}
+    nxt = 0
+    decoded = 0
+    while remaining or running:
+        while nxt < n_seqs and len(running) < max_batch:
+            # fetch overlaps decode: the admission lands at whichever is
+            # later of "pages arrived" and "a step boundary passed"
+            at = ready[nxt] + xfer
+            if at > t and running:
+                break            # keep decoding; admit once it lands
+            t = max(t, at)
+            running[nxt] = remaining.pop(nxt)
+            nxt += 1
+        if not running:
+            if nxt < n_seqs:
+                t = max(t, ready[nxt] + xfer)
+                continue
+            break
+        t += t_decode_step       # one unstretched decode step, all slots
+        decoded += len(running)
+        for seq in sorted(running):
+            running[seq] -= 1
+            if running[seq] <= 0:
+                del running[seq]
+    disagg_ttft = sum(ttft) / n_seqs
+    # aggregate completion: first tokens on the prefill device, the rest
+    # on the decode device; the decode device finishes last
+    wall = max(t, ttft[-1])
+    disagg_tok_s = n_seqs * new_tokens / wall
+
+    return {
+        "oversubscription": oversubscription,
+        "n_seqs": n_seqs,
+        "handoff_xfer_us": xfer * 1e6,
+        "ttft_fused_us": fused_ttft * 1e6,
+        "ttft_disagg_us": disagg_ttft * 1e6,
+        "ttft_ratio": fused_ttft / disagg_ttft,
+        # the decode device's steps are never stretched by chunk work
+        "tpot_fused_us": fused_tpot * 1e6,
+        "tpot_disagg_us": t_decode_step * 1e6,
+        "tpot_ratio": fused_tpot / t_decode_step,
+        "tok_per_s_fused": fused_tok_s,
+        "tok_per_s_disagg": disagg_tok_s,
+        "goodput_ratio": disagg_tok_s / fused_tok_s,
     }
 
 

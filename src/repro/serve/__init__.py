@@ -1,33 +1,48 @@
 """repro.serve — continuous-batching inference over the paged KV pool.
 
-Four modules:
+The package is organised as role components assembled into one engine:
 
   * :mod:`repro.serve.config` — the grouped, frozen
     :class:`~repro.serve.config.EngineConfig` construction API
     (:class:`~repro.serve.config.PagingConfig` /
     :class:`~repro.serve.config.ChunkingConfig` /
     :class:`~repro.serve.config.SchedulerConfig`), the
-    :class:`~repro.serve.config.Tier` priority enum and the injected
-    :class:`~repro.serve.config.VirtualClock` every request timestamp
-    goes through,
-  * :mod:`repro.serve.engine` — the serving engine: chunk-queue
-    admission (chunked paged prefill fused with decode in one mixed
-    step), free-page-watermark preemption/resume over
-    :mod:`repro.paging`, the event-driven scheduler loop (the paper's
-    §2.3.2 model applied to requests) and the pluggable
-    :class:`~repro.serve.engine.SchedulerPolicy` layer (``watermark``
+    :class:`~repro.serve.config.Tier` priority enum, the
+    :class:`~repro.serve.config.EngineRole` disaggregation role and the
+    injected :class:`~repro.serve.config.VirtualClock` every request
+    timestamp goes through,
+  * :mod:`repro.serve.request` — the :class:`~repro.serve.request.
+    Request` lifecycle record (timestamps, SLO accounting, park state),
+  * :mod:`repro.serve.policy` — the pluggable
+    :class:`~repro.serve.policy.SchedulerPolicy` layer (``watermark``
     utilisation scheduling vs ``slo`` goodput scheduling that maps
     priority tiers onto the pager's QoS windows),
+  * :mod:`repro.serve.admission` — dense + chunked prefill admission,
+    prefix-cache mapping, and the DECODE-role ``admit_handoff``,
+  * :mod:`repro.serve.transfer` — park/resume transfer machinery,
+    watermark room-making, finished-sequence offload/fetch and the
+    PREFILL-role handoff publish,
+  * :mod:`repro.serve.decode` — the decode/mixed step loop, chunk
+    scheduling, prefill graduation and the finish path,
+  * :mod:`repro.serve.engine` — the assembly: chunk-queue admission
+    (chunked paged prefill fused with decode in one mixed step),
+    free-page-watermark preemption/resume over :mod:`repro.paging` and
+    the event-driven scheduler loop (the paper's §2.3.2 model applied
+    to requests), composed from the mixins above and parameterised by
+    :class:`~repro.serve.config.EngineRole`,
+  * :mod:`repro.serve.disagg` — disaggregated prefill/decode: the
+    :class:`~repro.serve.disagg.HandoffRecord` /
+    :class:`~repro.serve.disagg.HandoffBoard` handoff protocol, the
+    shared-:class:`~repro.core.offload.FarMemoryTier` pager factory and
+    the :func:`~repro.serve.disagg.run_disaggregated` two-engine
+    driver,
   * :mod:`repro.serve.workload` — the production traffic model (bursty
     diurnal arrivals, lognormal/Zipf lengths, interactive-vs-batch
     tiers with per-request TTFT/TPOT SLOs),
   * :mod:`repro.serve.kv_cache` — slot bookkeeping around the batched
     device cache: the :class:`~repro.serve.kv_cache.SlotPool`, dense
     slot extract/insert (the ``paging=False`` fallback path), and page
-    split/join for far-tier payloads.  Finished-sequence offload is
-    engine-level now: pages park through the pager into the single
-    :class:`~repro.core.offload.FarMemoryTier` and
-    ``Engine.fetch_finished`` reassembles them.
+    split/join for far-tier payloads.
 
 Minimal use::
 
@@ -41,11 +56,17 @@ Minimal use::
 ``docs/ARCHITECTURE.md`` maps every piece back to the paper.
 """
 
-from repro.serve.config import (ChunkingConfig, EngineConfig, PagingConfig,
-                                SchedulerConfig, Tier, VirtualClock)
+from repro.serve.config import (ChunkingConfig, EngineConfig, EngineRole,
+                                PagingConfig, SchedulerConfig, Tier,
+                                VirtualClock)
+from repro.serve.disagg import (HandoffBoard, HandoffRecord,
+                                make_shared_tier, run_disaggregated,
+                                tier_pager_factory)
 from repro.serve.engine import Engine, Request, SchedulerPolicy
 
 __all__ = [
     "Engine", "Request", "SchedulerPolicy", "EngineConfig", "PagingConfig",
     "ChunkingConfig", "SchedulerConfig", "Tier", "VirtualClock",
+    "EngineRole", "HandoffBoard", "HandoffRecord", "make_shared_tier",
+    "tier_pager_factory", "run_disaggregated",
 ]

@@ -47,8 +47,8 @@ from typing import Any, Callable, Optional, Tuple
 from repro.paging import WatermarkPolicy
 
 __all__ = [
-    "Tier", "VirtualClock", "PagingConfig", "ChunkingConfig",
-    "SchedulerConfig", "ObsConfig", "EngineConfig",
+    "Tier", "EngineRole", "VirtualClock", "PagingConfig",
+    "ChunkingConfig", "SchedulerConfig", "ObsConfig", "EngineConfig",
     "engine_config_from_kwargs", "add_config_args", "config_from_args",
 ]
 
@@ -60,6 +60,26 @@ class Tier(enum.IntEnum):
 
     INTERACTIVE = 0     # tight TTFT/TPOT SLOs; chat-style traffic
     BATCH = 1           # loose SLOs; shed first under overload
+
+
+class EngineRole(str, enum.Enum):
+    """Which half of the serving pipeline this engine runs.
+
+    ``FUSED`` (default) is the classic single-engine pipeline — prefill
+    and decode share one mesh and one device pool; bit-identical to the
+    pre-role engine.  Under disaggregation (``docs/ARCHITECTURE.md``)
+    a ``PREFILL`` engine graduates every request at its first token —
+    the finished prompt pages BULK-park into the *shared*
+    :class:`~repro.core.offload.FarMemoryTier` and a
+    :class:`~repro.serve.disagg.HandoffRecord` is published — and a
+    ``DECODE`` engine adopts records via
+    :meth:`~repro.serve.engine.Engine.admit_handoff`, LATENCY-fetching
+    the parked state through the ordinary resume machinery.  The str
+    values double as the auto-generated ``--role`` CLI choices."""
+
+    FUSED = "fused"
+    PREFILL = "prefill"
+    DECODE = "decode"
 
 
 class VirtualClock:
@@ -201,6 +221,14 @@ class EngineConfig:
         choices=("auto", "pallas", "interpret", "xla"))
     mesh: Any = _f(None, "jax device mesh for the sharded step",
                    cli=False)
+    role: str = _f(
+        "fused", "engine role: fused single-engine pipeline, or one "
+        "half of a disaggregated prefill/decode pair over a shared "
+        "far tier", choices=("fused", "prefill", "decode"))
+    handoff: Any = _f(
+        None, "HandoffBoard shared between a PREFILL and a DECODE "
+        "engine (a PREFILL engine creates its own when None)",
+        cli=False)
     paging: PagingConfig = field(default_factory=PagingConfig,
                                  metadata={"cli": True})
     chunking: ChunkingConfig = field(default_factory=ChunkingConfig,

@@ -81,313 +81,63 @@ a *fixed* batch of ``max_batch`` slots (one compiled program); per-slot
 positions make the mixed-depth batch correct, and empty slots decode
 garbage into a reserved *trash frame* that no live sequence maps — the
 standard fixed-shape trade on TPU, made safe at page granularity.
+
+**The engine is assembled from role components** (this module is the
+assembly; the behaviour lives in the mixins):
+
+  * :class:`~repro.serve.policy.SchedulerPolicy` /
+    :class:`~repro.serve.policy.SLOScheduler` — every discretionary
+    scheduling decision (``serve/policy.py``),
+  * :class:`~repro.serve.admission.AdmissionMixin` — dense + chunked
+    prefill admission, prefix mapping, and the DECODE-role
+    ``admit_handoff`` (``serve/admission.py``),
+  * :class:`~repro.serve.transfer.TransferMixin` — park/resume,
+    room-making, finished-sequence offload/fetch, and the PREFILL-role
+    handoff publish (``serve/transfer.py``),
+  * :class:`~repro.serve.decode.DecodeMixin` — the step loop, chunk
+    scheduling, graduation, and the finish path with the
+    ``_role_done`` hook (``serve/decode.py``).
+
+An :class:`~repro.serve.config.EngineRole` parameterises the assembly:
+``FUSED`` (default) is the single-engine pipeline, bit-identical to the
+pre-split engine; ``PREFILL``/``DECODE`` run two engines against ONE
+shared far tier with the park/resume machinery pointed *across* them —
+see :mod:`repro.serve.disagg` and ``docs/ARCHITECTURE.md``.
 """
 
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.amu import QoS
 from repro.dist.steps import make_mixed_step, make_serve_step
 from repro.launch.mesh import make_mesh_compat
 from repro.models import ssm as ssm_mod
-from repro.models.model import (Cache, PagedCache, encode_cross, init_cache,
-                                init_paged_cache, prefill)
+from repro.models.model import init_cache, init_paged_cache
 from repro.obs import (MetricsRegistry, Tracer, to_chrome_trace,
                        write_chrome_trace, write_metrics)
-from repro.paging import (NOT_MAPPED, DeadlineQueue, EventKind, EventLoop,
-                          PagePool, PageState, PageTable, Pager, PagingError,
+from repro.paging import (DeadlineQueue, EventKind, EventLoop, PagePool,
+                          PageState, PageTable, Pager, PagingError,
                           PrefixCache, WatermarkPolicy, pages_for)
-from repro.serve.config import (EngineConfig, Tier, VirtualClock,
-                                engine_config_from_kwargs)
-from repro.serve.kv_cache import (SlotPool, extract_aux_slot,
-                                  insert_aux_slot, insert_slot,
-                                  join_kv_pages)
+from repro.serve.admission import AdmissionMixin
+from repro.serve.config import (EngineConfig, EngineRole, Tier,
+                                VirtualClock, engine_config_from_kwargs)
+from repro.serve.decode import DecodeMixin
+from repro.serve.disagg import HandoffBoard
+from repro.serve.kv_cache import SlotPool
+from repro.serve.policy import SCHEDULERS as _SCHEDULERS
+from repro.serve.policy import SchedulerPolicy, SLOScheduler
+from repro.serve.request import Request
+from repro.serve.transfer import TransferMixin
 
 __all__ = ["Request", "Engine", "SchedulerPolicy", "SLOScheduler"]
 
 
-@dataclass
-class Request:
-    """One submitted generation request and its full lifecycle state.
-
-    A request moves through admit → (chunked prefill) → decode →
-    park/resume (any number of times, from either phase) → finish; see
-    ``docs/ARCHITECTURE.md`` for the lifecycle diagram.  Example::
-
-        rid = engine.submit(np.arange(7), max_new_tokens=4)
-        tokens = engine.run()[rid]
-    """
-
-    rid: int
-    prompt: np.ndarray                  # (plen,) int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    src_embeds: Optional[np.ndarray] = None   # encdec frontend stub
-    # SLO contract (production traffic model; see repro.serve.workload):
-    tier: Tier = Tier.INTERACTIVE
-    ttft_slo: Optional[float] = None    # time-to-first-token budget
-    tpot_slo: Optional[float] = None    # mean time-per-output-token budget
-    arrival_t: float = 0.0              # when the request enters the system
-    # filled by the engine:
-    generated: List[int] = field(default_factory=list)
-    slot: Optional[int] = None
-    submitted_t: float = 0.0
-    first_token_t: float = 0.0
-    done_t: float = 0.0
-    token_ts: List[float] = field(default_factory=list)  # one per token
-    # paging state (set when the request has been preempted):
-    parked: bool = False                # preempted, waiting to resume
-    residue: Any = None                 # non-KV aux payload while parked
-    n_preempts: int = 0
-    admit_seq: int = -1                 # admission order (preemption priority)
-    # chunked-prefill state (chunk-queue admission path):
-    prefill_pos: int = 0                # prompt tokens already prefilled
-    target_len: int = 0                 # tokens the chunk path must cover
-    chunk_rows: Any = None              # host page-table row while prefilling
-    chunk_ssm: Any = None               # hybrid: SSM carry between chunks
-    src_len: int = 0                    # encdec: true encoder length
-
-    @property
-    def done(self) -> bool:
-        if len(self.generated) >= self.max_new_tokens:
-            return True
-        return bool(self.generated and self.eos_id is not None
-                    and self.generated[-1] == self.eos_id)
-
-    @property
-    def mid_prefill(self) -> bool:
-        """True while the prompt is only partially chunk-prefilled."""
-        return self.target_len > 0 and self.prefill_pos < self.target_len
-
-    # -- SLO telemetry (all timestamps on the engine's one clock) ----------
-    @property
-    def ttft(self) -> float:
-        """Time to first token (inf until one exists)."""
-        if not self.token_ts:
-            return float("inf")
-        return self.token_ts[0] - self.arrival_t
-
-    @property
-    def tpot(self) -> float:
-        """Mean time per output token after the first (0 for 1 token)."""
-        if len(self.token_ts) < 2:
-            return 0.0
-        return ((self.token_ts[-1] - self.token_ts[0])
-                / (len(self.token_ts) - 1))
-
-    def slo_attained(self) -> bool:
-        """Did this request meet every SLO it carries?  A request with
-        no SLOs trivially attains (batch completion traffic)."""
-        if self.ttft_slo is not None and self.ttft > self.ttft_slo:
-            return False
-        if self.tpot_slo is not None and self.tpot > self.tpot_slo:
-            return False
-        return True
-
-
-# -- jitted pool-frame scatters (module level: one compile per shape) ---------
-
-@partial(jax.jit, donate_argnums=(0, 1), static_argnums=(5,))
-def _scatter_seq_pages(k_pages, v_pages, k_single, v_single, frames,
-                       n_pg: int):
-    """Write one sequence's dense prefill KV into its pool frames.
-
-    ``k_single``/``v_single``: (L, 1, S, Hkv, D) from prefill — S is the
-    prefill *bucket*, at most the slot capacity; only the leading
-    ``n_pg`` pages (the prompt's — the exact frames admission just
-    mapped) are scattered, the tail zero-padded up to a page multiple.
-    The pool arrays are donated: the update aliases in place instead of
-    copying the whole pool per admission."""
-    L, _, S, Hkv, D = k_single.shape
-    page = k_pages.shape[2]
-    take = min(n_pg * page, S)
-    k_single = k_single[:, :, :take]
-    v_single = v_single[:, :, :take]
-    pad = n_pg * page - take
-    if pad:
-        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
-        k_single = jnp.pad(k_single, widths)
-        v_single = jnp.pad(v_single, widths)
-    ks = k_single[:, 0].reshape(L, n_pg, page, Hkv, D)
-    vs = v_single[:, 0].reshape(L, n_pg, page, Hkv, D)
-    k_pages = k_pages.at[:, frames].set(ks.astype(k_pages.dtype))
-    v_pages = v_pages.at[:, frames].set(vs.astype(v_pages.dtype))
-    return k_pages, v_pages
-
-
-@partial(jax.jit, donate_argnums=(0, 1))
-def _scatter_one_page(k_pages, v_pages, k_data, v_data, phys):
-    """Land one far-tier page payload (L, page, Hkv, D) in frame ``phys``
-    (pool arrays donated: an in-place page write, not a pool copy)."""
-    k_pages = k_pages.at[:, phys].set(k_data.astype(k_pages.dtype))
-    v_pages = v_pages.at[:, phys].set(v_data.astype(v_pages.dtype))
-    return k_pages, v_pages
-
-
-@partial(jax.jit, donate_argnums=(0, 1))
-def _copy_frame(k_pages, v_pages, src, dst):
-    """Device-side page copy (COW break: a sharer about to write a
-    prefix-shared frame gets a private duplicate first)."""
-    k_pages = k_pages.at[:, dst].set(k_pages[:, src])
-    v_pages = v_pages.at[:, dst].set(v_pages[:, src])
-    return k_pages, v_pages
-
-
-class SchedulerPolicy:
-    """The scheduling-policy layer: every discretionary decision the
-    engine makes — queue order, extra admission gating, victim choice,
-    chunk order, and the QoS class each request's far-memory traffic
-    rides — comes through one of these objects (``engine.sched``).
-
-    This base class IS the watermark scheduler (``policy="watermark"``):
-    FIFO admission, newest-admitted-first preemption, admission-order
-    chunk selection, LATENCY fetches / BULK parks for everyone.  It
-    maximises utilisation and is SLO-blind — the exact PR-4/PR-5
-    behaviour, bit-for-bit.
-    """
-
-    name = "watermark"
-
-    def __init__(self, engine: "Engine"):
-        self.eng = engine
-
-    def order_queue(self, queue: List[Request], now: float) -> None:
-        """Reorder the admission queue in place (base: FIFO — resumes
-        were pushed to the head by preemption and stay there)."""
-
-    def may_admit(self, req: Request, need: int) -> bool:
-        """Extra admission gate on top of the free-page watermark
-        (base: none)."""
-        return True
-
-    def pick_victim(self, victims: List[Request], now: float) -> Request:
-        """Choose the preemption victim (base: newest admitted)."""
-        return max(victims, key=lambda r: r.admit_seq)
-
-    def chunk_order(self, reqs) -> List[Request]:
-        """Order admitting slots for chunk selection (base: admission
-        order)."""
-        return sorted(reqs, key=lambda r: r.admit_seq)
-
-    def fetch_qos(self, req: Request) -> QoS:
-        """QoS class for this request's resume prefetches."""
-        return QoS.LATENCY
-
-    def store_qos(self, req: Request) -> QoS:
-        """QoS class for this request's preemption writebacks."""
-        return QoS.BULK
-
-    def on_submit(self, req: Request) -> None:
-        """Hook at submission (base: nothing to arm)."""
-
-
-class SLOScheduler(SchedulerPolicy):
-    """Goodput scheduling (``policy="slo"``): admission, preemption and
-    chunk selection maximise *SLO attainment* instead of utilisation,
-    and the request's priority tier maps onto the pager's QoS windows —
-    the paper's §2.2 MACR QoS applied at request granularity:
-
-      * **queue order** — arrived requests first, INTERACTIVE tier
-        before BATCH, earliest deadline first within a tier (EDF);
-        parked requests of a tier resume before its fresh admissions
-        (their pages are already paid for),
-      * **admission shedding** — a BATCH request must leave
-        ``batch_headroom`` free pages beyond the low watermark, and
-        never admits while an interactive resume is still in flight:
-        under overload, batch-tier load is shed first,
-      * **preemption** — the victim is a BATCH slot when one exists,
-        preferring one whose SLO is *already blown* (evicting it costs
-        nothing that isn't lost) and otherwise the one *furthest from
-        its next deadline* (most slack to absorb a park/resume
-        round-trip),
-      * **QoS mapping** — interactive resumes/prefetches ride LATENCY
-        aloads and interactive parks STANDARD astores; batch resumes
-        ride STANDARD and batch parks BULK — so an interactive
-        request's far-memory traffic is never queued behind a batch
-        request's in the AMU windows,
-      * **deadlines as events** — each submission arms its TTFT
-        deadline in a :class:`~repro.paging.DeadlineQueue`; ticks pop
-        due deadlines and post ``DEADLINE`` events (§2.3.2: passing
-        time is a scheduling event like an arriving page).
-    """
-
-    name = "slo"
-
-    def next_deadline(self, req: Request, now: float) -> float:
-        """The next instant this request's SLO contract can be missed:
-        its TTFT deadline before the first token, then each successive
-        token's TPOT budget.  inf when unconstrained."""
-        if not req.token_ts:
-            if req.ttft_slo is None:
-                return float("inf")
-            return req.arrival_t + req.ttft_slo
-        if req.tpot_slo is None:
-            return float("inf")
-        return req.token_ts[-1] + req.tpot_slo
-
-    def slack(self, req: Request, now: float) -> float:
-        return self.next_deadline(req, now) - now
-
-    def blown(self, req: Request, now: float) -> bool:
-        return self.next_deadline(req, now) < now
-
-    def order_queue(self, queue: List[Request], now: float) -> None:
-        queue.sort(key=lambda r: (
-            r.arrival_t > now,           # future arrivals wait their turn
-            int(r.tier),                 # INTERACTIVE before BATCH
-            not r.parked,                # resumes before fresh admissions
-            self.next_deadline(r, now),  # EDF within the tier
-            r.rid))
-
-    def may_admit(self, req: Request, need: int) -> bool:
-        eng = self.eng
-        if req.tier is not Tier.BATCH or not eng.paging:
-            return True
-        if not (eng.active or eng.prefilling or eng._resuming):
-            return True                  # idle system: nothing to shed for
-        if any(r.tier is Tier.INTERACTIVE
-               for r in eng._resuming.values()):
-            return False                 # interactive resume owns the bus
-        headroom = eng.sched_cfg.batch_headroom
-        return eng.page_pool.n_free - need >= eng.policy.low + headroom
-
-    def pick_victim(self, victims: List[Request], now: float) -> Request:
-        return min(victims, key=lambda r: (
-            r.tier is not Tier.BATCH,    # shed batch tier first
-            not self.blown(r, now),      # a blown SLO loses nothing more
-            -self.slack(r, now),         # then: most slack to spare
-            -r.admit_seq))
-
-    def chunk_order(self, reqs) -> List[Request]:
-        now = self.eng.clock()
-        return sorted(reqs, key=lambda r: (self.next_deadline(r, now),
-                                           r.admit_seq))
-
-    def fetch_qos(self, req: Request) -> QoS:
-        return QoS.LATENCY if req.tier is Tier.INTERACTIVE else QoS.STANDARD
-
-    def store_qos(self, req: Request) -> QoS:
-        return QoS.STANDARD if req.tier is Tier.INTERACTIVE else QoS.BULK
-
-    def on_submit(self, req: Request) -> None:
-        if req.ttft_slo is not None:
-            self.eng.deadlines.schedule(req.arrival_t + req.ttft_slo,
-                                        req.rid)
-
-
-_SCHEDULERS = {"watermark": SchedulerPolicy, "slo": SLOScheduler}
-
-
-class Engine:
+class Engine(AdmissionMixin, TransferMixin, DecodeMixin):
     """Continuous-batching serving engine on the paged far-memory KV.
 
     The module docstring describes the design; operationally::
@@ -418,7 +168,9 @@ class Engine:
     ``paging.pager_factory`` injects a custom
     :class:`~repro.paging.Pager` (tests use a simulated-latency AMU
     backend); ``scheduler.policy="slo"`` switches scheduling from
-    utilisation to goodput (see :class:`SLOScheduler`).
+    utilisation to goodput (see :class:`SLOScheduler`); ``role``
+    selects the disaggregated half this engine runs (default
+    ``"fused"`` — see :mod:`repro.serve.disagg`).
     """
 
     def __init__(
@@ -461,7 +213,10 @@ class Engine:
         self.active: Dict[int, Request] = {}     # slot -> request
         self.finished: Dict[int, Request] = {}
         self.offload_finished = pg.offload_finished
-        self._ids = itertools.count()
+        # rid allocation is a plain counter (not itertools.count) so a
+        # DECODE-role engine can bump it past handed-off rids — local
+        # submissions and adopted requests share one id space
+        self._next_rid = 0
         self._admits = itertools.count()
 
         # -- page-granularity KV residency over a fixed device pool --------
@@ -507,7 +262,9 @@ class Engine:
             # THE far tier: one FarMemoryTier behind the pager holds
             # every cold page — preempted, watermark-evicted, finished —
             # plus finished sequences' aux residues and the prefix
-            # cache's shared page homes
+            # cache's shared page homes.  Under disaggregation the
+            # pager_factory points two engines' pagers at ONE shared
+            # tier (see repro.serve.disagg.tier_pager_factory).
             self.far_tier = self.pager.tier
             # device frames: pool frames + one trash frame at the end
             self.trash_frame = n_pages
@@ -526,6 +283,19 @@ class Engine:
             raise PagingError(
                 "offload_finished requires the paged engine: finished KV "
                 "is parked page-by-page through the pager's far tier")
+        # -- engine role: which half of the pipeline this assembly runs ----
+        self.role = EngineRole(ec.role)
+        if self.role is not EngineRole.FUSED and not self.paging:
+            raise PagingError(
+                "disaggregated roles require the paged engine: the "
+                "prefill/decode handoff travels through the far tier")
+        if self.role is EngineRole.PREFILL:
+            # graduation IS an offload_finished park into the (shared)
+            # far tier — the role implies the flag
+            self.offload_finished = True
+        self.handoff = ec.handoff
+        if self.role is EngineRole.PREFILL and self.handoff is None:
+            self.handoff = HandoffBoard()
         self.policy = pg.watermark or WatermarkPolicy(low=0, critical=0)
         # the scheduling-policy layer: every discretionary decision
         # (queue order, victim, chunk order, per-request QoS) goes
@@ -597,15 +367,16 @@ class Engine:
         self.events.on(EventKind.DEADLINE, self._on_deadline)
         # dict-compatible view onto the shared registry ("engine" group):
         # callers keep reading eng.stats["preemptions"] etc. unchanged
-        self.stats = self.metrics.counters(
-            "engine",
-            initial={"steps": 0, "prefills": 0, "admitted": 0,
-                     "preemptions": 0, "resumes": 0, "mixed_steps": 0,
-                     "chunks": 0, "prefill_preempts": 0,
-                     "prefix_hits": 0, "prefix_tokens_saved": 0,
-                     "prefix_far_hits": 0, "deadline_misses": 0,
-                     "slo_attained": 0, "slo_missed": 0,
-                     "shed_admissions": 0})
+        initial = {"steps": 0, "prefills": 0, "admitted": 0,
+                   "preemptions": 0, "resumes": 0, "mixed_steps": 0,
+                   "chunks": 0, "prefill_preempts": 0,
+                   "prefix_hits": 0, "prefix_tokens_saved": 0,
+                   "prefix_far_hits": 0, "deadline_misses": 0,
+                   "slo_attained": 0, "slo_missed": 0,
+                   "shed_admissions": 0}
+        if self.role is not EngineRole.FUSED:
+            initial["handoffs"] = 0      # FUSED snapshots stay unchanged
+        self.stats = self.metrics.counters("engine", initial=initial)
 
     # -- public API ----------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16,
@@ -624,8 +395,13 @@ class Engine:
         reproduce the old behaviour: arrive now, no SLOs."""
         prompt = np.asarray(prompt, np.int32)
         if self.paging:
-            full = pages_for(min(len(prompt) + max_new_tokens,
-                                 self.slot_tokens), self.page_size)
+            # a PREFILL-role engine never decodes: its pool only ever
+            # holds the prompt's pages, so the completion horizon is the
+            # prompt alone
+            horizon = len(prompt) + (
+                0 if self.role is EngineRole.PREFILL else max_new_tokens)
+            full = pages_for(min(horizon, self.slot_tokens),
+                             self.page_size)
             if full > self.page_pool.n_pages:
                 raise PagingError(
                     f"request needs {full} pages; pool has only "
@@ -639,7 +415,8 @@ class Engine:
                     f"request needs {admit} pages at admission; pool of "
                     f"{self.page_pool.n_pages} under low watermark "
                     f"{self.policy.low} can never admit it")
-        rid = next(self._ids)
+        rid = self._next_rid
+        self._next_rid += 1
         now = self.clock()
         req = Request(rid=rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
@@ -654,6 +431,56 @@ class Engine:
         self.sched.on_submit(req)
         return rid
 
+    @property
+    def drained(self) -> bool:
+        """No work anywhere: queue, batch, chunk queue and resume set
+        all empty (a disaggregated driver polls this per engine)."""
+        return not (self.queue or self.active or self._resuming
+                    or self.prefilling)
+
+    def step_once(self) -> None:
+        """One iteration of the serving loop: admit, step, tick, and the
+        stall handling that keeps the loop progressing.  Public so a
+        disaggregated driver (:func:`~repro.serve.disagg.
+        run_disaggregated`) can interleave two engines; :meth:`run` is
+        this in a drain loop."""
+        self._admit()
+        if self.active or self.prefilling:
+            self._step()
+        self.events.tick()
+        if not self.active and not self.prefilling and self._resuming:
+            # nothing decodable: land the in-flight pages, then
+            # demand-fetch the head resume so the loop always
+            # progresses (its misses may evict other resumes' pages)
+            for req in list(self._resuming.values()):
+                self.pager.wait_arriving(req.rid)
+            self.pager.wait_seq(next(iter(self._resuming.values())).rid)
+            self._admit()
+        if not self.active and not self.prefilling \
+                and not self._resuming and self.queue:
+            # everything just finished this step: retry admission
+            # now rather than waiting for the next iteration
+            self._admit()
+            if not self.active and not self.prefilling \
+                    and not self._resuming:
+                future = [r.arrival_t for r in self.queue
+                          if r.arrival_t > self.clock()]
+                if future and len(future) == len(self.queue):
+                    # the system is idle only because the trace is:
+                    # fast-forward the virtual clock to the next
+                    # arrival (a wall clock advances by itself)
+                    if self._own_clock:
+                        self.clock.advance(min(future) - self.clock())
+                    return
+                # nothing running and nothing in flight: the state
+                # can never change, so admission is blocked for
+                # good — fail loudly instead of spinning to max_steps
+                raise PagingError(
+                    f"{len(self.queue)} queued requests can never be "
+                    "admitted (free pages "
+                    f"{self.page_pool.n_free if self.paging else 'n/a'}"
+                    f", low watermark {self.policy.low})")
+
     def run(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         """Event loop until every submitted request completes.
 
@@ -666,47 +493,10 @@ class Engine:
             outputs = eng.run()          # {rid: [token, ...]}
         """
         for _ in range(max_steps):
-            if not self.queue and not self.active and not self._resuming \
-                    and not self.prefilling:
+            if self.drained:
                 break
-            self._admit()
-            if self.active or self.prefilling:
-                self._step()
-            self.events.tick()
-            if not self.active and not self.prefilling and self._resuming:
-                # nothing decodable: land the in-flight pages, then
-                # demand-fetch the head resume so the loop always
-                # progresses (its misses may evict other resumes' pages)
-                for req in list(self._resuming.values()):
-                    self.pager.wait_arriving(req.rid)
-                self.pager.wait_seq(next(iter(self._resuming.values())).rid)
-                self._admit()
-            if not self.active and not self.prefilling \
-                    and not self._resuming and self.queue:
-                # everything just finished this step: retry admission
-                # now rather than waiting for the next iteration
-                self._admit()
-                if not self.active and not self.prefilling \
-                        and not self._resuming:
-                    future = [r.arrival_t for r in self.queue
-                              if r.arrival_t > self.clock()]
-                    if future and len(future) == len(self.queue):
-                        # the system is idle only because the trace is:
-                        # fast-forward the virtual clock to the next
-                        # arrival (a wall clock advances by itself)
-                        if self._own_clock:
-                            self.clock.advance(min(future) - self.clock())
-                        continue
-                    # nothing running and nothing in flight: the state
-                    # can never change, so admission is blocked for
-                    # good — fail loudly instead of spinning to max_steps
-                    raise PagingError(
-                        f"{len(self.queue)} queued requests can never be "
-                        "admitted (free pages "
-                        f"{self.page_pool.n_free if self.paging else 'n/a'}"
-                        f", low watermark {self.policy.low})")
-        if not self.queue and not self.active and not self._resuming \
-                and not self.prefilling:
+            self.step_once()
+        if self.drained:
             # fully drained: the telemetry counters must balance
             self.check_invariants()
         ob = self.config.obs
@@ -750,7 +540,8 @@ class Engine:
             self.page_table.drop(rid)
             if not self.offload_finished:
                 # offloaded sequences keep their far-tier pages: that IS
-                # the finished-KV store fetch_finished reads back
+                # the finished-KV store fetch_finished (or a DECODE-role
+                # peer's admit_handoff) reads back
                 self.pager.drop_far(rid)
 
     def _on_deadline(self, ev) -> None:
@@ -802,6 +593,7 @@ class Engine:
           ``n_preempts > 0`` requests count),
         * ADMIT events == admissions + resumes (every ADMIT post has
           exactly one matching stats increment),
+        * on a PREFILL role: HANDOFF events == published handoffs,
         * the pager's per-QoS window takes/releases balance its
           in-flight gauges (see :meth:`Pager.check_invariants`).
         """
@@ -818,6 +610,12 @@ class Engine:
             raise PagingError(
                 f"ADMIT event imbalance: {admits} events != "
                 f"{s['admitted']} admissions + {s['resumes']} resumes")
+        if self.role is EngineRole.PREFILL:
+            hoffs = self.events.history.get(EventKind.HANDOFF, 0)
+            if hoffs != s["handoffs"]:
+                raise PagingError(
+                    f"HANDOFF event imbalance: {hoffs} events != "
+                    f"{s['handoffs']} published handoffs")
         if self.pager is not None:
             self.pager.check_invariants()
 
@@ -834,870 +632,3 @@ class Engine:
         if path is not None:
             write_metrics(path, self.metrics)
         return self.metrics.snapshot()
-
-    # -- internals ------------------------------------------------------------
-    def _bucket(self, plen: int) -> int:
-        # SSM/hybrid state is corrupted by pad tokens, so exact lengths
-        # there; attention families pad to the next bucket (cache entries
-        # beyond plen are never attended: pos starts at plen).
-        if self.cfg.family in ("ssm", "hybrid"):
-            return plen
-        for b in self.buckets:
-            if plen <= b:
-                return b
-        return self.max_len
-
-    def _prefill_one(self, req: Request):
-        plen = len(req.prompt)
-        bucket = self._bucket(plen)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = req.prompt
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.family == "encdec":
-            se = req.src_embeds
-            if se is None:
-                se = np.zeros((bucket, self.cfg.d_model), np.float32)
-            src = np.zeros((1, bucket, self.cfg.d_model), np.float32)
-            src[0, :se.shape[0]] = se[:bucket]
-            batch["src_embeds"] = jnp.asarray(src)
-        if self.cfg.mrope_sections:
-            batch["positions"] = jnp.broadcast_to(
-                jnp.arange(bucket, dtype=jnp.int32), (3, 1, bucket))
-        key = (bucket, self.cfg.family)
-        if key not in self._prefills:
-            cfg = self.cfg
-            self._prefills[key] = jax.jit(
-                lambda p, b, lp: prefill(p, cfg, b, max_len=self.max_len,
-                                         last_pos=lp))
-        # logits come from the prompt's true last token (plen - 1), never
-        # from the padded bucket tail — the first sampled token must not
-        # depend on pad embeddings, and the chunked-prefill path (which
-        # never materialises the pad tail) must agree with this one
-        logits, single = self._prefills[key](
-            self.params, batch, jnp.asarray([plen - 1], jnp.int32))
-        self.stats["prefills"] += 1
-        # true position is plen (ignore pad tail): set pos = plen
-        single = single._replace(pos=jnp.full((1,), plen, jnp.int32))
-        return logits, single
-
-    # -- paged device-pool plumbing -------------------------------------------
-    def _read_frame(self, phys: int) -> Dict[str, np.ndarray]:
-        """Pull one frame's content (L, page, Hkv, D) off the device —
-        the page-granularity transfer unit the pager's astores move."""
-        kv = self.cache.kv
-        return {"k": np.asarray(kv["k_pages"][:, phys]),
-                "v": np.asarray(kv["v_pages"][:, phys])}
-
-    def _land_frame(self, phys: int) -> None:
-        """If the pool frame holds a far-tier payload that has not been
-        scattered into the device pool yet, land it now."""
-        frame = self.page_pool.frames[phys]
-        if frame.data is None:
-            return                       # content already lives in the pool
-        kv = self.cache.kv
-        kp, vp = _scatter_one_page(
-            kv["k_pages"], kv["v_pages"],
-            jnp.asarray(frame.data["k"]), jnp.asarray(frame.data["v"]),
-            jnp.asarray(phys, jnp.int32))
-        self.cache = self.cache._replace(kv=dict(kv, k_pages=kp, v_pages=vp))
-        frame.data = None
-
-    def _install_sequence(self, req: Request, single: Cache) -> None:
-        """Admission on the paged layout: scatter the prefilled KV pages
-        into their pool frames and install the slot's page-table row +
-        aux state.  No dense batched KV exists to insert into."""
-        slot = req.slot
-        kv = self.cache.kv
-        # only the prompt's pages — exactly the frames _alloc_pinned just
-        # mapped; the bucket tail beyond them is zeros, never attended
-        n_pg = pages_for(min(len(req.prompt), self.slot_tokens),
-                         self.page_size)
-        frames = jnp.asarray(self._pt_np[slot, :n_pg])
-        kp, vp = _scatter_seq_pages(
-            kv["k_pages"], kv["v_pages"],
-            single.kv["k"], single.kv["v"], frames, n_pg)
-        cache = self.cache._replace(kv=dict(kv, k_pages=kp, v_pages=vp))
-        aux = {"ssm": single.ssm, "cross": single.cross, "pos": single.pos}
-        self.cache = insert_aux_slot(cache, aux, slot, self.max_batch)
-
-    def _install_cross(self, req: Request) -> None:
-        """Enc-dec chunk-queue admission: run the encoder once and park
-        its cross-attention KV in the slot's rows of ``cache.cross`` —
-        every later prompt chunk and decode token reads it from there
-        (the decode path never writes cross state, so the rows survive
-        the whole prefill).  The projections are the exact ones dense
-        prefill computes, so chunked and dense agree bit-for-bit."""
-        plen = len(req.prompt)
-        bucket = self._bucket(plen)
-        se = req.src_embeds
-        if se is None:
-            se = np.zeros((bucket, self.cfg.d_model), np.float32)
-        src = np.zeros((1, bucket, self.cfg.d_model), np.float32)
-        src[0, :se.shape[0]] = se[:bucket]
-        key = ("cross", bucket)
-        if key not in self._prefills:
-            cfg = self.cfg
-            self._prefills[key] = jax.jit(
-                lambda p, s: encode_cross(p, cfg, s))
-        cross = self._prefills[key](self.params, jnp.asarray(src))
-        slot = req.slot
-        new_cross = {}
-        for name, dst in self.cache.cross.items():
-            src_rows = cross[name]
-            # slot axis by leaf name: k/v are (L, B, Ssrc, ...), enc_out
-            # is (B, Ssrc, d) — a shape heuristic misfires when Ssrc
-            # happens to equal max_batch
-            axis = 1 if name in ("k", "v") else 0
-            new_cross[name] = jax.lax.dynamic_update_slice_in_dim(
-                dst, src_rows.astype(dst.dtype), slot, axis=axis)
-        self.cache = self.cache._replace(cross=new_cross)
-        req.src_len = bucket
-
-    # -- paging helpers -------------------------------------------------------
-    def _make_room(self, need: int, protect: frozenset,
-                   preempt: bool = True) -> bool:
-        """Bring the pool to at least ``need`` free frames.  Escalation
-        order: getfin poll, LRU eviction of unpinned cached pages,
-        draining in-flight fetches (their frames become evictable), then
-        — for growth, never for fresh admission — preempting a victim."""
-        pool = self.page_pool
-        if pool.n_free >= need:
-            return True
-        self.pager.poll()
-        while pool.n_free < need:
-            if self.pager.evict_lru(need - pool.n_free):
-                continue
-            if self._resuming:
-                for req in list(self._resuming.values()):
-                    self.pager.wait_arriving(req.rid)
-                if self.pager.evict_lru(need - pool.n_free):
-                    continue
-            if not preempt or not self._preempt_one(protect):
-                return False
-        return True
-
-    def _preempt_one(self, protect: frozenset) -> bool:
-        """Park the scheduler's chosen victim — a running sequence
-        (:meth:`_park`) or a half-prefilled one whose completed chunks
-        are parked as-is (:meth:`_park_prefilling`).  The watermark
-        policy picks the most recently admitted; the SLO policy picks
-        the slot whose SLO is already blown or furthest from its
-        deadline, batch tier first."""
-        victims = [r for r in list(self.active.values())
-                   + list(self.prefilling.values()) if r.rid not in protect]
-        if not victims or len(self.active) + len(self.prefilling) <= 1:
-            return False
-        victim = self.sched.pick_victim(victims, self.clock())
-        if victim.mid_prefill:
-            self._park_prefilling(victim)
-        else:
-            self._park(victim)
-        return True
-
-    def _shed_pages(self, req: Request, valid: int,
-                    hot_pages: Optional[int] = None) -> None:
-        """Shared parking machinery: keep the hot tail cached in the
-        pool (unpinned, LRU-evictable), move cold pages to the far tier
-        — BULK astore for dirty ones, for free when the far copy is
-        still current (clean-eviction fast path, §2.3 QoS split).
-
-        A far copy is *current* when its stored valid-token tag equals
-        the page's live token count (append-only KV never rewrites a
-        position, so equal coverage means equal content) — this is what
-        lets previously-parked pages, prefix-shared pages and re-fetched
-        pages all park for free, while a page that grew since its last
-        writeback pays a fresh astore.  SWA rings rewrite pages in place
-        on wrap, so they always write back.  Shared frames are released,
-        not freed: the prefix cache (or another sharer) keeps them.
-        """
-        rid = req.rid
-        n_pages = pages_for(valid, self.page_size)
-        # a frame allocated for the *next* write (pos on a page boundary)
-        # holds no content yet — release it; resume growth re-allocates
-        self.page_table.truncate(rid, n_pages)
-        n_hot = min(self.hot_tail_pages if hot_pages is None else hot_pages,
-                    n_pages)
-        n_cold = n_pages - n_hot
-        for logical in range(n_pages - 1, -1, -1):   # tail first: hot
-            pte = self.page_table.entry(rid, logical)
-            if pte.state is PageState.PARKED:
-                continue                 # already far (and current, by
-            self.page_table.unpin_page(rid, logical)  # the park invariant)
-            cur = min(self.page_size, valid - logical * self.page_size)
-            clean = (self.cfg.attention != "swa"
-                     and self.pager.far_tokens(rid, logical) == cur)
-            if logical >= n_cold:                    # hot tail: stays pooled
-                frame = self.page_pool.frames[pte.phys]
-                frame.data = None                    # content is in the pool
-                frame.dirty = not clean
-                frame.tokens = cur   # LRU eviction keeps the freshness tag
-                self.page_pool.touch(pte.phys)
-            elif clean:
-                self.pager.park_clean(rid, logical)  # far copy current
-            else:
-                self.pager.writeback(rid, logical,
-                                     self._read_frame(pte.phys), tokens=cur,
-                                     qos=self.sched.store_qos(req))
-
-    def _park(self, req: Request) -> None:
-        """Preempt a running sequence: cold pages → far tier (BULK), hot
-        tail stays cached *in the device pool* (unpinned, LRU-evictable),
-        slot freed, request back to the head of the queue.  The KV never
-        round-trips through a dense slot: cold pages are read
-        frame-by-frame off the pool (the page-granularity astore
-        payload), hot pages do not move at all."""
-        slot = req.slot
-        tokens = int(np.asarray(self.cache.pos)[slot])
-        self._shed_pages(req, min(tokens, self.slot_tokens))
-        req.residue = extract_aux_slot(self.cache, slot, self.max_batch)
-        req.parked = True
-        req.n_preempts += 1
-        req.slot = None
-        self._pt_np[slot] = self.trash_frame
-        self._pt_dirty = True
-        del self.active[slot]
-        self.pool.release(slot)
-        self.queue.insert(0, req)
-        self.stats["preemptions"] += 1
-        self._obs_phase(req, "parked")
-        self.events.post(EventKind.PREEMPT, req.rid)
-
-    def _park_prefilling(self, req: Request) -> None:
-        """Cancel a half-prefilled sequence: its *completed* chunks park
-        exactly like a running sequence's pages (hot tail pooled, cold
-        written back), and the prompt remainder simply re-enters the
-        chunk queue on resume — no prefill work is redone.  The non-KV
-        carry (hybrid SSM state between chunks) already lives host-side
-        in ``req.chunk_ssm``, so nothing dense is extracted."""
-        slot = req.slot
-        self._shed_pages(req, req.prefill_pos)
-        req.parked = True
-        req.n_preempts += 1
-        req.slot = None
-        req.chunk_rows = None            # rebuilt from the table on resume
-        del self.prefilling[slot]
-        self.pool.release(slot)
-        self.queue.insert(0, req)
-        self.stats["preemptions"] += 1
-        self.stats["prefill_preempts"] += 1
-        self._obs_phase(req, "parked")
-        self.events.post(EventKind.PREEMPT, req.rid)
-
-    def _start_resume(self, req: Request) -> bool:
-        """Begin bringing a parked request back: prefetch of its parked
-        pages (LATENCY QoS for interactive tier, the scheduler may
-        demote batch resumes to STANDARD), hot tail first, overlapping
-        decode.  A resume is a continuation, not a fresh admission, so
-        like growth it is exempt from the low watermark — it only needs
-        raw frames."""
-        parked = self.page_table.logical_pages(req.rid, PageState.PARKED)
-        if self.page_pool.n_free < len(parked) and \
-                not self._make_room(len(parked), frozenset({req.rid}),
-                                    preempt=False):
-            return False
-        self.pager.prefetch_seq(req.rid, tail_first=True,
-                                qos=self.sched.fetch_qos(req))
-        self._resuming[req.rid] = req
-        self._obs_phase(req, "resuming")
-        return True
-
-    def _try_finish_resumes(self) -> None:
-        """Slot in any resuming request whose pages have all arrived.
-        Re-entry is a page-table patch: pin the frames, land any payload
-        that is still host-side, point the slot's page-table row at the
-        frames and restore the tiny aux state.  The KV itself is already
-        where decode reads it.  A request parked *mid-prefill* re-enters
-        the chunk queue instead of the decode batch: its device
-        page-table row stays on the trash frame and its completed-chunk
-        frames go back into ``chunk_rows`` for the next chunk to attend
-        through."""
-        for rid, req in list(self._resuming.items()):
-            if not self.page_table.resident(rid):
-                # pages evicted again under pressure mid-resume get a
-                # fresh prefetch (no-op when all are in flight)
-                self.pager.prefetch_seq(rid, tail_first=True,
-                                        qos=self.sched.fetch_qos(req))
-                continue
-            if not self.pool.n_free:
-                continue
-            slot = self.pool.alloc()
-            rows = np.full((self.pages_per_seq,), self.trash_frame, np.int32)
-            for logical in range(self.page_table.n_pages(rid)):
-                pte = self.page_table.entry(rid, logical)
-                self.page_table.pin_page(rid, logical)
-                self.page_pool.touch(pte.phys)
-                self._land_frame(pte.phys)
-                rows[logical] = pte.phys
-            req.slot = slot
-            req.parked = False
-            # a request admitted straight onto far-tier prefix pages
-            # arrives here having never run: that is an admission, not a
-            # resume (preemption/resume stats must stay balanced)
-            first_admit = req.admit_seq < 0
-            req.admit_seq = next(self._admits)
-            if req.mid_prefill:
-                req.chunk_rows = rows
-                if self.cfg.family == "encdec":
-                    self._install_cross(req)     # cross rows left with the slot
-                self.prefilling[slot] = req
-            else:
-                self._ensure_private_tail(req)
-                rows = np.full((self.pages_per_seq,), self.trash_frame,
-                               np.int32)
-                for logical in range(self.page_table.n_pages(rid)):
-                    rows[logical] = self.page_table.entry(rid, logical).phys
-                self._pt_np[slot] = rows
-                self._pt_dirty = True
-                self.cache = insert_aux_slot(self.cache, req.residue,
-                                             slot, self.max_batch)
-                req.residue = None
-                self.active[slot] = req
-            del self._resuming[rid]
-            self.stats["admitted" if first_admit else "resumes"] += 1
-            self._obs_phase(req, "prefill" if req.mid_prefill else "decode")
-            self.events.post(EventKind.ADMIT, rid)
-
-    def _alloc_pinned(self, req: Request, n_tokens: int) -> None:
-        """Allocate (pin + mark dirty) frames so ``req`` covers
-        ``n_tokens`` positions and point its slot's page-table row at
-        them — active slots own their pages.  While a request is still
-        chunk-prefilling, its frames go into the host-side
-        ``chunk_rows`` instead: the *device* row keeps pointing at the
-        trash frame so the fused decode half of the mixed step cannot
-        scribble on a half-written prompt."""
-        mid = req.mid_prefill and req.chunk_rows is not None
-        for logical in self.page_table.ensure_capacity(req.rid, n_tokens):
-            pte = self.page_table.entry(req.rid, logical)
-            self.page_table.pin_page(req.rid, logical)
-            self.page_pool.mark_dirty(pte.phys)
-            if mid:
-                req.chunk_rows[logical] = pte.phys
-            else:
-                self._pt_np[req.slot, logical] = pte.phys
-                self._pt_dirty = True
-
-    def _ensure_private(self, req: Request, logical: int) -> None:
-        """COW break: if the frame backing ``(req, logical)`` is a
-        prefix-shared (copy-on-write) frame this step is about to write,
-        remap the page onto a private duplicate first.  Unreachable on
-        the supported sharing families by construction — only *full*
-        prompt pages are shared and decode appends strictly after them —
-        but the guard keeps the donated in-place pool scatters safe
-        against any future schedule that routes a write at a shared
-        frame."""
-        pte = self.page_table.entry(req.rid, logical)
-        if pte.phys == NOT_MAPPED:
-            return
-        frame = self.page_pool.frames[pte.phys]
-        if not frame.cow or frame.refs <= 1:
-            return
-        old, new = self.page_table.remap_private(req.rid, logical)
-        if new == old:
-            return
-        kv = self.cache.kv
-        kp, vp = _copy_frame(kv["k_pages"], kv["v_pages"],
-                             jnp.asarray(old, jnp.int32),
-                             jnp.asarray(new, jnp.int32))
-        self.cache = self.cache._replace(kv=dict(kv, k_pages=kp, v_pages=vp))
-        if req.mid_prefill and req.chunk_rows is not None:
-            req.chunk_rows[logical] = new
-        elif req.slot is not None:
-            self._pt_np[req.slot, logical] = new
-            self._pt_dirty = True
-
-    def _ensure_private_tail(self, req: Request) -> None:
-        """Guard the page decode writes next (the sequence's last mapped
-        page) against COW sharing before the slot goes active."""
-        n = self.page_table.n_pages(req.rid)
-        if n:
-            self._ensure_private(req, n - 1)
-
-    def _ensure_growth(self) -> None:
-        """Before a decode step: every active sequence about to cross a
-        page boundary gets a pinned frame, evicting/preempting under the
-        watermark policy when the pool is short."""
-        pos_np = np.asarray(self.cache.pos)     # one device sync per step
-        for req in list(self.active.values()):
-            if req.slot is None or req.slot not in self.active:
-                continue                    # preempted by an earlier victim
-            pos = int(pos_np[req.slot])
-            if pos >= self.slot_tokens:
-                continue                    # SWA ring wrapped: no growth
-            wp = pos // self.page_size      # page this step's token writes
-            if wp < self.page_table.n_pages(req.rid):
-                self._ensure_private(req, wp)
-            need = self.page_table.pages_needed(req.rid, pos + 1)
-            if not need:
-                continue
-            if not self._make_room(need, frozenset({req.rid})):
-                raise PagingError(
-                    f"cannot grow request {req.rid}: pool of "
-                    f"{self.page_pool.n_pages} pages exhausted")
-            self._alloc_pinned(req, pos + 1)
-
-    # -- scheduling ------------------------------------------------------------
-    def _chunkable(self, req: Request) -> bool:
-        """Chunk-queue admission requires the whole prompt to fit the
-        slot's token capacity (an SWA ring that wraps mid-prompt would
-        rewrite pages the chunk path still attends); longer prompts fall
-        back to the legacy dense-prefill admission."""
-        return (self.chunking and len(req.prompt) > 0
-                and len(req.prompt) <= self.slot_tokens)
-
-    def _admit_prefix(self, req: Request, hits: List[int]) -> bool:
-        """Map prefix-cache hits onto the request's fresh page-table row.
-
-        Device-resident hits are refcount-shared in place (zero traffic,
-        zero compute); hits whose shared page lives only in the far tier
-        make the request start *parked* — it rides the ordinary resume
-        machinery (LATENCY prefetch of a private copy, including the
-        resume-while-ARRIVING paths) before its first chunk.  Either
-        way ``prefill_pos`` starts past the shared prefix, so those
-        chunks are simply never queued.  Returns True on the far route.
-        """
-        self.page_table.register(req.rid)
-        req.target_len = len(req.prompt)
-        far = False
-        for l in hits:
-            key = self.prefix.far_key(l)
-            if self.prefix.entry_state(l) is PageState.RESIDENT:
-                phys = self.prefix.entry_phys(l)
-                logical = self.page_table.append_shared(req.rid, phys)
-                self.page_pool.touch(phys)
-            else:
-                far = True
-                logical = self.page_table.append_parked(req.rid)
-                self.stats["prefix_far_hits"] += 1
-            # far alias (no copy: same host payload) so this mapping can
-            # always park clean and a far hit fetches through the pager
-            self.pager.store_far(req.rid, logical, self.far_tier.home(key),
-                                 tokens=self.page_size)
-        req.prefill_pos = len(hits) * self.page_size
-        self.stats["prefix_hits"] += len(hits)
-        self.stats["prefix_tokens_saved"] += req.prefill_pos
-        if far:
-            req.parked = True
-        return far
-
-    def _admit(self) -> None:
-        if self.paging:
-            self._try_finish_resumes()
-        now = self.clock()
-        self.sched.order_queue(self.queue, now)
-        while self.queue:
-            req = self.queue[0]
-            if req.arrival_t > now:
-                break                 # trace replay: not in the system yet
-            if req.parked:                                # preempted: resume
-                if req.rid in self._resuming or not self._start_resume(req):
-                    break
-                self.queue.pop(0)
-                self._try_finish_resumes()
-                continue
-            if not self.pool.n_free:
-                break
-            hits: List[int] = []
-            if self.paging:
-                need = pages_for(min(len(req.prompt), self.slot_tokens),
-                                 self.page_size)
-                if self.prefix is not None and self._chunkable(req) \
-                        and req.rid not in self.page_table.sequences():
-                    hits = self.prefix.match(req.prompt)
-                    # device-resident hits take no new frames
-                    need -= sum(
-                        1 for l in hits
-                        if self.prefix.entry_state(l) is PageState.RESIDENT)
-                if not self.sched.may_admit(req, need):
-                    # SLO load shedding: the highest-priority admissible
-                    # request is batch-tier and the pool is too tight to
-                    # take it without risking interactive deadlines
-                    self.stats["shed_admissions"] += 1
-                    if self.tracer.enabled:
-                        self.tracer.instant(
-                            "engine", "sched", "shed",
-                            {"rid": req.rid, "tier": req.tier.name,
-                             "need_pages": need,
-                             "free": self.page_pool.n_free})
-                    break
-                if not self.policy.can_admit(self.page_pool, need) and \
-                        not self._make_room(need + self.policy.low,
-                                            frozenset(), preempt=False):
-                    break
-            if hits and self._admit_prefix(req, hits):
-                # far-tier hits: request left at the queue head, parked;
-                # the next iteration routes it through _start_resume
-                continue
-            self.queue.pop(0)
-            slot = self.pool.alloc()
-            req.slot = slot
-            if self._chunkable(req):
-                # chunk-queue admission: install bookkeeping only — the
-                # prompt is computed chunk-by-chunk by the mixed step,
-                # interleaved with every running slot's decode
-                if req.rid not in self.page_table.sequences():
-                    self.page_table.register(req.rid)
-                req.target_len = len(req.prompt)
-                req.chunk_rows = np.full((self.pages_per_seq,),
-                                         self.trash_frame, np.int32)
-                # prefix hits already mapped: pin them for the slot and
-                # point the chunk row at the shared frames
-                for logical in range(self.page_table.n_pages(req.rid)):
-                    self.page_table.pin_page(req.rid, logical)
-                    req.chunk_rows[logical] = \
-                        self.page_table.entry(req.rid, logical).phys
-                if self.cfg.family == "hybrid":
-                    req.chunk_ssm = jax.tree_util.tree_map(
-                        np.copy, self._zero_chunk_ssm)
-                if self.cfg.family == "encdec":
-                    self._install_cross(req)
-                req.admit_seq = next(self._admits)
-                self.prefilling[slot] = req
-                self.stats["admitted"] += 1
-                self._obs_phase(req, "prefill")
-                self.events.post(EventKind.ADMIT, req.rid)
-                continue
-            logits, single = self._prefill_one(req)
-            if self.paging:
-                self.page_table.register(req.rid)
-                self._alloc_pinned(req,
-                                   min(len(req.prompt), self.slot_tokens))
-                self._install_sequence(req, single)
-            else:
-                self.cache = insert_slot(self.cache, single, slot,
-                                         self.max_batch)
-            req.admit_seq = next(self._admits)
-            first = int(np.argmax(np.asarray(logits)[0]))
-            req.generated.append(first)
-            req.first_token_t = self.clock()
-            req.token_ts.append(req.first_token_t)
-            self.active[slot] = req
-            self.stats["admitted"] += 1
-            self._obs_phase(req, "decode")
-            if self.tracer.enabled:
-                self.tracer.instant(
-                    "requests", f"req{req.rid}", "first_token",
-                    {"ttft_s": req.first_token_t - req.arrival_t})
-            self.events.post(EventKind.ADMIT, req.rid)
-            self._finish_if_done(req)
-
-    # -- chunk-queue scheduling (chunked paged prefill) ------------------------
-    def _select_chunks(self) -> List:
-        """Pick chunk-vs-decode work for this step.
-
-        A chunk for the oldest admitting slots runs fused with the
-        decode step when (a) the LATENCY aload window has room — resume
-        traffic saturating the per-QoS window (§2.2 MACR) means parked
-        pages are mid-flight and chunk compute would only delay their
-        landing — and (b) the chunk's pages fit the pool without
-        preempting anyone (free-page-watermark occupancy; chunk growth,
-        like decode growth, is a continuation and so is exempt from the
-        admission low watermark)."""
-        if not self.prefilling:
-            return []
-        if self._resuming and not self.pager.windows.has_room(QoS.LATENCY):
-            return []
-        picks: List = []
-        t_exact = None
-        exact = self.cfg.family == "hybrid"    # pad tokens corrupt SSM state
-        for req in self.sched.chunk_order(self.prefilling.values()):
-            if len(picks) >= self.chunk_slots:
-                break
-            start = req.prefill_pos
-            end = min(req.target_len, start + self.chunk_tokens)
-            if exact and t_exact is not None and end - start != t_exact:
-                continue                   # exact-shape batch: next step
-            need = self.page_table.pages_needed(req.rid, end)
-            if need and not self._make_room(need, frozenset({req.rid}),
-                                            preempt=False):
-                continue                   # pool tight: decode-only step
-            if exact and t_exact is None:
-                t_exact = end - start      # pin shape only once a row fits
-            self._alloc_pinned(req, end)
-            picks.append((req, start, end))
-        return picks
-
-    def _force_chunk(self) -> List:
-        """Nothing decodable and no chunk fit the pool politely: force
-        the oldest admitting slot's chunk through, preempting (parking
-        another half-prefilled victim) if that is what it takes — the
-        loop must always progress."""
-        req = min(self.prefilling.values(), key=lambda r: r.admit_seq)
-        end = min(req.target_len, req.prefill_pos + self.chunk_tokens)
-        need = self.page_table.pages_needed(req.rid, end)
-        if need and not self._make_room(need, frozenset({req.rid}),
-                                        preempt=True):
-            raise PagingError(
-                f"chunked prefill of request {req.rid} cannot progress: "
-                f"pool of {self.page_pool.n_pages} pages exhausted")
-        self._alloc_pinned(req, end)
-        return [(req, req.prefill_pos, end)]
-
-    def _build_chunk(self, picks) -> Dict[str, Any]:
-        """Assemble the mixed step's chunk operand (C = ``chunk_slots``
-        rows, unused rows inert with length 0 / trash page rows)."""
-        C = self.chunk_slots
-        if self.cfg.family == "hybrid":
-            T = picks[0][2] - picks[0][1]  # exact shapes (no pad tokens)
-        else:
-            T = self.chunk_tokens
-        tokens = np.zeros((C, T), np.int32)
-        offset = np.zeros((C,), np.int32)
-        length = np.zeros((C,), np.int32)
-        slots = np.zeros((C,), np.int32)
-        src_len = np.zeros((C,), np.int32)
-        rows = np.full((C, self.pages_per_seq), self.trash_frame, np.int32)
-        for i, (req, start, end) in enumerate(picks):
-            n = end - start
-            tokens[i, :n] = req.prompt[start:end]
-            offset[i] = start
-            length[i] = n
-            slots[i] = req.slot
-            src_len[i] = req.src_len
-            rows[i] = req.chunk_rows
-        chunk = {"tokens": jnp.asarray(tokens),
-                 "offset": jnp.asarray(offset),
-                 "length": jnp.asarray(length),
-                 "page_rows": jnp.asarray(rows)}
-        if self.cfg.family == "encdec":
-            chunk["slots"] = jnp.asarray(slots)
-            chunk["src_len"] = jnp.asarray(src_len)
-        if self.cfg.family == "hybrid":
-            trees = [r.chunk_ssm for r, _, _ in picks]
-            trees += [self._zero_chunk_ssm] * (C - len(picks))
-            chunk["ssm"] = jax.tree_util.tree_map(
-                lambda *xs: jnp.asarray(np.concatenate(xs, axis=1)), *trees)
-        return chunk
-
-    def _finish_chunks(self, picks, chunk_logits, carry) -> None:
-        """Advance every picked request past its chunk; rows that just
-        covered their prompt's last token graduate to the decode batch
-        (their first sampled token is the chunk's last-valid logits)."""
-        tr = self.tracer
-        for i, (req, start, end) in enumerate(picks):
-            req.prefill_pos = end
-            if tr.enabled:
-                tr.instant("requests", f"req{req.rid}", "chunk",
-                           {"start": start, "end": end,
-                            "target": req.target_len})
-            if self.cfg.family == "hybrid":
-                req.chunk_ssm = jax.tree_util.tree_map(
-                    lambda a: np.asarray(a[:, i:i + 1]), carry)
-            if end >= req.target_len:
-                self._finalize_prefill(req, chunk_logits[i])
-
-    def _finalize_prefill(self, req: Request, logits_row) -> None:
-        """Graduate a fully-prefilled request into the decode batch: the
-        device page-table row flips from the trash frame to the real
-        frames (one host-mirror write — the KV is already in its pool
-        frames), pos and any SSM carry land in the cache, and the first
-        token comes from the final chunk's logits at the prompt's last
-        valid position — matching the dense path's ``last_pos`` exactly."""
-        slot = req.slot
-        self._pt_np[slot] = req.chunk_rows
-        self._pt_dirty = True
-        pos_row = jnp.asarray([req.target_len], jnp.int32)
-        cache = self.cache
-        new_pos = jax.lax.dynamic_update_slice_in_dim(
-            cache.pos, pos_row.astype(cache.pos.dtype), slot, axis=0)
-        ssm = cache.ssm
-        if self.cfg.family == "hybrid":
-            ssm = jax.tree_util.tree_map(
-                lambda dst, src: jax.lax.dynamic_update_slice_in_dim(
-                    dst, jnp.asarray(src).astype(dst.dtype), slot, axis=1),
-                ssm, req.chunk_ssm)
-            req.chunk_ssm = None
-        self.cache = cache._replace(pos=new_pos, ssm=ssm)
-        req.chunk_rows = None
-        del self.prefilling[slot]
-        if self.prefix is not None:
-            # donate the prompt's full pages to the prefix cache: future
-            # requests with the same prefix share these frames instead
-            # of re-running their chunks
-            self.prefix.intern(req.prompt, req.rid, self._read_frame)
-        first = int(np.argmax(np.asarray(logits_row)))
-        req.generated.append(first)
-        req.first_token_t = self.clock()
-        req.token_ts.append(req.first_token_t)
-        self.active[slot] = req
-        self._obs_phase(req, "decode")
-        if self.tracer.enabled:
-            self.tracer.instant(
-                "requests", f"req{req.rid}", "first_token",
-                {"ttft_s": req.first_token_t - req.arrival_t})
-        self._finish_if_done(req)
-
-    def _step(self) -> None:
-        if self.paging:
-            self._ensure_growth()
-        picks = self._select_chunks() if self.chunking else []
-        if self.chunking and not picks and not self.active and \
-                self.prefilling and not self._resuming:
-            picks = self._force_chunk()
-        if not self.active and not picks:
-            return
-        toks = np.zeros((self.max_batch, 1), np.int32)
-        for slot, req in self.active.items():
-            toks[slot, 0] = req.generated[-1]
-        if self.paging and self._pt_dirty:
-            # refresh the device page-table rows from the host mirror
-            # (skipped on steady-state steps with no scheduling events)
-            kv = self.cache.kv
-            self.cache = self.cache._replace(
-                kv=dict(kv, page_table=jnp.asarray(self._pt_np)))
-            self._pt_dirty = False
-        if picks:
-            chunk = self._build_chunk(picks)
-            logits, chunk_logits, carry, self.cache = self._mixed(
-                self.params, self.cache, jnp.asarray(toks), chunk)
-            self.stats["mixed_steps"] += 1
-            self.stats["chunks"] += len(picks)
-        else:
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(toks))
-        self.stats["steps"] += 1
-        if self.active:
-            logits = np.asarray(logits)
-            t_now = self.clock()
-            tr = self.tracer
-            for slot, req in list(self.active.items()):
-                nxt = int(np.argmax(logits[slot]))
-                req.generated.append(nxt)
-                req.token_ts.append(t_now)
-                if tr.enabled:
-                    tr.instant("requests", f"req{req.rid}", "token",
-                               {"n": len(req.generated)})
-                self._finish_if_done(req)
-        if picks:
-            self._finish_chunks(picks, np.asarray(chunk_logits), carry)
-
-    def _offload_finished(self, req: Request) -> None:
-        """Park a finished sequence page-by-page into THE far tier — the
-        same BULK writeback / clean-park machinery preemption uses, no
-        sequence-granularity side store.  The tiny aux residue (SSM
-        state, cross KV, positions) and the page count ride along as one
-        more far-tier entry; :meth:`fetch_finished` reassembles."""
-        slot = req.slot
-        rid = req.rid
-        tokens = min(int(np.asarray(self.cache.pos)[slot]), self.slot_tokens)
-        aux = extract_aux_slot(self.cache, slot, self.max_batch)
-        self.far_tier.offload(
-            (rid, "aux"),
-            {"aux": aux, "tokens": tokens,
-             "pages": pages_for(tokens, self.page_size)})
-        # every page goes far (hot_pages=0): the sequence is leaving the
-        # device; shared prefix pages park for free via their aliases
-        self._shed_pages(req, tokens, hot_pages=0)
-
-    def fetch_finished(self, rid: int) -> Cache:
-        """Reassemble a finished, offloaded request's dense single-
-        sequence cache from its far-tier pages (LATENCY aloads, all
-        issued before the first wait so the transfers overlap).
-
-        Fault-safe: entries are discarded only after *every* transfer
-        has verifiably landed — a fault mid-fetch raises, but the far
-        copies survive and a retry re-issues the lost aloads (the PR 3
-        pager fault discipline applied to the reuse path)."""
-        if not self.offload_finished:
-            raise PagingError("engine was not built with offload_finished")
-        tier = self.far_tier
-        meta = tier.get((rid, "aux"))
-        n_pages, tokens = meta["pages"], meta["tokens"]
-        keys = [(rid, logical) for logical in range(n_pages)]
-        for key in keys:
-            tier.prefetch(key)                  # overlap all page fetches
-        kv = self.cache.kv
-        L, _, page, Hkv, D = kv["k_pages"].shape
-        pages = []
-        for logical, key in enumerate(keys):
-            data = tier.get(key)                # raises on fault; nothing
-            take = min(page, tokens - logical * page)   # discarded yet
-            if take <= 0:
-                break
-            pages.append({"k": np.asarray(data["k"])[:, None, :take],
-                          "v": np.asarray(data["v"])[:, None, :take]})
-        # all transfers verified complete: now the entries may go
-        for key in keys:
-            tier.discard(key)
-        tier.discard((rid, "aux"))
-        aux = meta["aux"]
-        kdt = np.dtype(kv["k_pages"].dtype)
-        residue = Cache(
-            kv={"k": np.zeros((L, 1, 0, Hkv, D), kdt),
-                "v": np.zeros((L, 1, 0, Hkv, D), kdt),
-                "pos": np.zeros((), np.int32),
-                "slots": np.asarray(self.slot_tokens, np.int32)},
-            ssm=aux["ssm"], cross=aux["cross"], pos=aux["pos"])
-        return join_kv_pages(residue, pages, self.slot_tokens)
-
-    def _finish_if_done(self, req: Request) -> None:
-        if not req.done:
-            return
-        slot = req.slot
-        if slot is not None and slot in self.active:
-            del self.active[slot]
-        if slot is not None:
-            if self.offload_finished:
-                self._offload_finished(req)
-            if self.paging:
-                self._pt_np[slot] = self.trash_frame
-                self._pt_dirty = True
-            self.pool.release(slot)
-        req.done_t = self.clock()
-        self.finished[req.rid] = req
-        self.stats["slo_attained" if req.slo_attained()
-                   else "slo_missed"] += 1
-        if req.token_ts:
-            tier = req.tier.name
-            self.metrics.observe(f"engine/ttft_s/{tier}", req.ttft)
-            if len(req.token_ts) > 1:
-                self.metrics.observe(f"engine/tpot_s/{tier}", req.tpot)
-        if self.tracer.enabled:
-            self._obs_phase(req, None)       # close the lifecycle track
-            # everything trace_report needs to rebuild slo_report() from
-            # the trace alone rides on this one instant
-            self.tracer.instant(
-                "requests", f"req{req.rid}", "finish",
-                {"tier": req.tier.name, "arrival": req.arrival_t,
-                 "first_token": req.first_token_t, "done": req.done_t,
-                 "n_new": len(req.generated),
-                 "n_preempts": req.n_preempts,
-                 "ttft_slo": req.ttft_slo, "tpot_slo": req.tpot_slo,
-                 "attained": bool(req.slo_attained())})
-        self.events.post(EventKind.COMPLETE, req.rid)
-        self.events.drain()
-
-    # -- SLO telemetry --------------------------------------------------------
-    def slo_report(self) -> Dict[str, Any]:
-        """Per-tier SLO attainment over the finished requests.
-
-        All numbers live on the engine's one clock (virtual seconds by
-        default).  *Goodput* is the serving-paper definition: tokens
-        generated by requests that met every SLO they carry — work that
-        arrived uselessly late counts for nothing.  Example::
-
-            eng.run()
-            rep = eng.slo_report()
-            rep["interactive"]["goodput"]      # SLO-attaining tok/s
-            rep["interactive"]["ttft_p95"]
-        """
-        elapsed = max(self.clock(), 1e-12)
-        out: Dict[str, Any] = {"elapsed": elapsed}
-        for tier in Tier:
-            reqs = [r for r in self.finished.values() if r.tier is tier]
-            ttfts = sorted(r.ttft for r in reqs if r.token_ts)
-            good = [r for r in reqs if r.slo_attained()]
-            good_tokens = sum(len(r.generated) for r in good)
-            out[tier.name.lower()] = {
-                "n": len(reqs),
-                "attained": len(good),
-                "attainment": len(good) / len(reqs) if reqs else 1.0,
-                "good_tokens": good_tokens,
-                "goodput": good_tokens / elapsed,
-                "ttft_p50": (float(np.percentile(ttfts, 50))
-                             if ttfts else 0.0),
-                "ttft_p95": (float(np.percentile(ttfts, 95))
-                             if ttfts else 0.0),
-                "ttft_p99": (float(np.percentile(ttfts, 99))
-                             if ttfts else 0.0),
-            }
-        return out

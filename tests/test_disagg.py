@@ -1,0 +1,294 @@
+"""Disaggregated prefill/decode tests (the PR-8 acceptance surface).
+
+A PREFILL-role engine and a DECODE-role engine running over ONE shared
+:class:`~repro.core.offload.FarMemoryTier` must produce exactly the
+fused engine's tokens — under arbitrary graduation/admission
+interleavings, slow pagers, and AMU faults injected into the handoff
+fetch.  Tier entries may be discarded only after every transfer
+verifiably landed: a faulted admission must leave every ``(rid, *)``
+entry intact and succeed on retry.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.core.amu import AMU, AMUError, SimBackend
+from repro.core.offload import FarMemoryTier
+from repro.models import init_params
+from repro.paging import PagingError
+from repro.serve.config import (ChunkingConfig, EngineConfig, EngineRole,
+                                PagingConfig)
+from repro.serve.disagg import (HandoffBoard, make_shared_tier,
+                                run_disaggregated, spool_load, spool_save,
+                                tier_pager_factory)
+from repro.serve.engine import Engine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("phi4-mini-3.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, {}
+
+
+def _pair(cfg, params, tier, *, pager_latency=1e-6, device_pages=20):
+    """A (PREFILL, DECODE) engine pair over one shared ``tier``."""
+    mk = tier_pager_factory(tier, base_latency=pager_latency)
+    pe = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(32,), role="prefill",
+        paging=PagingConfig(page_size=8, device_pages=device_pages,
+                            pager_factory=mk),
+        chunking=ChunkingConfig(chunk_tokens=8)))
+    de = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(32,), role="decode",
+        handoff=pe.handoff,
+        paging=PagingConfig(page_size=8, device_pages=device_pages,
+                            pager_factory=mk),
+        chunking=ChunkingConfig(chunk_tokens=8)))
+    return pe, de
+
+
+def _fused_reference(cfg, params, cache, requests):
+    """The fused engine's outputs for ``[(prompt, max_new), ...]`` —
+    the disaggregated pipeline must match these token-for-token."""
+    key = tuple((tuple(int(t) for t in p), n) for p, n in requests)
+    if key not in cache:
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=3, max_len=64, prefill_buckets=(32,),
+            paging=PagingConfig(page_size=8, device_pages=20),
+            chunking=ChunkingConfig(chunk_tokens=8)))
+        for prompt, new in requests:
+            eng.submit(prompt, max_new_tokens=new)
+        cache[key] = eng.run()
+    return cache[key]
+
+
+# ---------------------------------------------------------------------------
+# role wiring
+# ---------------------------------------------------------------------------
+
+def test_fused_role_is_the_default_and_unchanged(setup):
+    """FUSED engines carry no disaggregation surface: default role,
+    no handoff board, no 'handoffs' stats key (metric snapshots stay
+    byte-compatible with the pre-split engine)."""
+    cfg, params, _ = setup
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=8)))
+    assert eng.role is EngineRole.FUSED
+    assert eng.handoff is None
+    assert "handoffs" not in eng.stats
+    with pytest.raises(PagingError):
+        eng.admit_handoff(object())        # wrong role, checked first
+
+
+def test_prefill_role_forces_offload_and_makes_board(setup):
+    cfg, params, _ = setup
+    tier = make_shared_tier()
+    pe, de = _pair(cfg, params, tier)
+    assert pe.role is EngineRole.PREFILL
+    assert pe.offload_finished            # graduation IS the park
+    assert isinstance(pe.handoff, HandoffBoard)
+    assert de.handoff is pe.handoff
+    assert pe.far_tier is tier and de.far_tier is tier
+    assert pe.pager.amu is not de.pager.amu is not tier.amu
+    assert "handoffs" in pe.stats and "handoffs" in de.stats
+
+
+def test_run_disaggregated_validates_pair(setup):
+    cfg, params, _ = setup
+    tier = make_shared_tier()
+    pe, de = _pair(cfg, params, tier)
+    fused = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=8)))
+    with pytest.raises(PagingError):
+        run_disaggregated(fused, de)       # wrong prefill role
+    pe2, _ = _pair(cfg, params, make_shared_tier())
+    with pytest.raises(PagingError):
+        run_disaggregated(pe2, de)         # different far tiers
+
+
+# ---------------------------------------------------------------------------
+# token-exactness
+# ---------------------------------------------------------------------------
+
+def test_disagg_pipeline_token_exact(setup):
+    """The driven pipeline (graduation overlapping adoption) matches the
+    fused engine exactly, including a one-token request that finishes on
+    the prefill side (``rec.done`` — adopted straight into finished)."""
+    cfg, params, cache = setup
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=l).astype(np.int32), m)
+            for l, m in ((7, 5), (13, 4), (21, 1), (5, 6))]
+    ref = _fused_reference(cfg, params, cache, reqs)
+    tier = make_shared_tier()
+    pe, de = _pair(cfg, params, tier)
+    for p, m in reqs:
+        pe.submit(p, max_new_tokens=m)
+    out = run_disaggregated(pe, de)
+    assert set(out) == set(ref)
+    for rid in ref:
+        assert out[rid] == ref[rid]
+    assert pe.stats["handoffs"] == len(reqs) == de.stats["handoffs"]
+    # completed sequences left nothing behind in the shared tier
+    for rid in ref:
+        assert (rid, "aux") not in tier and (rid, 0) not in tier
+
+
+def test_fault_during_handoff_admission_retries(setup):
+    """An AMU fault inside the handoff aux fetch raises with every tier
+    entry intact and zero decode-side state mutated; the same record
+    admits cleanly on retry and the tokens still match fused."""
+    cfg, params, cache = setup
+    fail = {"on": False}
+
+    def latency_fn(req):
+        if fail["on"]:
+            raise RuntimeError("injected handoff fault")
+        return 1e-6
+
+    tier = FarMemoryTier(AMU(SimBackend(base_latency=1e-6, bandwidth=10e9,
+                                        latency_fn=latency_fn)))
+    pe, de = _pair(cfg, params, tier)
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=11).astype(np.int32), 5),
+            (rng.integers(1, cfg.vocab_size, size=17).astype(np.int32), 4)]
+    for p, m in reqs:
+        pe.submit(p, max_new_tokens=m)
+    pe.run()
+    recs = pe.handoff.poll()
+    assert len(recs) == 2
+
+    fail["on"] = True
+    with pytest.raises(AMUError):
+        de.admit_handoff(recs[0])
+    rid = recs[0].rid
+    # nothing discarded, nothing admitted: full retryability
+    assert (rid, "aux") in tier
+    for logical in range(recs[0].n_pages):
+        assert (rid, logical) in tier
+    assert de.stats["handoffs"] == 0
+    assert not de.queue and rid not in de.page_table.sequences()
+
+    fail["on"] = False
+    for rec in recs:
+        de.admit_handoff(rec)
+    out = de.run()
+    ref = _fused_reference(cfg, params, cache, reqs)
+    for r in ref:
+        assert out[r] == ref[r]
+    de.check_invariants()
+
+
+@settings(max_examples=4, deadline=None)
+@given(data=st.data())
+def test_disagg_interleavings_token_exact(setup, data):
+    """Property: ANY admission order, decode-step stagger, pager speed
+    and fault placement yields exactly the fused engine's tokens, with
+    both engines' invariants balanced afterwards."""
+    cfg, params, cache = setup
+    n = data.draw(st.integers(min_value=2, max_value=4))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    reqs = [(rng.integers(1, cfg.vocab_size,
+                          size=int(rng.integers(3, 28))).astype(np.int32),
+             int(rng.integers(1, 7)))
+            for _ in range(n)]
+    order = data.draw(st.permutations(list(range(n))))
+    gaps = [data.draw(st.integers(min_value=0, max_value=3))
+            for _ in range(n)]
+    faulty = data.draw(st.sets(st.sampled_from(list(range(n)))))
+    slow = data.draw(st.booleans())
+
+    fail = {"on": False}
+
+    def latency_fn(req):
+        if fail["on"]:
+            raise RuntimeError("injected handoff fault")
+        return 5e-6 if slow else 1e-6
+
+    tier = FarMemoryTier(AMU(SimBackend(base_latency=1e-6, bandwidth=10e9,
+                                        latency_fn=latency_fn)))
+    pe, de = _pair(cfg, params, tier,
+                   pager_latency=20e-6 if slow else 1e-6)
+    for p, m in reqs:
+        pe.submit(p, max_new_tokens=m)
+    pe.run()
+    recs = {rec.rid: rec for rec in pe.handoff.poll()}
+    assert len(recs) == n
+
+    for i, gap in zip(order, gaps):
+        for _ in range(gap):
+            if not de.drained:
+                de.step_once()
+        rec = recs[i]
+        if i in faulty and not rec.done:
+            fail["on"] = True
+            with pytest.raises(AMUError):
+                de.admit_handoff(rec)
+            assert (rec.rid, "aux") in tier   # retryable: entry intact
+            fail["on"] = False
+        de.admit_handoff(rec)
+    out = de.run()
+
+    ref = _fused_reference(cfg, params, cache, reqs)
+    assert set(out) == set(ref)
+    for rid in ref:
+        assert out[rid] == ref[rid]
+    pe.check_invariants()
+    de.check_invariants()
+
+
+def test_spool_roundtrip_across_tiers(setup, tmp_path):
+    """The two-process handoff: records + tier entries spooled to disk
+    by the prefill side install into a *different* tier on the decode
+    side and still decode token-exact."""
+    cfg, params, cache = setup
+    rng = np.random.default_rng(9)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=l).astype(np.int32), m)
+            for l, m in ((9, 4), (15, 5))]
+    tier_a = make_shared_tier()
+    pe, _ = _pair(cfg, params, tier_a)
+    for p, m in reqs:
+        pe.submit(p, max_new_tokens=m)
+    pe.run()
+    recs = pe.handoff.poll()
+    path = str(tmp_path / "handoff.pkl")
+    spool_save(path, recs, tier_a)
+
+    tier_b = make_shared_tier()
+    _, de = _pair(cfg, params, tier_b)
+    loaded = spool_load(path, tier_b)
+    assert [r.rid for r in loaded] == [r.rid for r in recs]
+    for rec in loaded:
+        de.admit_handoff(rec)
+    out = de.run()
+    ref = _fused_reference(cfg, params, cache, reqs)
+    for rid in ref:
+        assert out[rid] == ref[rid]
+
+
+def test_decode_engine_mixes_handoffs_with_local_submissions(setup):
+    """A DECODE engine is still a full engine: locally submitted
+    requests interleave with adopted ones, and the rid counter jumps
+    past handed-off rids so the id space never collides."""
+    cfg, params, cache = setup
+    rng = np.random.default_rng(11)
+    hand = [(rng.integers(1, cfg.vocab_size, size=10).astype(np.int32), 4)]
+    local = (rng.integers(1, cfg.vocab_size, size=8).astype(np.int32), 3)
+    tier = make_shared_tier()
+    pe, de = _pair(cfg, params, tier)
+    pe.submit(hand[0][0], max_new_tokens=hand[0][1])
+    pe.run()
+    rec = pe.handoff.poll()[0]
+    de.admit_handoff(rec)
+    local_rid = de.submit(local[0], max_new_tokens=local[1])
+    assert local_rid > rec.rid             # bumped past the adopted rid
+    out = de.run()
+    ref_h = _fused_reference(cfg, params, cache, hand)
+    ref_l = _fused_reference(cfg, params, cache, [local])
+    assert out[rec.rid] == ref_h[rec.rid]
+    assert out[local_rid] == ref_l[0]      # fused ref numbered it rid 0
