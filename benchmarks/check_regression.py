@@ -17,6 +17,12 @@ dry-runs — any movement is a code change, not noise):
   floor; the same rows also carry a tail-latency gate —
   ``ttft_p99_slo`` (lower is better) must not regress beyond
   ``--threshold`` vs the baseline,
+* ``spec_decode_sweep`` — fails when the verify-K decode-throughput
+  speedup or mean accepted-K regresses on either traffic shape, when
+  the repetitive 2x row drops below its 1.3x acceptance floor, or when
+  an adversarial row collapses below 0.9x (mis-drafting must stay
+  bounded by the verify surcharge);
+
 * ``disagg_sweep`` — fails when any of the disaggregated-vs-fused
   ratios (``tpot_ratio`` / ``ttft_ratio`` / ``goodput_ratio``) at any
   swept oversubscription drops more than ``--threshold`` below the
@@ -74,6 +80,11 @@ OBS_OVERHEAD_MAX = 0.10
 #: keep at least this fraction of fused goodput at matched devices.
 DISAGG_TPOT_FLOOR_AT_2X = 1.05
 DISAGG_GOODPUT_FLOOR_AT_2X = 0.50
+
+#: spec_decode_sweep acceptance floor: decode-throughput speedup of
+#: verify-K speculation over single-step on repetitive traffic at 2x
+#: request oversubscription (the draft-free speculation claim).
+SPEC_FLOOR_AT_REPETITIVE = 1.3
 
 
 def _parse_fields(derived: str) -> Dict[str, float]:
@@ -201,6 +212,43 @@ def check_disagg_floor(cur_rows) -> bool:
     print(f"{'OK' if ok else 'FAIL'}: disagg_sweep oversub=2 "
           f"tpot_ratio={tpot:.3f} (floor {DISAGG_TPOT_FLOOR_AT_2X}) "
           f"goodput_ratio={good:.3f} (floor {DISAGG_GOODPUT_FLOOR_AT_2X})")
+    return not ok
+
+
+def _traffic_rows(rows, name: str, traffic: str):
+    """Rows of ``name`` carrying ``traffic=<shape>`` in their derived
+    string (the shape is non-numeric, so ``_parse_fields`` skips it and
+    the two sweeps would collide on the oversub axis otherwise)."""
+    return [r for r in rows if r.get("name") == name
+            and f"traffic={traffic} " in r.get("derived", "")]
+
+
+def check_spec_floor(cur_rows) -> bool:
+    """Absolute acceptance: >= 1.3x decode throughput on repetitive
+    traffic at 2x oversubscription, and the adversarial rows must not
+    collapse (mis-drafting is bounded by the verify surcharge, never
+    catastrophic)."""
+    cur = sweep_rows(_traffic_rows(cur_rows, "spec_decode_sweep",
+                                   "repetitive"),
+                     "spec_decode_sweep", "oversub")
+    row = cur.get(2.0)
+    if row is None:
+        print("FAIL: spec_decode_sweep has no repetitive oversub=2 row")
+        return True
+    speedup = row.get("thr_speedup", 0.0)
+    ok = speedup >= SPEC_FLOOR_AT_REPETITIVE
+    print(f"{'OK' if ok else 'FAIL'}: spec_decode_sweep repetitive "
+          f"oversub=2 thr_speedup={speedup:.3f} "
+          f"(floor {SPEC_FLOOR_AT_REPETITIVE})")
+    adv = sweep_rows(_traffic_rows(cur_rows, "spec_decode_sweep",
+                                   "adversarial"),
+                     "spec_decode_sweep", "oversub")
+    for x, r in sorted(adv.items()):
+        s = r.get("thr_speedup", 0.0)
+        if s < 0.9:
+            print(f"FAIL: spec_decode_sweep adversarial oversub={x:g} "
+                  f"thr_speedup={s:.3f} collapsed below 0.9")
+            ok = False
     return not ok
 
 
@@ -337,6 +385,23 @@ def main(argv=None) -> int:
                           metric="goodput_ratio",
                           threshold=args.threshold)
     failed |= check_disagg_floor(cur)
+    # speculation gates: per-traffic-shape regression on the speedup
+    # and mean accepted-K, plus the absolute repetitive floor at 2x
+    for shape in ("repetitive", "adversarial"):
+        failed |= check_sweep(_traffic_rows(cur, "spec_decode_sweep", shape),
+                              _traffic_rows(base, "spec_decode_sweep",
+                                            shape),
+                              name="spec_decode_sweep", axis="oversub",
+                              metric="thr_speedup",
+                              threshold=args.threshold)
+    failed |= check_sweep(_traffic_rows(cur, "spec_decode_sweep",
+                                        "repetitive"),
+                          _traffic_rows(base, "spec_decode_sweep",
+                                        "repetitive"),
+                          name="spec_decode_sweep", axis="oversub",
+                          metric="mean_accepted_k",
+                          threshold=args.threshold)
+    failed |= check_spec_floor(cur)
     failed |= check_obs_overhead(cur, base)
     if args.roofline is not None:
         failed |= check_roofline(cur, args.roofline, args.threshold)

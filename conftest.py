@@ -10,7 +10,8 @@ completely inert.
 The stub covers exactly the API surface the test-suite uses — ``given``,
 ``settings``, ``assume`` and the ``integers`` / ``floats`` / ``booleans``
 / ``sampled_from`` / ``lists`` / ``tuples`` / ``just`` / ``one_of`` /
-``permutations`` / ``sets`` / ``data`` strategies — drawing
+``permutations`` / ``sets`` / ``data`` / ``composite`` strategies —
+drawing
 pseudo-random examples from a per-test seeded RNG (reproducible across
 runs; no shrinking, no example database).
 """
@@ -107,6 +108,17 @@ def _build_hypothesis_stub() -> types.ModuleType:
     def data():
         return _Strategy(lambda rnd: _DataObject(rnd))
 
+    def composite(fn):
+        """``@st.composite``: the wrapped function's first argument
+        becomes a ``draw`` callable bound to the per-test RNG."""
+        @functools.wraps(fn)
+        def builder(*args, **kwargs):
+            def drawer(rnd):
+                return fn(lambda strategy, label=None: strategy.draw(rnd),
+                          *args, **kwargs)
+            return _Strategy(drawer)
+        return builder
+
     st.integers = integers
     st.floats = floats
     st.booleans = booleans
@@ -118,6 +130,7 @@ def _build_hypothesis_stub() -> types.ModuleType:
     st.permutations = permutations
     st.sets = sets
     st.data = data
+    st.composite = composite
 
     class _Unsatisfied(Exception):
         pass

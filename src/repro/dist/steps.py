@@ -227,7 +227,8 @@ def make_prefill_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
 def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
                     donate: bool = True,
                     act_policy: Optional[acts.ActPolicy] = None,
-                    paged: bool = False, kernel_impl: str = "auto"):
+                    paged: bool = False, kernel_impl: str = "auto",
+                    speculate_k: int = 0):
     """Build the sharded one-token decode: ``fn(params, cache, tokens) ->
     (logits, cache)`` with the cache donated (in-place KV update).
 
@@ -239,6 +240,15 @@ def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     paged-attention backend (``auto``: the Pallas gather kernel on TPU,
     the XLA gather elsewhere).
 
+    With ``speculate_k > 0`` (paged only) the step is the speculative
+    **verify-K branch** instead: ``fn(params, cache, tokens, length) ->
+    (logits, cache)`` with ``tokens`` (B, K+1) — the last committed
+    token plus K drafts per slot — ``length`` (B,) the valid rows, and
+    ``logits`` (B, K+1, V) scoring every draft in one jitted program
+    (:func:`~repro.models.model.verify_step`).  ``cache.pos`` is NOT
+    advanced; the engine decides acceptance host-side and writes the
+    rewound positions back.
+
     Donation audit (prefix sharing): the cache is donated, so the pool
     frames update *in place* — with refcounted shared frames this is
     safe only because no live schedule ever routes a write at a frame
@@ -247,23 +257,40 @@ def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     the trash frame; and the engine's COW guard
     (``Engine._ensure_private``) remaps before any write that would
     violate this.  Reads of a shared frame from several slots in one
-    step are unordered but read-only — no aliasing hazard."""
+    step are unordered but read-only — no aliasing hazard.  The verify
+    branch widens the write window to ``[pos, pos + length)``: still
+    strictly past the shared prefix (``pos`` never rewinds into it),
+    and the engine extends the COW guard over the whole draft range
+    before speculating (``_ensure_growth``'s draft-aware pass)."""
     pshapes = abstract_params(cfg)
     pspecs = param_specs(mesh, pshapes)
     pol = _policy_for(act_policy)
     cspecs = paged_cache_specs(mesh, cfg) if paged else None
+    if speculate_k and not paged:
+        raise ValueError("speculate_k requires the paged serve step")
 
-    def step(params, cache, tokens):
-        params = _constrain_tree(params, pspecs, mesh)
-        if cspecs is not None:
-            kv = dict(cache.kv)
-            for name, spec in cspecs.items():
-                kv[name] = jax.lax.with_sharding_constraint(
-                    kv[name], NamedSharding(mesh, spec))
-            cache = cache._replace(kv=kv)
-        with acts.policy(pol):
-            return model_mod.decode_step(params, cfg, cache, tokens,
-                                         impl=kernel_impl)
+    def _constrain_cache(cache):
+        kv = dict(cache.kv)
+        for name, spec in cspecs.items():
+            kv[name] = jax.lax.with_sharding_constraint(
+                kv[name], NamedSharding(mesh, spec))
+        return cache._replace(kv=kv)
+
+    if speculate_k:
+        def step(params, cache, tokens, length):
+            params = _constrain_tree(params, pspecs, mesh)
+            cache = _constrain_cache(cache)
+            with acts.policy(pol):
+                return model_mod.verify_step(params, cfg, cache, tokens,
+                                             length, impl=kernel_impl)
+    else:
+        def step(params, cache, tokens):
+            params = _constrain_tree(params, pspecs, mesh)
+            if cspecs is not None:
+                cache = _constrain_cache(cache)
+            with acts.policy(pol):
+                return model_mod.decode_step(params, cfg, cache, tokens,
+                                             impl=kernel_impl)
 
     fn = jax.jit(step, donate_argnums=(1,) if donate else ())
     specs = {"params": pspecs}
@@ -275,7 +302,7 @@ def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
 def make_mixed_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
                     donate: bool = True,
                     act_policy: Optional[acts.ActPolicy] = None,
-                    kernel_impl: str = "auto"):
+                    kernel_impl: str = "auto", speculate_k: int = 0):
     """Build the continuously-batched serve step: one decode token for
     every running slot **fused with** one paged prompt chunk for up to C
     admitting slots, in a single jitted, donated, mesh-bound program —
@@ -308,13 +335,20 @@ def make_mixed_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
     by construction (``prefill_pos`` skips them), so the in-place
     update never writes a multi-mapped frame.  See
     :func:`make_serve_step` for the decode half of the audit.
+
+    With ``speculate_k > 0`` the decode half becomes the speculative
+    verify-K branch (``fn(params, cache, tokens, length, chunk)`` with
+    ``tokens`` (B, K+1), ``logits`` (B, K+1, V), positions host-owned —
+    see :func:`make_serve_step`); the chunk half is byte-identical to
+    the non-speculative program, so admitting slots' graduation logits
+    are unchanged by the fusion either way.
     """
     pshapes = abstract_params(cfg)
     pspecs = param_specs(mesh, pshapes)
     pol = _policy_for(act_policy)
     cspecs = paged_cache_specs(mesh, cfg)
 
-    def step(params, cache, tokens, chunk):
+    def _constrain(params, cache, chunk):
         params = _constrain_tree(params, pspecs, mesh)
         kv = dict(cache.kv)
         for name, spec in cspecs.items():
@@ -324,12 +358,26 @@ def make_mixed_step(cfg: ModelConfig, mesh, shape: ShapeConfig, *,
         chunk = jax.tree_util.tree_map(
             lambda x: jax.lax.with_sharding_constraint(
                 x, NamedSharding(mesh, P())), chunk)
-        with acts.policy(pol):
-            logits, cache = model_mod.decode_step(params, cfg, cache, tokens,
-                                                  impl=kernel_impl)
-            chunk_logits, cache, carry = model_mod.prefill_chunk(
-                params, cfg, cache, chunk, impl=kernel_impl)
-        return logits, chunk_logits, carry, cache
+        return params, cache, chunk
+
+    if speculate_k:
+        def step(params, cache, tokens, length, chunk):
+            params, cache, chunk = _constrain(params, cache, chunk)
+            with acts.policy(pol):
+                logits, cache = model_mod.verify_step(
+                    params, cfg, cache, tokens, length, impl=kernel_impl)
+                chunk_logits, cache, carry = model_mod.prefill_chunk(
+                    params, cfg, cache, chunk, impl=kernel_impl)
+            return logits, chunk_logits, carry, cache
+    else:
+        def step(params, cache, tokens, chunk):
+            params, cache, chunk = _constrain(params, cache, chunk)
+            with acts.policy(pol):
+                logits, cache = model_mod.decode_step(
+                    params, cfg, cache, tokens, impl=kernel_impl)
+                chunk_logits, cache, carry = model_mod.prefill_chunk(
+                    params, cfg, cache, chunk, impl=kernel_impl)
+            return logits, chunk_logits, carry, cache
 
     fn = jax.jit(step, donate_argnums=(1,) if donate else ())
     return _MeshedStep(fn, mesh), {"params": pspecs, "paged_cache": cspecs}

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["decode_attention", "paged_decode_attention", "default_interpret"]
+__all__ = ["decode_attention", "paged_decode_attention",
+           "paged_verify_attention", "default_interpret"]
 
 NEG_INF = -1e30
 _LANE = 128
@@ -231,3 +232,126 @@ def paged_decode_attention(
     )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg,
       k_pages, v_pages)
     return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# multi-query paged variant: S query rows per sequence (speculative verify)
+# ---------------------------------------------------------------------------
+
+
+def _paged_verify_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc, m_s, l_s, *, scale: float, page: int,
+                         G: int, S: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_pg = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    # per-row valid lengths: verify row s sees s more KV positions than
+    # row 0 (its own token plus every draft before it).  S is small and
+    # static, so the SMEM reads unroll at trace time.
+    vals = [len_ref[b, s] for s in range(S)]
+    valid_max = vals[0]
+    for vl in vals[1:]:
+        valid_max = jnp.maximum(valid_max, vl)
+    valid_rows = jnp.broadcast_to(jnp.stack(vals)[:, None],
+                                  (S, G)).reshape(S * G, 1)
+    first_kv = j * page
+
+    @pl.when(first_kv < valid_max)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (S*G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)             # (page, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (S*G, page)
+        kv_pos = first_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (S * G, page), 1)
+        s = jnp.where(kv_pos < valid_rows, s, NEG_INF)
+        m_prev = m_s[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[:, :1] = l_s[:, :1] * corr + p.sum(-1, keepdims=True)
+        m_s[:, :1] = m_new
+        v = v_ref[0, :, 0].astype(jnp.float32)             # (page, D)
+        acc[...] = acc[...] * corr + jax.lax.dot(p, v)
+
+    @pl.when(j == n_pg - 1)
+    def _():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[:, :1], 1e-30)) \
+            .astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(
+    q: jnp.ndarray,            # (B, S, H, D) — S = K + 1 verify rows
+    k_pages: jnp.ndarray,      # (N, page, Hkv, D) — the device page pool
+    v_pages: jnp.ndarray,      # (N, page, Hkv, D)
+    page_table: jnp.ndarray,   # (B, pages_per_seq) int32 physical frame ids
+    lengths: jnp.ndarray,      # (B, S) int32 per-row valid KV length
+    *,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Multi-query paged decode attention for speculative verify-K.
+
+    :func:`paged_decode_attention` with ``S`` query rows per sequence
+    sharing one pass over the sequence's pages: the score tile grows
+    from (G, page) to (S*G, page) — like GQA's G, the extra verify rows
+    are a free MXU dim, so one aload of a KV page serves S*G consumers
+    instead of G.  This is the kernel-level payoff of self-speculative
+    decode: the page-fetch traffic of ONE decode step verifies K+1
+    tokens (the paper's amortise-per-access-overhead lever).
+
+    ``lengths[b, s]`` masks row ``s`` independently (row s's causal view
+    includes the draft rows before it).  A fully-masked row
+    (``lengths[b, s] == 0``) returns zeros here; the XLA reference path
+    returns the uniform value average instead — callers only consume
+    rows with ``lengths >= 1``, where the two agree.
+    """
+    if interpret is None:                  # auto: compiled on TPU only
+        interpret = default_interpret()
+    B, S, H, D = q.shape
+    N, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    pages_per_seq = page_table.shape[1]
+
+    # (B, S, Hkv, G, D) -> (B, Hkv, S*G, D): rows of one KV head stay
+    # contiguous so the kernel's (S*G, page) tile covers all verify rows
+    qg = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 1, 3, 4) \
+         .reshape(B, Hkv, S * G, D)
+
+    kernel = functools.partial(_paged_verify_kernel,
+                               scale=1.0 / math.sqrt(D), page=page,
+                               G=G, S=S)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, S * G, D),
+                         lambda b, h, j, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, pt, ln: (pt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, S * G, D),
+                               lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((S * G, D), jnp.float32),
+            pltpu.VMEM((S * G, _LANE), jnp.float32),
+            pltpu.VMEM((S * G, _LANE), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, S * G, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg,
+      k_pages, v_pages)
+    return out.reshape(B, Hkv, S, G, D).transpose(0, 2, 1, 3, 4) \
+              .reshape(B, S, H, D)

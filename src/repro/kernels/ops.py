@@ -24,6 +24,8 @@ from repro.kernels.decode_attention import decode_attention as _decode_attn
 from repro.kernels.decode_attention import default_interpret
 from repro.kernels.decode_attention import \
     paged_decode_attention as _paged_decode_attn
+from repro.kernels.decode_attention import \
+    paged_verify_attention as _paged_verify_attn
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.flash_attention import \
     paged_prefill_flash as _paged_prefill_flash
@@ -32,7 +34,8 @@ from repro.kernels.moe_gather import gather_rows as _gather_rows
 from repro.kernels.rwkv6 import wkv6 as _wkv6
 
 __all__ = ["matmul", "flash_attention", "decode_attention",
-           "paged_decode_attention", "paged_prefill_attention", "wkv6",
+           "paged_decode_attention", "paged_verify_attention",
+           "paged_prefill_attention", "wkv6",
            "ssd", "gather_rows", "on_tpu", "resolve_impl",
            "default_interpret"]
 
@@ -97,6 +100,34 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
         out = one_token_attention(q, k, v, lengths, Hkv)
         return out.reshape(B, H, D).astype(q.dtype)
     return _paged_decode_attn(q, k_pages, v_pages, page_table, lengths,
+                              interpret=(impl == "interpret"), **kw)
+
+
+def paged_verify_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           impl: str = "auto", **kw):
+    """q: (B, S, H, D) — S = K + 1 speculative verify rows; k/v_pages:
+    (N, page, Hkv, D) pool layout; page_table: (B, pages_per_seq) frame
+    ids; lengths: (B, S) per-row valid KV.
+
+    The XLA path gathers the dense view once and defers to the shared
+    ``multi_token_attention`` reference — the one-token decode
+    expressions with an S axis — so verify-row s stays bit-exact with
+    the sequential decode step it replaces (the property speculative
+    token-exactness rests on).
+    """
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        from repro.models.attention import multi_token_attention
+        B, S, H, D = q.shape
+        _, page, Hkv, _ = k_pages.shape
+        k = jnp.take(k_pages, page_table, axis=0)         # (B, pps, page, ...)
+        v = jnp.take(v_pages, page_table, axis=0)
+        Skv = k.shape[1] * page
+        k = k.reshape(B, Skv, Hkv, D)
+        v = v.reshape(B, Skv, Hkv, D)
+        out = multi_token_attention(q, k, v, lengths, Hkv)
+        return out.reshape(B, S, H, D).astype(q.dtype)
+    return _paged_verify_attn(q, k_pages, v_pages, page_table, lengths,
                               interpret=(impl == "interpret"), **kw)
 
 

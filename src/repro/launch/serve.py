@@ -104,6 +104,14 @@ def _report(eng, econf, out, wall) -> None:
               f"<= {eng.chunk_tokens} tok across "
               f"{eng.stats['mixed_steps']} mixed steps "
               f"({eng.stats['prefills']} dense-prefill fallbacks)")
+    if eng.speculating:
+        s = eng.stats
+        mean_k = s["accepted"] / max(1, s["spec_steps"])
+        rate = s["accepted"] / max(1, s["drafted"])
+        print(f"[serve] speculation k={eng.speculate_k}: "
+              f"{s['spec_steps']} verify steps, "
+              f"{s['drafted']} drafted / {s['accepted']} accepted "
+              f"({rate:.0%}), mean accepted-K {mean_k:.2f}")
     if eng.prefix is not None:
         print(f"[serve] prefix cache: {eng.stats['prefix_hits']} page hits "
               f"({eng.stats['prefix_far_hits']} far), "

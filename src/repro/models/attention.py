@@ -31,7 +31,8 @@ Params = Dict[str, jnp.ndarray]
 __all__ = [
     "attn_init", "attention_block", "decode_attention_block",
     "paged_decode_attention_block", "paged_prefill_block",
-    "one_token_attention", "init_kv_cache", "init_paged_kv_cache",
+    "paged_verify_block", "one_token_attention", "multi_token_attention",
+    "init_kv_cache", "init_paged_kv_cache",
     "chunked_attention", "NEG_INF",
 ]
 
@@ -393,6 +394,36 @@ def _one_token_attention(cfg: ModelConfig, q, kc, vc, valid):
                                kc, vc, valid, cfg.num_kv_heads)
 
 
+def multi_token_attention(q, kc, vc, valid, num_kv_heads: int):
+    """S-query-row attention over a dense (B, Skv, Hkv, D) cache.
+
+    :func:`one_token_attention` generalised to ``S`` query rows per
+    sequence — the XLA reference for speculative verify-K decode.  The
+    expression chain is kept IDENTICAL to the one-token path (scale
+    before the score einsum, mask, softmax, then the value einsum) with
+    one extra batch axis, because token-exactness of speculative decode
+    rests on row ``s`` here being bit-equal to what a sequential
+    one-token step at position ``pos + s`` would compute.  Online-
+    softmax variants (``_chunked_core``) are NOT bit-compatible — they
+    normalise after the value product.
+
+    ``q``: (B, S, H, D); ``valid``: (B, S) masks KV positions at/past it
+    independently per row (row ``s`` of a verify step may see ``s`` more
+    tokens than row 0).  Returns f32 (B, S, H * D).
+    """
+    B, S, H, hd = q.shape
+    slots = kc.shape[1]
+    qf = (q.astype(jnp.float32) * (1.0 / math.sqrt(hd)))
+    qf = qf.reshape(B, S, num_kv_heads, H // num_kv_heads, hd)
+    s = jnp.einsum("bshgd,bkhd->bshgk", qf, kc.astype(jnp.float32))
+    kv_idx = jnp.arange(slots)
+    s = jnp.where((kv_idx[None, None, :]
+                   < valid[:, :, None])[:, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bshgk,bkhd->bshgd", w, vc.astype(jnp.float32))
+    return out.reshape(B, S, H * hd)
+
+
 # -- paged decode path (repro.paging pool layout) ---------------------------------
 
 
@@ -482,6 +513,77 @@ def paged_decode_attention_block(
     out = ops.paged_decode_attention(
         q[:, 0], kp, vp, page_table, valid, impl=impl)
     out = out.reshape(B, 1, cfg.num_heads * hd).astype(compute_dtype)
+    return dense(p["o"], out, compute_dtype), (kp, vp)
+
+
+def paged_verify_block(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                      # (B, S, d)
+    layer_pages: Tuple[jnp.ndarray, jnp.ndarray],  # k,v (N, page, Hkv, D)
+    page_table: jnp.ndarray,             # (B, pages_per_seq) int32 frame ids
+    pos: jnp.ndarray,                    # (B,) int32: position of x[:, 0]
+    length: jnp.ndarray,                 # (B,) valid rows in x (0 = inert)
+    *,
+    compute_dtype=jnp.bfloat16,
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Verify-K attention for self-speculative decode on the paged pool.
+
+    :func:`paged_decode_attention_block` generalised to ``S = K + 1``
+    query rows per slot: row 0 carries the last committed token, rows
+    1..K the drafted continuation.  All valid rows' K/V scatter into the
+    page-table-mapped frames exactly as ``S`` sequential decode steps
+    would (row ``s`` lands at position ``pos + s``); rows at/past
+    ``length`` scatter to the trash frame, so a slot whose draft was
+    capped (or an empty slot, ``length == 0``) never dirties real
+    frames.  Attention then reads the pool with a per-row valid length
+    ``min(pos + s + 1, slots)`` — row ``s`` sees its own K/V and every
+    draft row before it, the causal view a sequential decode would have.
+
+    Bit-exactness contract: for any row ``s < length`` whose prefix
+    d_1..d_s matches greedy decode, the returned logits row is
+    bit-equal to the logits of the s-th sequential
+    :func:`paged_decode_attention_block` step — the XLA path defers to
+    :func:`multi_token_attention`, the one-token reference's exact
+    expressions.  Callers must ensure ``pos + length <= slots``; this
+    block has no SWA ring semantics (speculation is gated off for SWA).
+    """
+    from repro.kernels import ops
+
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    kp, vp = layer_pages
+    page = kp.shape[1]
+    pages_per_seq = page_table.shape[1]
+    slots = pages_per_seq * page                 # token capacity per sequence
+    trash = kp.shape[0] - 1
+    q, k_new, v_new = _project_qkv(p, cfg, x, compute_dtype)
+    q, k_new, v_new = _gather_qkv_for_rope(q, k_new, v_new)
+    pos = jnp.broadcast_to(pos, (B,))
+    abs_pos = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # (B, S)
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(abs_pos, (3, B, S))
+        q, k_new = _position_encode(cfg, q, k_new, pos3)
+    else:
+        q, k_new = _position_encode(cfg, q, k_new, abs_pos)
+
+    # scatter like paged_prefill_block: draft row s of slot b lands at
+    # absolute position pos[b] + s -> (frame, row-in-page); rows past
+    # `length` go to the trash frame (the rejected-tail scatter target)
+    in_draft = jnp.arange(S, dtype=jnp.int32)[None, :] < length[:, None]
+    ok = in_draft & (abs_pos < slots)
+    page_idx = jnp.clip(abs_pos // page, 0, pages_per_seq - 1)
+    frame = jnp.where(ok, jnp.take_along_axis(page_table, page_idx, axis=1),
+                      trash)                     # (B, S)
+    row = abs_pos % page
+    kp = kp.at[frame, row].set(k_new.astype(kp.dtype))
+    vp = vp.at[frame, row].set(v_new.astype(vp.dtype))
+    valid = jnp.minimum(abs_pos + 1, slots)      # (B, S) per-row causal view
+
+    out = ops.paged_verify_attention(
+        q, kp, vp, page_table, valid, impl=impl)
+    out = out.reshape(B, S, cfg.num_heads * hd).astype(compute_dtype)
     return dense(p["o"], out, compute_dtype), (kp, vp)
 
 

@@ -30,7 +30,7 @@ from repro.models.attention import (attention_block, attn_init,
                                     chunked_attention, decode_attention_block,
                                     init_kv_cache, init_paged_kv_cache,
                                     paged_decode_attention_block,
-                                    paged_prefill_block)
+                                    paged_prefill_block, paged_verify_block)
 from repro.models.layers import (embed, embed_init, rms_norm, rms_norm_init,
                                  swiglu, swiglu_init, unembed)
 from repro.models.moe import moe_block, moe_init
@@ -38,9 +38,9 @@ from repro.models.moe import moe_block, moe_init
 Params = Dict[str, Any]
 
 __all__ = [
-    "init_params", "train_loss", "prefill", "decode_step", "init_cache",
-    "PagedCache", "init_paged_cache", "prefill_chunk", "encode_cross",
-    "chunked_cross_entropy", "count_params",
+    "init_params", "train_loss", "prefill", "decode_step", "verify_step",
+    "init_cache", "PagedCache", "init_paged_cache", "prefill_chunk",
+    "encode_cross", "chunked_cross_entropy", "count_params",
 ]
 
 
@@ -504,6 +504,54 @@ def decode_step(params, cfg: ModelConfig, cache: Cache,
                      compute_dtype=cdt)[:, 0]
     new_cache = cache._replace(kv=kv, pos=pos + 1)
     return logits.astype(jnp.float32), new_cache
+
+
+def verify_step(params, cfg: ModelConfig, cache: Cache,
+                tokens: jnp.ndarray, length: jnp.ndarray,
+                *, impl: str = "auto") -> Tuple[jnp.ndarray, Cache]:
+    """Speculative verify-K decode: score S = K + 1 tokens per slot in
+    one step.  tokens: (B, S) int32 — row 0 the last committed token,
+    rows 1..K the drafted continuation; length: (B,) valid rows per slot
+    (0 marks an inert slot, whose K/V all scatter to the trash frame).
+    Returns (logits (B, S, V) f32, cache).
+
+    Logits row ``s`` predicts the token at position ``pos + s + 1``;
+    for any draft prefix that matches greedy decode, the rows are
+    bit-equal to the sequential :func:`decode_step` logits they replace
+    (same layer structure via ``_decode_families``, same attention
+    expressions via ``paged_verify_block``).  ``cache.pos`` is NOT
+    advanced — acceptance length is decided host-side after the argmax
+    comparison, and the engine writes the rewound ``pos`` back.
+
+    Paged KV only, dense/moe families only, no SWA — the engine gates
+    speculation accordingly.
+    """
+    cdt = _cdtype(cfg)
+    if not isinstance(cache, PagedCache):
+        raise ValueError("verify_step requires a PagedCache")
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"speculative verify not supported for family {cfg.family!r}")
+    if cfg.attention == "swa":
+        raise ValueError("speculative verify has no SWA ring semantics")
+    pos = cache.pos
+    x = embed(params["embed"], tokens, cdt)
+    pt = cache.kv["page_table"]
+
+    def attn(p, h, kl, vl):
+        return paged_verify_block(p, cfg, h, (kl, vl), pt, pos, length,
+                                  compute_dtype=cdt, impl=impl)
+
+    x, kn, vn, _ = _decode_families(
+        params, cfg, x, cache, cache.kv["k_pages"], cache.kv["v_pages"],
+        attn, cdt)
+    kv = dict(cache.kv, k_pages=kn, v_pages=vn)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"]["table"] if cfg.tie_embeddings else \
+        params["lm_head"]["table"]
+    logits = unembed({"table": table}, x, logit_scale=cfg.logit_scale,
+                     compute_dtype=cdt)
+    return logits.astype(jnp.float32), cache._replace(kv=kv)
 
 
 def _decode_families(params, cfg: ModelConfig, x, cache, ks, vs, attn,

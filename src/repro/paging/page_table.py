@@ -370,6 +370,27 @@ class PageTable:
             if pte.phys != NOT_MAPPED:
                 self._unmap(seq, logical, pte)
 
+    def rewind_tokens(self, seq: Hashable, n_tokens: int) -> int:
+        """Rewind ``seq``'s mapping to its first ``n_tokens`` valid
+        positions, releasing every wholly-garbage trailing page — the
+        page-table half of speculative rollback (the rejected draft
+        tail past ``n_tokens`` becomes dead KV; pages that hold no live
+        token at all go back to the pool, the partial tail page stays
+        and is simply overwritten as the sequence appends).  Returns
+        the number of pages released.
+
+        Idempotent, and a no-op when the mapping already fits (the
+        all-drafts-accepted case).  The freshness bookkeeping needs no
+        touch-up here: a later park derives its per-page valid-token
+        tag from the engine's rewound ``pos``, so a rolled-back park
+        stays clean for free."""
+        keep = pages_for(n_tokens, self.pool.page_size)
+        dropped = len(self._entries(seq)) - keep
+        if dropped > 0:
+            self.truncate(seq, keep)
+            return dropped
+        return 0
+
     def pages_needed(self, seq_or_tokens, n_tokens: Optional[int] = None) -> int:
         """Additional frames required to cover ``n_tokens`` positions.
         Call as ``pages_needed(n_tokens)`` for an unregistered sequence."""

@@ -27,7 +27,7 @@ from repro.paging.pager import Pager
 
 __all__ = ["simulate_paged_serving", "simulate_mixed_batching",
            "simulate_prefix_reuse", "simulate_slo_schedule",
-           "simulate_disagg"]
+           "simulate_disagg", "simulate_spec_decode"]
 
 
 def simulate_paged_serving(
@@ -285,6 +285,138 @@ def simulate_mixed_batching(
                                / dense["decode_tok_per_s"]),
         "tpot_dense_us": dense["tpot_mean"] * 1e6,
         "tpot_mixed_us": mixed["tpot_mean"] * 1e6,
+    }
+
+
+def simulate_spec_decode(
+    oversubscription: float,
+    *,
+    traffic: str = "repetitive",
+    max_batch: int = 4,
+    prompt_tokens: int = 64,
+    new_tokens: int = 48,
+    speculate_k: int = 4,
+    ngram: int = 3,
+    period: int = 8,
+    vocab: int = 512,
+    seed: int = 0,
+    t_decode_step: float = 20e-6,
+    t_prefill_token: float = 1.5e-6,
+    c_verify: float = 0.15,
+) -> Dict[str, float]:
+    """Self-speculative verify-K decode vs single-step, deterministic.
+
+    A burst of ``oversubscription * max_batch * 4`` requests is served
+    on ``max_batch`` decode slots over a virtual clock; each request's
+    *true* token stream is synthetic and known up front, so greedy
+    acceptance is exact prefix matching against it — the same algebra
+    the engine's verify step runs against argmax logits.  Two traffic
+    shapes:
+
+    * ``"repetitive"`` — each stream cycles a per-request random
+      ``period``-gram, the prompt-lookup proposer's best case (code,
+      templated text); trailing n-grams recur, so drafts are nearly
+      always the true continuation,
+    * ``"adversarial"`` — i.i.d. uniform random tokens; with a large
+      vocabulary the trailing n-gram essentially never recurs, so the
+      proposer rarely fires and almost nothing it drafts survives.
+
+    Drafting uses the REAL :class:`~repro.serve.speculate.NgramProposer`
+    over each request's prompt + generated history, not a model of it.
+    A speculative step's cost scales with the widest draft actually
+    batched that step — the verify matmul's extra query rows —
+    ``t_decode_step * (1 + c_verify * K_step)``, and each slot advances
+    ``1 + accepted``; the single-step baseline pays ``t_decode_step``
+    per token.  Pages are not the constraint here (that is
+    ``paged_kv_sweep``); admission is slot-bound with serial prefill on
+    both sides, so the ratio isolates verify-K compression.
+
+    Returns tokens/s for both policies, the throughput speedup, and
+    mean accepted-K per drafting slot (the acceptance telemetry the
+    engine reports from its ``spec_*`` tracks).
+    """
+    import random as _random
+
+    from repro.serve.speculate import NgramProposer
+
+    if traffic not in ("repetitive", "adversarial"):
+        raise ValueError(f"unknown traffic shape {traffic!r}")
+    n_seqs = max(1, int(round(oversubscription * max_batch * 4)))
+    total_len = prompt_tokens + new_tokens
+    streams = []
+    for s in range(n_seqs):
+        rng = _random.Random((seed, traffic, s))
+        if traffic == "repetitive":
+            pattern = [rng.randrange(vocab) for _ in range(period)]
+            streams.append([pattern[i % period] for i in range(total_len)])
+        else:
+            streams.append([rng.randrange(vocab) for _ in range(total_len)])
+
+    def run(speculative: bool) -> Dict[str, float]:
+        now = 0.0
+        queue = list(range(n_seqs))
+        running: Dict[int, int] = {}        # seq -> tokens generated
+        proposer = NgramProposer(n=ngram, k=speculate_k)
+        drafted = accepted = spec_steps = n_drafts = 0
+        done = 0
+        while done < n_seqs:
+            while queue and len(running) < max_batch:
+                seq = queue.pop(0)
+                now += prompt_tokens * t_prefill_token  # serial prefill
+                running[seq] = 0
+            k_step = 0
+            advances: Dict[int, int] = {}
+            for seq in sorted(running):
+                gen = running[seq]
+                budget = new_tokens - gen - 1
+                adv = 1
+                if speculative and budget > 0:
+                    hist = streams[seq][:prompt_tokens + gen]
+                    draft = proposer.propose(seq, hist)[:budget]
+                    if draft:
+                        true_tail = streams[seq][prompt_tokens + gen:]
+                        acc = 0
+                        while acc < len(draft) \
+                                and draft[acc] == true_tail[acc]:
+                            acc += 1
+                        drafted += len(draft)
+                        accepted += acc
+                        n_drafts += 1
+                        k_step = max(k_step, len(draft))
+                        adv = 1 + acc
+                advances[seq] = adv
+            now += t_decode_step * (1.0 + c_verify * k_step)
+            if k_step:
+                spec_steps += 1
+            for seq, adv in advances.items():
+                running[seq] += adv
+                if running[seq] >= new_tokens:
+                    del running[seq]
+                    proposer.drop(seq)
+                    done += 1
+        return {
+            "wall": now,
+            "tok_per_s": n_seqs * new_tokens / now,
+            "drafted": drafted,
+            "accepted": accepted,
+            "spec_steps": spec_steps,
+            "n_drafts": n_drafts,
+        }
+
+    plain = run(speculative=False)
+    spec = run(speculative=True)
+    return {
+        "oversubscription": oversubscription,
+        "n_seqs": float(n_seqs),
+        "tok_per_s_plain": plain["tok_per_s"],
+        "tok_per_s_spec": spec["tok_per_s"],
+        "throughput_speedup": spec["tok_per_s"] / plain["tok_per_s"],
+        "drafted": float(spec["drafted"]),
+        "accepted": float(spec["accepted"]),
+        "mean_accepted_k": (spec["accepted"] / spec["n_drafts"]
+                            if spec["n_drafts"] else 0.0),
+        "acceptance_rate": (spec["accepted"] / spec["drafted"]
+                            if spec["drafted"] else 0.0),
     }
 
 

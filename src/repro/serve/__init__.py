@@ -57,8 +57,8 @@ Minimal use::
 """
 
 from repro.serve.config import (ChunkingConfig, EngineConfig, EngineRole,
-                                PagingConfig, SchedulerConfig, Tier,
-                                VirtualClock)
+                                PagingConfig, SchedulerConfig,
+                                SpeculationConfig, Tier, VirtualClock)
 from repro.serve.disagg import (HandoffBoard, HandoffRecord,
                                 make_shared_tier, run_disaggregated,
                                 tier_pager_factory)
@@ -66,7 +66,8 @@ from repro.serve.engine import Engine, Request, SchedulerPolicy
 
 __all__ = [
     "Engine", "Request", "SchedulerPolicy", "EngineConfig", "PagingConfig",
-    "ChunkingConfig", "SchedulerConfig", "Tier", "VirtualClock",
+    "ChunkingConfig", "SchedulerConfig", "SpeculationConfig", "Tier",
+    "VirtualClock",
     "EngineRole", "HandoffBoard", "HandoffRecord", "make_shared_tier",
     "tier_pager_factory", "run_disaggregated",
 ]

@@ -48,7 +48,8 @@ from repro.paging import WatermarkPolicy
 
 __all__ = [
     "Tier", "EngineRole", "VirtualClock", "PagingConfig",
-    "ChunkingConfig", "SchedulerConfig", "ObsConfig", "EngineConfig",
+    "ChunkingConfig", "SchedulerConfig", "SpeculationConfig", "ObsConfig",
+    "EngineConfig",
     "engine_config_from_kwargs", "add_config_args", "config_from_args",
 ]
 
@@ -149,6 +150,29 @@ class ChunkingConfig:
 
 
 @dataclass(frozen=True)
+class SpeculationConfig:
+    """Draft-free self-speculative decode (prompt-lookup verify-K).
+
+    With ``speculate_k > 0`` the paged engine drafts up to K tokens per
+    slot from the slot's own committed history
+    (:class:`~repro.serve.speculate.NgramProposer`) and scores them all
+    in one jitted verify step; greedy acceptance keeps the emitted
+    stream token-exact with single-step decode, so this is purely a
+    throughput knob.  Requires the paged dense/moe global-attention
+    engine (same gate as prefix sharing)."""
+
+    speculate_k: int = _f(
+        0, "speculative decode: max drafted tokens per slot per step "
+        "(0 = off; K drafts verify in one multi-query step)")
+    speculate_ngram: int = _f(
+        3, "prompt-lookup n-gram length the proposer matches on")
+    proposer_factory: Optional[Callable] = _f(
+        None, "custom draft proposer factory (tests: oracle/adversarial "
+        "proposers); None = NgramProposer(speculate_ngram, speculate_k)",
+        cli=False)
+
+
+@dataclass(frozen=True)
 class SchedulerConfig:
     """Scheduling policy + the SLO knobs the goodput scheduler consumes.
 
@@ -235,6 +259,8 @@ class EngineConfig:
                                      metadata={"cli": True})
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig,
                                        metadata={"cli": True})
+    speculation: SpeculationConfig = field(
+        default_factory=SpeculationConfig, metadata={"cli": True})
     obs: ObsConfig = field(default_factory=ObsConfig,
                            metadata={"cli": True})
 
@@ -298,7 +324,7 @@ def engine_config_from_kwargs(base: Optional[EngineConfig] = None,
 # new knob lands on the CLI (with its help string) the moment it lands
 # in the config — the API and the CLI cannot drift.
 
-_GROUPS = ("paging", "chunking", "scheduler", "obs")
+_GROUPS = ("paging", "chunking", "scheduler", "speculation", "obs")
 
 
 def _cli_fields(dc_type):
@@ -334,7 +360,7 @@ def add_config_args(parser: argparse.ArgumentParser) -> None:
     (top level + every sub-config; names are unique by construction)."""
     seen = set()
     for dc in (EngineConfig, PagingConfig, ChunkingConfig,
-               SchedulerConfig, ObsConfig):
+               SchedulerConfig, SpeculationConfig, ObsConfig):
         for fld in _cli_fields(dc):
             if fld.name in seen:
                 raise TypeError(
@@ -377,10 +403,11 @@ def config_from_args(args: argparse.Namespace, **overrides) -> EngineConfig:
     paging = PagingConfig(**build(PagingConfig))
     chunking = ChunkingConfig(**build(ChunkingConfig))
     scheduler = SchedulerConfig(**build(SchedulerConfig))
+    speculation = SpeculationConfig(**build(SpeculationConfig))
     obs = ObsConfig(**build(ObsConfig))
     cfg = EngineConfig(paging=paging, chunking=chunking,
-                       scheduler=scheduler, obs=obs,
-                       **build(EngineConfig))
+                       scheduler=scheduler, speculation=speculation,
+                       obs=obs, **build(EngineConfig))
     for path, value in overrides.items():
         group, _, fname = path.partition("_")
         if group in _GROUPS and fname:

@@ -132,6 +132,7 @@ from repro.serve.kv_cache import SlotPool
 from repro.serve.policy import SCHEDULERS as _SCHEDULERS
 from repro.serve.policy import SchedulerPolicy, SLOScheduler
 from repro.serve.request import Request
+from repro.serve.speculate import NgramProposer
 from repro.serve.transfer import TransferMixin
 
 __all__ = ["Request", "Engine", "SchedulerPolicy", "SLOScheduler"]
@@ -360,6 +361,47 @@ class Engine(AdmissionMixin, TransferMixin, DecodeMixin):
             self.prefix = PrefixCache(self.page_pool, self.page_table,
                                       self.pager, page_size)
 
+        # -- draft-free self-speculative decode (verify-K) ------------------
+        # an n-gram prompt-lookup proposer drafts up to K tokens per slot
+        # from the slot's own committed history; one jitted verify step
+        # scores all drafts through the multi-query paged kernel, and
+        # greedy acceptance keeps the stream token-exact with single-step
+        # decode.  Same family gate as the prefix cache: append-only KV,
+        # absolute rope (SWA ring wrap would rewrite rolled-back pages).
+        sp = ec.speculation
+        self.speculate_k = int(sp.speculate_k or 0)
+        self.speculating = self.speculate_k > 0
+        self.proposer = None
+        if self.speculating:
+            if not self.paging:
+                raise PagingError(
+                    "speculative decode requires the paged engine "
+                    "(verify-K scatters through the page table)")
+            if cfg.family not in ("dense", "moe") or \
+                    cfg.attention == "swa":
+                raise PagingError(
+                    "speculative decode supports global-attention "
+                    f"dense/moe families; got family={cfg.family!r} "
+                    f"attention={cfg.attention!r}")
+            if self.role is EngineRole.PREFILL:
+                raise PagingError(
+                    "a PREFILL-role engine never decodes past the first "
+                    "token — speculation has nothing to draft")
+            if sp.proposer_factory is not None:
+                self.proposer = sp.proposer_factory(sp.speculate_ngram,
+                                                    self.speculate_k)
+            else:
+                self.proposer = NgramProposer(n=sp.speculate_ngram,
+                                              k=self.speculate_k)
+            self._verify, self._verify_specs = make_serve_step(
+                cfg, self.mesh, shape, donate=True, paged=True,
+                kernel_impl=ec.kernel_impl, speculate_k=self.speculate_k)
+            if self.chunking:
+                self._mixed_verify, _ = make_mixed_step(
+                    cfg, self.mesh, shape, donate=True,
+                    kernel_impl=ec.kernel_impl,
+                    speculate_k=self.speculate_k)
+
         self.events = EventLoop(metrics=self.metrics)
         self.events.on(EventKind.TICK, self._on_tick)
         self.events.on(EventKind.PAGE_ARRIVED, self._on_page_arrived)
@@ -376,6 +418,11 @@ class Engine(AdmissionMixin, TransferMixin, DecodeMixin):
                    "shed_admissions": 0}
         if self.role is not EngineRole.FUSED:
             initial["handoffs"] = 0      # FUSED snapshots stay unchanged
+        if self.speculating:
+            # seeded only when speculation is on, so non-speculative
+            # snapshots (and the bench baselines) stay byte-identical
+            initial.update({"spec_steps": 0, "drafted": 0,
+                            "accepted": 0, "rejected": 0})
         self.stats = self.metrics.counters("engine", initial=initial)
 
     # -- public API ----------------------------------------------------------
@@ -594,10 +641,28 @@ class Engine(AdmissionMixin, TransferMixin, DecodeMixin):
         * ADMIT events == admissions + resumes (every ADMIT post has
           exactly one matching stats increment),
         * on a PREFILL role: HANDOFF events == published handoffs,
+        * speculating: accepted + rejected == drafted (every drafted
+          token is adjudicated exactly once), and no active slot's
+          valid tokens exceed its scattered (mapped) frames,
         * the pager's per-QoS window takes/releases balance its
           in-flight gauges (see :meth:`Pager.check_invariants`).
         """
         s = self.stats
+        if self.speculating:
+            if s["accepted"] + s["rejected"] != s["drafted"]:
+                raise PagingError(
+                    f"speculation imbalance: {s['accepted']} accepted + "
+                    f"{s['rejected']} rejected != {s['drafted']} drafted")
+            if self.paging:
+                pos_np = np.asarray(self.cache.pos)
+                for slot, req in self.active.items():
+                    covered = self.page_table.n_pages(req.rid) \
+                        * self.page_size
+                    if int(pos_np[slot]) > covered:
+                        raise PagingError(
+                            f"rid {req.rid}: valid tokens "
+                            f"{int(pos_np[slot])} exceed scattered frames "
+                            f"({covered} positions mapped)")
         pending = sum(
             1 for r in itertools.chain(self.queue, self._resuming.values())
             if r.parked and r.n_preempts > 0)

@@ -21,7 +21,8 @@ from repro.models import init_params
 from repro.paging import (PREFIX_SEQ, PagePool, PageState, PageTable, Pager,
                           PagingError, PrefixCache, WatermarkPolicy,
                           page_hashes, pages_for)
-from repro.serve.config import ChunkingConfig, EngineConfig, PagingConfig
+from repro.serve.config import (ChunkingConfig, EngineConfig, PagingConfig,
+                                SpeculationConfig)
 from repro.serve.engine import Engine
 
 
@@ -309,14 +310,18 @@ def test_prefix_far_hit_fault_mid_admission_recovers(setup):
        hot_tail=st.integers(0, 1),
        low=st.integers(0, 2),
        latency=st.floats(1e-5, 3e-3),
-       shared_prefix=st.integers(0, 12))
+       shared_prefix=st.integers(0, 12),
+       speculate_k=st.sampled_from([0, 2]))
 def test_property_two_tier_engine_matches_dense(setup, seed, page_size,
                                                 spare_pages, hot_tail, low,
-                                                latency, shared_prefix):
+                                                latency, shared_prefix,
+                                                speculate_k):
     """Random evict/park/finish/resume/prefix-hit interleavings: tight
     pools force preemption + watermark eviction, slow pagers stretch
     ARRIVING windows across steps, shared prefixes mix device and far
-    hits — output must equal the dense engine token-for-token."""
+    hits — output must equal the dense engine token-for-token.  The
+    ``speculate_k`` axis reruns the same churn with the verify-K path
+    live: rewinds and draft-aware growth must not disturb exactness."""
     cfg, params, ref_cache = setup
     rng = np.random.default_rng(seed)
     pre = rng.integers(0, cfg.vocab_size, shared_prefix).astype(np.int32)
@@ -338,14 +343,92 @@ def test_property_two_tier_engine_matches_dense(setup, seed, page_size,
             page_size=page_size, device_pages=need + spare_pages + low,
             hot_tail_pages=hot_tail, watermark=WatermarkPolicy(low=low),
             pager_factory=_slow_pager_factory(latency)),
-        chunking=ChunkingConfig(chunk_tokens=4, prefix_cache=True)))
+        chunking=ChunkingConfig(chunk_tokens=4, prefix_cache=True),
+        speculation=SpeculationConfig(speculate_k=speculate_k)))
     for prompt, new in requests:
         eng.submit(prompt, max_new_tokens=new)
     out = eng.run()
 
     assert out == ref
+    eng.check_invariants()
     assert eng.stats["resumes"] == eng.stats["preemptions"]
+    if speculate_k:
+        assert (eng.stats["accepted"] + eng.stats["rejected"]
+                == eng.stats["drafted"])
     # page accounting: only the prefix cache may retain frames
     cache_pages = len(eng.page_table.logical_pages(
         PREFIX_SEQ, PageState.RESIDENT))
     assert eng.page_pool.n_used == cache_pages
+
+
+# ---------------------------------------------------------------------------
+# speculation x far tier: faults and preemption against the verify-K path
+# ---------------------------------------------------------------------------
+
+def test_spec_fault_mid_run_recovers(setup):
+    """An AMU fault while slots carry speculated (drafted-but-not-yet-
+    verified) state: the faulted stretch stalls resumes/growth, drafts
+    shed or replay, and the stream still matches dense exactly."""
+    from tests.test_spec_decode import _proposer_factory
+
+    cfg, params, ref_cache = setup
+    requests = [((np.arange(10) + 5 * i) % cfg.vocab_size, 8)
+                for i in range(4)]
+    requests = [(p.astype(np.int32), n) for p, n in requests]
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+
+    fail = {"on": False}
+    need = max(pages_for(min(len(p) + n, 64), 4) for p, n in requests)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=4, device_pages=need + 1,
+                            pager_factory=_flaky_pager_factory(1e-4, fail)),
+        speculation=SpeculationConfig(
+            speculate_k=3,
+            proposer_factory=_proposer_factory("oracle", ref, requests,
+                                               cfg.vocab_size))))
+    for p, n in requests:
+        eng.submit(p, max_new_tokens=n)
+    eng.run(max_steps=3)
+    fail["on"] = True
+    try:
+        eng.run(max_steps=5)
+    except PagingError:
+        pass          # demand fetch surfaced the fault before any append
+    fail["on"] = False
+    out = eng.run()
+    assert out == ref
+    eng.check_invariants()
+    assert eng.stats["drafted"] > 0
+    assert eng.page_pool.n_free == eng.page_pool.n_pages
+
+
+def test_spec_preempt_mid_verify_sheds_drafts(setup):
+    """A pool too tight for every slot's full draft window: draft-aware
+    growth preempts victims or sheds draft positions mid-step, and the
+    rewind on rejection must still leave page accounting clean."""
+    from tests.test_spec_decode import _proposer_factory
+
+    cfg, params, ref_cache = setup
+    requests = [((np.arange(12) + 3 * i) % cfg.vocab_size, 10)
+                for i in range(4)]
+    requests = [(p.astype(np.int32), n) for p, n in requests]
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+
+    need = max(pages_for(min(len(p) + n, 64), 4) for p, n in requests)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=4, device_pages=need,
+                            pager_factory=_slow_pager_factory(1e-5)),
+        speculation=SpeculationConfig(
+            speculate_k=4,
+            proposer_factory=_proposer_factory("wrong", ref, requests,
+                                               cfg.vocab_size))))
+    for p, n in requests:
+        eng.submit(p, max_new_tokens=n)
+    out = eng.run()
+    assert out == ref
+    eng.check_invariants()
+    assert eng.stats["preemptions"] > 0
+    assert eng.stats["drafted"] > 0
+    assert eng.page_pool.n_free == eng.page_pool.n_pages

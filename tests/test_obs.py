@@ -318,6 +318,90 @@ def test_property_trace_reproduces_slo_report(setup, seed, device_pages):
         assert counts.get("requests/parked", 0) == eng.stats["preemptions"]
 
 
+# -- speculation accounting: trace-derived == the engine's own ----------------
+
+def _run_spec_traced(cfg, params, seed, kind):
+    from repro.serve.config import SpeculationConfig
+    from tests.test_spec_decode import _proposer_factory
+
+    rng = np.random.default_rng(seed)
+    requests = [(rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(4, 13))).astype(np.int32),
+                 int(rng.integers(4, 11))) for _ in range(4)]
+    dense = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(enabled=False)))
+    for p, n in requests:
+        dense.submit(p, max_new_tokens=n)
+    ref = dense.run()
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(device_pages=24, page_size=4),
+        speculation=SpeculationConfig(
+            speculate_k=3,
+            proposer_factory=_proposer_factory(kind, ref, requests,
+                                               cfg.vocab_size)),
+        obs=ObsConfig(trace=True)))
+    for p, n in requests:
+        eng.submit(p, max_new_tokens=n)
+    out = eng.run()
+    assert out == ref
+    return eng
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       kind=st.sampled_from(["oracle", "wrong", "first"]))
+def test_property_trace_reproduces_spec_accounting(setup, seed, kind):
+    """The speculation accounting recomputed from the exported trace
+    alone — cumulative ``spec_*`` counter tracks (which the exporter
+    dedups) plus per-step ``verify`` instants — must equal the engine's
+    own stats across accept-all, reject-all, and partial proposers."""
+    cfg, params = setup
+    eng = _run_spec_traced(cfg, params, seed, kind)
+    eng.check_invariants()
+    doc = json.loads(json.dumps(eng.export_trace()))
+    assert trace_report.validate(doc) == []
+    sp = trace_report.speculation_report(doc)
+    assert sp["consistent"]
+    assert sp["verify_steps"] == eng.stats["spec_steps"]
+    assert sp["drafted"] == eng.stats["drafted"]
+    assert sp["accepted"] == eng.stats["accepted"]
+    assert sp["rejected"] == eng.stats["rejected"]
+    if eng.stats["spec_steps"]:
+        assert sp["mean_accepted_k"] == pytest.approx(
+            eng.stats["accepted"] / eng.stats["spec_steps"])
+
+
+def test_validator_flags_broken_spec_tracks():
+    """Cumulative spec counters must be monotone and sum-consistent."""
+    meta = [{"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+             "args": {"name": "engine"}},
+            {"ph": "M", "pid": 1, "tid": 0, "name": "thread_name",
+             "args": {"name": "spec"}}]
+
+    def c(name, value, ts):
+        return {"ph": "C", "pid": 1, "tid": 0, "name": name, "ts": ts,
+                "args": {"value": value}}
+
+    backwards = {"traceEvents": meta + [c("spec_drafted", 5, 0.0),
+                                        c("spec_drafted", 3, 1.0)]}
+    assert any("went backwards" in p
+               for p in trace_report.validate(backwards))
+    inconsistent = {"traceEvents": meta + [c("spec_drafted", 5, 0.0),
+                                           c("spec_accepted", 2, 0.0),
+                                           c("spec_rejected", 2, 0.0)]}
+    assert any("accounting broken" in p
+               for p in trace_report.validate(inconsistent))
+
+
+def test_spec_report_empty_without_speculation(setup):
+    cfg, params = setup
+    eng = _run_traced(cfg, params, 1, 10)
+    doc = eng.export_trace()
+    assert trace_report.speculation_report(doc) == {}
+
+
 def test_engine_invariant_check_detects_imbalance(setup):
     cfg, params = setup
     eng = _run_traced(cfg, params, 0, 10)

@@ -1,0 +1,358 @@
+"""Property test: self-speculative decode is bit-exact with plain greedy.
+
+The acceptance criterion for the verify-K path: with speculation ON —
+any proposer, any K in 1..4, drafts straddling page boundaries, drafts
+rejected at position 0, random admission/preempt/resume/prefix-hit
+churn — every request's token stream must equal the dense single-step
+engine's byte for byte.  Greedy argmax decode is deterministic, so
+exact equality is the bar, not closeness.
+
+Three proposers cover the acceptance spectrum:
+
+* ``NgramProposer`` (the shipping one) — whatever the prompt-lookup
+  index happens to hit;
+* an oracle that drafts the reference continuation — forces the
+  accept-all / bonus-token path and page-boundary-straddling commits;
+* an adversary that drafts provably wrong tokens — forces the
+  reject-at-position-0 rollback path every single step.
+
+Uses the real ``hypothesis`` when installed, the deterministic conftest
+stand-in otherwise.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke
+from repro.models import init_params
+from repro.paging import PagingError, pages_for
+from repro.serve.config import (ChunkingConfig, EngineConfig, PagingConfig,
+                                SpeculationConfig)
+from repro.serve.engine import Engine
+from repro.serve.speculate import NgramProposer, ngram_key
+from tests.test_paged_decode import _slow_pager_factory
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke("phi4-mini-3.8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params, {}
+
+
+def _dense_reference(cfg, params, cache, requests):
+    key = tuple((tuple(int(t) for t in p), n) for p, n in requests)
+    if key not in cache:
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=3, max_len=64, prefill_buckets=(16,),
+            paging=PagingConfig(enabled=False)))
+        for prompt, new in requests:
+            eng.submit(prompt, max_new_tokens=new)
+        cache[key] = eng.run()
+    return cache[key]
+
+
+class _OracleProposer:
+    """Drafts the dense reference's continuation: every draft token
+    matches the verify argmax, driving the accept-all + bonus path."""
+
+    def __init__(self, refs, prompt_lens, k):
+        self.refs, self.prompt_lens, self.k = refs, prompt_lens, k
+
+    def propose(self, rid, history):
+        ngen = len(history) - self.prompt_lens[rid]
+        return list(self.refs[rid][ngen:ngen + self.k])
+
+    def drop(self, rid):
+        pass
+
+
+class _WrongProposer(_OracleProposer):
+    """Drafts reference-token + 1 (mod V): provably wrong at every
+    position, so each verify step rejects at position 0 and commits
+    only the bonus token — the maximal-rollback worst case."""
+
+    def __init__(self, refs, prompt_lens, k, vocab):
+        super().__init__(refs, prompt_lens, k)
+        self.vocab = vocab
+
+    def propose(self, rid, history):
+        return [(t + 1) % self.vocab
+                for t in super().propose(rid, history)]
+
+
+class _FirstRightProposer(_WrongProposer):
+    """First draft token right, the rest wrong: pins the partial-accept
+    arithmetic (accepted == 1 per step when K > 1)."""
+
+    def propose(self, rid, history):
+        right = _OracleProposer.propose(self, rid, history)
+        return right[:1] + [(t + 1) % self.vocab for t in right[1:]]
+
+
+def _proposer_factory(kind, refs, requests, vocab):
+    lens = {i: len(p) for i, (p, _) in enumerate(requests)}
+    return {
+        "ngram": None,                        # engine default
+        "oracle": lambda n, k: _OracleProposer(refs, lens, k),
+        "wrong": lambda n, k: _WrongProposer(refs, lens, k, vocab),
+        "first": lambda n, k: _FirstRightProposer(refs, lens, k, vocab),
+    }[kind]
+
+
+def _spec_engine(cfg, params, requests, *, k, factory=None, page_size=4,
+                 spare_pages=8, latency=None, chunking=False, ngram=3):
+    need = max(pages_for(min(len(p) + n, 64), page_size)
+               for p, n in requests)
+    pager = _slow_pager_factory(latency) if latency else None
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_len=64, prefill_buckets=(16,),
+        paging=PagingConfig(page_size=page_size,
+                            device_pages=need + spare_pages,
+                            pager_factory=pager),
+        chunking=ChunkingConfig(chunk_tokens=4) if chunking
+        else ChunkingConfig(),
+        speculation=SpeculationConfig(speculate_k=k, speculate_ngram=ngram,
+                                      proposer_factory=factory)))
+    for prompt, new in requests:
+        eng.submit(prompt, max_new_tokens=new)
+    return eng
+
+
+def _check(eng, out, ref):
+    assert out == ref
+    eng.check_invariants()
+    s = eng.stats
+    assert s["accepted"] + s["rejected"] == s["drafted"]
+    assert eng.page_pool.n_free == eng.page_pool.n_pages
+    return s
+
+
+# ---------------------------------------------------------------------------
+# kernel-level anchors
+# ---------------------------------------------------------------------------
+
+def test_multi_token_row_bitexact_with_one_token():
+    """Token-exactness rests on this: row ``s`` of the S-row verify
+    attention must be BITWISE equal to a sequential one-token step with
+    the same visible KV — same expression chain, one extra axis."""
+    import jax.numpy as jnp
+
+    from repro.models.attention import (multi_token_attention,
+                                        one_token_attention)
+
+    rng = np.random.default_rng(3)
+    B, S, Hkv, G, D, Skv = 2, 3, 2, 3, 16, 24
+    H = Hkv * G
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.bfloat16)
+    kc = jnp.asarray(rng.standard_normal((B, Skv, Hkv, D)), jnp.bfloat16)
+    vc = jnp.asarray(rng.standard_normal((B, Skv, Hkv, D)), jnp.bfloat16)
+    valid = jnp.asarray(rng.integers(1, Skv + 1, (B, S)), jnp.int32)
+    multi = np.asarray(multi_token_attention(q, kc, vc, valid, Hkv))
+    for s in range(S):
+        one = np.asarray(one_token_attention(
+            q[:, s], kc, vc, valid[:, s], Hkv))
+        np.testing.assert_array_equal(multi[:, s], one[:, 0])
+
+
+def test_paged_verify_attention_interpret_matches_xla():
+    """The multi-query Pallas gather kernel vs the XLA dense-view path
+    on mixed per-row lengths and permuted page tables."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(5)
+    B, S, Hkv, G, D, page, per_seq = 2, 4, 2, 4, 32, 16, 3
+    H = Hkv * G
+    N = B * per_seq + 2
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((N, page, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((N, page, Hkv, D)), jnp.float32)
+    pt = rng.permutation(N)[:B * per_seq].reshape(B, per_seq)
+    slots = per_seq * page
+    # each verify row sees one more token than the last; straddle pages
+    base = np.array([13, 30], np.int32)
+    lengths = np.minimum(base[:, None] + np.arange(S)[None, :] + 1, slots)
+    xla = ops.paged_verify_attention(
+        q, kp, vp, jnp.asarray(pt.astype(np.int32)),
+        jnp.asarray(lengths.astype(np.int32)), impl="xla")
+    pallas = ops.paged_verify_attention(
+        q, kp, vp, jnp.asarray(pt.astype(np.int32)),
+        jnp.asarray(lengths.astype(np.int32)), impl="interpret")
+    np.testing.assert_allclose(np.asarray(pallas), np.asarray(xla),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# proposer unit tests
+# ---------------------------------------------------------------------------
+
+def test_ngram_proposer_prompt_lookup():
+    p = NgramProposer(n=2, k=3)
+    # trailing (5, 6) last occurred at position 0 -> draft what followed
+    assert p.propose("r", [5, 6, 7, 8, 5, 6]) == [7, 8, 5]
+    # no earlier occurrence of the trailing n-gram -> no draft
+    assert p.propose("x", [1, 2, 3, 4]) == []
+
+
+def test_ngram_proposer_index_is_incremental_and_droppable():
+    p = NgramProposer(n=2, k=2)
+    hist = [1, 2, 3, 1, 2]
+    assert p.propose("r", hist) == [3, 1]
+    # growing the same history only indexes the new suffix; the most
+    # recent occurrence wins the lookup
+    hist = hist + [3, 1, 2]
+    assert p.propose("r", hist) == [3, 1]
+    p.drop("r")
+    assert "r" not in p._idx
+
+
+def test_ngram_key_is_order_sensitive():
+    assert ngram_key([1, 2, 3]) != ngram_key([3, 2, 1])
+    assert ngram_key([1, 2, 3]) == ngram_key(np.array([1, 2, 3], np.int32))
+
+
+def test_ngram_proposer_validates_params():
+    with pytest.raises(ValueError):
+        NgramProposer(n=0, k=2)
+    with pytest.raises(ValueError):
+        NgramProposer(n=2, k=0)
+
+
+# ---------------------------------------------------------------------------
+# deterministic accept / reject / boundary cases
+# ---------------------------------------------------------------------------
+
+def _requests(cfg, seed=7, n_req=4):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(1, cfg.vocab_size, size=6, dtype=np.int32)
+    out = []
+    for i in range(n_req):
+        tail = rng.integers(1, cfg.vocab_size, size=i + 1, dtype=np.int32)
+        out.append((np.concatenate([base, base, tail]).astype(np.int32),
+                    int(rng.integers(8, 13))))
+    return out
+
+
+def test_oracle_accepts_all_and_compresses_steps(setup):
+    """A perfect draft commits K+1 tokens per verify step — token-exact,
+    zero rejections, and far fewer engine steps than plain decode."""
+    cfg, params, ref_cache = setup
+    requests = _requests(cfg)
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+    eng = _spec_engine(cfg, params, requests, k=3,
+                       factory=_proposer_factory("oracle", ref, requests,
+                                                 cfg.vocab_size))
+    s = _check(eng, eng.run(), ref)
+    assert s["drafted"] > 0 and s["rejected"] == 0
+    total_new = sum(n for _, n in requests)
+    assert s["steps"] < total_new  # K+1 tokens/step actually compressed
+
+
+def test_reject_at_position_zero_rolls_back_every_step(setup):
+    """Provably-wrong drafts: every verify step rejects at position 0,
+    rolls the rejected tail back, and still emits the plain-path
+    token — the stream stays exact under maximal rollback churn."""
+    cfg, params, ref_cache = setup
+    requests = _requests(cfg)
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+    eng = _spec_engine(cfg, params, requests, k=3,
+                       factory=_proposer_factory("wrong", ref, requests,
+                                                 cfg.vocab_size))
+    s = _check(eng, eng.run(), ref)
+    assert s["drafted"] > 0 and s["accepted"] == 0
+    assert s["rejected"] == s["drafted"]
+
+
+def test_partial_accept_first_token_only(setup):
+    cfg, params, ref_cache = setup
+    requests = _requests(cfg)
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+    eng = _spec_engine(cfg, params, requests, k=3,
+                       factory=_proposer_factory("first", ref, requests,
+                                                 cfg.vocab_size))
+    s = _check(eng, eng.run(), ref)
+    assert s["drafted"] > 0
+    assert 0 < s["accepted"] < s["drafted"]
+
+
+def test_drafts_straddle_page_boundaries(setup):
+    """page_size=4 with K=4 drafts: the verify write window [pos, pos+5)
+    regularly spans two pages, and rejected tails land on freshly grown
+    pages that rollback must return to the pool."""
+    cfg, params, ref_cache = setup
+    requests = _requests(cfg, seed=11)
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+    for kind in ("oracle", "wrong"):
+        eng = _spec_engine(cfg, params, requests, k=4, page_size=4,
+                           factory=_proposer_factory(kind, ref, requests,
+                                                     cfg.vocab_size))
+        s = _check(eng, eng.run(), ref)
+        assert s["drafted"] > 0
+
+
+def test_ngram_default_proposer_stays_exact(setup):
+    """The shipping prompt-lookup proposer, no injection: acceptance is
+    whatever the index earns, exactness is unconditional."""
+    cfg, params, ref_cache = setup
+    requests = _requests(cfg)
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+    eng = _spec_engine(cfg, params, requests, k=3)
+    _check(eng, eng.run(), ref)
+
+
+def test_speculation_requires_paged_engine(setup):
+    cfg, params, _ = setup
+    with pytest.raises(PagingError):
+        Engine(cfg, params, EngineConfig(
+            max_batch=2, max_len=64, prefill_buckets=(16,),
+            paging=PagingConfig(enabled=False),
+            speculation=SpeculationConfig(speculate_k=2)))
+
+
+# ---------------------------------------------------------------------------
+# the property: churn + speculation stays token-exact
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _scenarios(draw):
+    return {
+        "seed": draw(st.integers(0, 2**16)),
+        "page_size": draw(st.sampled_from([4, 8])),
+        "spare_pages": draw(st.integers(0, 3)),
+        "k": draw(st.integers(1, 4)),
+        "kind": draw(st.sampled_from(["ngram", "oracle", "wrong", "first"])),
+        "latency": draw(st.floats(1e-5, 3e-3)),
+        "chunking": draw(st.booleans()),
+    }
+
+
+@settings(max_examples=6, deadline=None)
+@given(sc=_scenarios())
+def test_property_spec_decode_matches_plain(setup, sc):
+    """Random admission/preempt/resume churn (tight pool, slow pager)
+    with speculation ON across K in 1..4 and all proposer kinds: the
+    token streams must be byte-identical to the dense single-step
+    engine, the accounting identity must hold, and rollback must leave
+    the pool clean."""
+    cfg, params, ref_cache = setup
+    rng = np.random.default_rng(sc["seed"])
+    n_req = int(rng.integers(3, 6))
+    requests = [(rng.integers(0, cfg.vocab_size,
+                              int(rng.integers(2, 17))).astype(np.int32),
+                 int(rng.integers(2, 13)))
+                for _ in range(n_req)]
+    ref = _dense_reference(cfg, params, ref_cache, requests)
+    eng = _spec_engine(
+        cfg, params, requests, k=sc["k"], page_size=sc["page_size"],
+        spare_pages=sc["spare_pages"], latency=sc["latency"],
+        chunking=sc["chunking"],
+        factory=_proposer_factory(sc["kind"], ref, requests,
+                                  cfg.vocab_size))
+    s = _check(eng, eng.run(), ref)
+    if sc["kind"] in ("oracle", "wrong", "first"):
+        assert s["drafted"] > 0
+    assert eng.stats["resumes"] == eng.stats["preemptions"]

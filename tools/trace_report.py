@@ -24,7 +24,12 @@ What it derives, from the trace alone:
     (``frame_blocked_us``), queued for an AMU slot (``queued_us``), and
     actually in flight (span duration minus slot wait),
   * **window occupancy / lifecycle counts** — peak per-QoS occupancy
-    from the counter tracks, preempt/resume/shed instants.
+    from the counter tracks, preempt/resume/shed instants,
+  * **speculation accounting** — drafted/accepted/rejected totals from
+    the cumulative ``spec_*`` counter tracks (validated monotone and
+    self-consistent) and mean accepted-K from the per-step ``verify``
+    instants; must equal the engine's own stats (asserted in
+    ``tests/test_obs.py``).
 """
 
 from __future__ import annotations
@@ -118,6 +123,27 @@ def validate(doc: Any) -> List[str]:
             args = ev.get("args")
             if not isinstance(args, dict) or not args:
                 probs.append(f"{where}: counter without a value")
+    # speculation counter tracks are cumulative: samples must be
+    # non-decreasing, and the final accepted + rejected must equal the
+    # final drafted (the engine's own accounting identity)
+    spec_last: Dict[str, float] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or ev.get("ph") != "C":
+            continue
+        name = str(ev.get("name", ""))
+        if not name.startswith("spec_"):
+            continue
+        v = float(ev.get("args", {}).get("value", 0.0))
+        if v < spec_last.get(name, 0.0):
+            probs.append(f"event {i}: cumulative counter {name} went "
+                         f"backwards ({spec_last[name]:.0f} -> {v:.0f})")
+        spec_last[name] = v
+    if spec_last:
+        d, a, r = (spec_last.get(f"spec_{k}", 0.0)
+                   for k in ("drafted", "accepted", "rejected"))
+        if abs(a + r - d) > 0.5:
+            probs.append(f"speculation accounting broken: accepted {a:.0f}"
+                         f" + rejected {r:.0f} != drafted {d:.0f}")
     # complete spans on one thread must nest/abut, never overlap (the
     # exporter lane-packs the AMU tracks to guarantee this)
     for (pid, tid), sp in spans.items():
@@ -211,6 +237,41 @@ def occupancy_peaks(doc: dict) -> Dict[str, float]:
     return peaks
 
 
+def speculation_report(doc: dict) -> Dict[str, Any]:
+    """Acceptance accounting from the engine's speculation tracks.
+
+    The ``spec_*`` counter tracks are cumulative, and the exporter
+    drops samples equal to the previous one — so totals are read off
+    the LAST emitted sample per track (which always carries the final
+    value: any change is emitted).  The per-step ``verify`` instants
+    carry each step's deltas and give the mean accepted-K."""
+    events = doc["traceEvents"]
+    pids, _ = track_names(events)
+    last: Dict[str, float] = {}
+    steps: List[dict] = []
+    for ev in events:
+        if pids.get(ev.get("pid")) != "engine":
+            continue
+        if ev.get("ph") == "C" and str(ev.get("name", "")).startswith("spec_"):
+            last[ev["name"]] = float(ev.get("args", {}).get("value", 0.0))
+        elif ev.get("ph") == "i" and ev.get("name") == "verify":
+            steps.append(ev.get("args", {}))
+    if not steps and not last:
+        return {}
+    drafted = last.get("spec_drafted", 0.0)
+    accepted = last.get("spec_accepted", 0.0)
+    rejected = last.get("spec_rejected", 0.0)
+    return {
+        "verify_steps": len(steps),
+        "drafted": int(drafted),
+        "accepted": int(accepted),
+        "rejected": int(rejected),
+        "mean_accepted_k": (sum(float(a.get("accepted", 0)) for a in steps)
+                            / len(steps)) if steps else 0.0,
+        "consistent": abs(accepted + rejected - drafted) < 0.5,
+    }
+
+
 def lifecycle_counts(doc: dict) -> Dict[str, int]:
     """How many of each pager/engine/request instant the trace holds."""
     pids, _ = track_names(doc["traceEvents"])
@@ -227,6 +288,7 @@ def build_report(doc: dict) -> Dict[str, Any]:
         "slo": report_from_trace(doc),
         "amu_qos": amu_breakdown(doc),
         "counter_peaks": occupancy_peaks(doc),
+        "speculation": speculation_report(doc),
         "lifecycle": lifecycle_counts(doc),
         "open_spans_flushed": doc.get("otherData", {})
                                  .get("open_spans_flushed", 0),
@@ -283,6 +345,13 @@ def main(argv=None) -> int:
                   f"amu_queue={r['queued_us'] / n:.1f}us "
                   f"in_flight={r['in_flight_us'] / n:.1f}us "
                   f"faults={r['faults']}")
+    if rep["speculation"]:
+        sp = rep["speculation"]
+        print(f"speculation: steps={sp['verify_steps']} "
+              f"drafted={sp['drafted']} accepted={sp['accepted']} "
+              f"rejected={sp['rejected']} "
+              f"mean accepted-K={sp['mean_accepted_k']:.2f}"
+              + ("" if sp["consistent"] else "  [INCONSISTENT]"))
     if rep["counter_peaks"]:
         peaks = ", ".join(f"{k}={v:.0f}"
                           for k, v in sorted(rep["counter_peaks"].items()))
